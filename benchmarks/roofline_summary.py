@@ -1,0 +1,56 @@
+"""Roofline summary: aggregates the dry-run sweep JSONs into the
+EXPERIMENTS.md Sec. Roofline table (single-pod baseline per assignment)."""
+from __future__ import annotations
+
+import json
+import os
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+RESULTS = os.path.join(HERE, "dryrun_results")
+
+
+def load(mesh="16x16"):
+    rows = []
+    if not os.path.isdir(RESULTS):
+        return rows
+    for f in sorted(os.listdir(RESULTS)):
+        if not f.endswith(f"__{mesh}.json"):
+            continue
+        rec = json.load(open(os.path.join(RESULTS, f)))
+        rows.append(rec)
+    return rows
+
+
+def table(rows):
+    hdr = (f"{'arch':24s} {'shape':12s} {'compute':>9s} {'memory':>9s} "
+           f"{'collectv':>9s} {'bound':>10s} {'useful':>7s} {'roofl%':>7s} "
+           f"{'HBM/dev':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} "
+            f"{r['t_compute']*1e3:8.1f}m {r['t_memory']*1e3:8.1f}m "
+            f"{r['t_collective']*1e3:8.1f}m {r['bottleneck']:>10s} "
+            f"{r['useful_flops_ratio']:7.2f} "
+            f"{100*r['roofline_fraction']:6.1f}% "
+            f"{r['peak_memory_per_device']/2**30:7.1f}G")
+    return "\n".join(lines)
+
+
+def main(full=False):
+    rows = load()
+    if not rows:
+        print("roofline/none,0,run `python -m repro.launch.dryrun --all` first")
+        return []
+    print(table(rows))
+    out = []
+    for r in rows:
+        name = f"roofline/{r['arch']}__{r['shape']}"
+        print(f"{name},0,bound={r['bottleneck']};"
+              f"frac={r['roofline_fraction']:.4f}")
+        out.append(r)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Distributed RPCA on a real device mesh (SPMD engine).
+
+Run with several CPU devices to see the actual sharded execution:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/distributed_rpca.py
+
+Each mesh shard along "data" is one of the paper's clients; the consensus
+average of U is a single all-reduce per round; V_i and S_i never leave
+their shard (the privacy property).  A second run row-shards the matrix
+over a "model" axis as well (the beyond-paper 2-D extension).
+"""
+import jax
+
+from repro.core import DCFConfig, dcf_pca_sharded, generate_problem, relative_error
+
+
+def main():
+    n_dev = jax.device_count()
+    print(f"devices: {n_dev}")
+    problem = generate_problem(jax.random.PRNGKey(1), 256, 320, rank=8,
+                               sparsity=0.05)
+    cfg = DCFConfig.tuned(rank=8)
+
+    mesh = jax.make_mesh((n_dev,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    r = dcf_pca_sharded(problem.m_obs, cfg, mesh, data_axes=("data",))
+    err = relative_error(r.l, r.s, problem.l0, problem.s0)
+    print(f"1-D column-sharded ({n_dev} clients): err={float(err):.2e}")
+
+    if n_dev >= 4 and n_dev % 2 == 0:
+        mesh2 = jax.make_mesh((n_dev // 2, 2), ("data", "model"),
+                              axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        r2 = dcf_pca_sharded(problem.m_obs, cfg, mesh2,
+                             data_axes=("data",), model_axis="model")
+        err2 = relative_error(r2.l, r2.s, problem.l0, problem.s0)
+        print(f"2-D (rows x cols) sharded: err={float(err2):.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,158 @@
+"""Architecture + run configuration.
+
+One :class:`ModelConfig` describes any of the 10 assigned architectures
+(dense / MoE / MLA / enc-dec / VLM / SSM / hybrid LM families).  Shape sets
+(train_4k, prefill_32k, decode_32k, long_500k) are defined here as
+:class:`ShapeSpec` and resolved per-arch by ``input_specs`` in
+``repro.launch.dryrun``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax.numpy as jnp
+
+Family = Literal["dense", "moe", "encdec", "vlm", "ssm", "hybrid"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    num_shared: int = 0  # shared experts (DeepSeek/Qwen style)
+    d_ff_shared: int = 0  # total shared-expert hidden width
+    every_k_layers: int = 1  # MoE on layers where (layer % k == k-1)
+    first_dense: int = 0  # leading dense layers (DeepSeek-V2 style)
+    router_aux_weight: float = 0.001
+    capacity_factor: float = 1.25  # used by the dense-dispatch fallback
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 1536
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 256  # SSD block length
+
+
+@dataclasses.dataclass(frozen=True)
+class CrossAttnConfig:
+    """VLM (llama-3.2-vision style): cross-attn layers every k-th layer."""
+
+    every_k_layers: int = 5
+    n_context_tokens: int = 1601  # stub image-patch embeddings
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    """Whisper style: encoder depth + stub audio-frame context."""
+
+    n_encoder_layers: int = 12
+    n_context_tokens: int = 1500  # stub conv-frontend output frames
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Family
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 => d_model // n_heads
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-5
+    moe: MoEConfig | None = None
+    mla: MLAConfig | None = None
+    ssm: SSMConfig | None = None
+    cross: CrossAttnConfig | None = None
+    encdec: EncDecConfig | None = None
+    # hybrid (jamba): one attention layer per `attn_period` layers
+    attn_period: int = 0  # 0 => pure attention (or pure ssm if family==ssm)
+    tie_embeddings: bool = False
+    # numerics / memory policy
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    q_chunk: int = 512  # chunked-attention query block
+    ce_chunk: int = 512  # chunked cross-entropy sequence block
+    remat: str = "full"  # "full" | "dots" | "none"
+    # Expert parallelism: shard the expert dim over the "ep" (model) axis
+    # instead of FSDP-sharding the expert d_model dim.  Kills the
+    # contraction-over-dp all-reduces XLA otherwise chooses for big MoE
+    # (EXPERIMENTS.md Sec. Perf, deepseek-v2 hillclimb).  Requires
+    # num_experts % TP_SIZE == 0.
+    moe_ep: bool = False
+    # Backward-pass numerics: keep the residual-stream cotangent in bf16
+    # through the norms (halves the backward TP all-reduce bytes; see
+    # layers.rmsnorm).
+    bf16_norm_grad: bool = False
+    # Megatron-style sequence parallelism (lite): the residual stream is
+    # sharded over "tp" on the sequence dim between blocks; XLA converts
+    # the TP output all-reduce into reduce-scatter + all-gather at the
+    # constraint boundary and norms/residual ops run on 1/TP of tokens.
+    seq_parallel: bool = False
+    # Use the Pallas flash-attention kernel (kernels/flash_attention.py)
+    # for non-training attention (prefill/serving).  Default off: the
+    # dry-run measures the pure-XLA path; on real TPU this removes the
+    # (B,H,q_chunk,S) f32 score traffic from HBM entirely.
+    flash_attention: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One benchmark cell: an input-shape regime for an architecture."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def supports_shape(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """Assignment rules: long_500k only for sub-quadratic archs."""
+    if shape.name == "long_500k":
+        if cfg.family in ("ssm", "hybrid"):
+            return True, ""
+        return False, (
+            "pure full-attention arch: 500k dense decode skipped per "
+            "assignment (see DESIGN.md Sec. 5)"
+        )
+    return True, ""

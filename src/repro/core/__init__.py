@@ -1,0 +1,33 @@
+"""Core RPCA algorithms: the paper's DCF-PCA plus every baseline it
+compares against (CF-PCA, APGM, IALM)."""
+from repro.core.apgm import APGMConfig, apgm
+from repro.core.cf_pca import CFResult, cf_pca
+from repro.core.dcf_pca import DCFResult, dcf_pca, dcf_pca_sharded
+from repro.core.factorized import DCFConfig
+from repro.core.ialm import IALMConfig, ialm
+from repro.core.metrics import (
+    low_rank_relative_error,
+    rank_gap,
+    relative_error,
+    singular_value_error,
+)
+from repro.core.problems import RPCAProblem, generate_problem
+
+__all__ = [
+    "APGMConfig",
+    "apgm",
+    "CFResult",
+    "cf_pca",
+    "DCFConfig",
+    "DCFResult",
+    "dcf_pca",
+    "dcf_pca_sharded",
+    "IALMConfig",
+    "ialm",
+    "low_rank_relative_error",
+    "rank_gap",
+    "relative_error",
+    "singular_value_error",
+    "RPCAProblem",
+    "generate_problem",
+]

@@ -1,0 +1,200 @@
+"""DCF-PCA -- Algorithm 1: distributed RPCA via consensus factorization.
+
+Two execution engines with identical math:
+
+``dcf_pca``          Simulated clients on one device: the E column blocks
+                     live on a leading axis and the per-client local round
+                     is ``vmap``-ed; consensus (Eq. 9) is a mean over that
+                     axis.  This reproduces the paper's single-device
+                     simulation exactly and backs all paper experiments.
+
+``dcf_pca_sharded``  SPMD engine: ``M`` is column-sharded over the mesh's
+                     data axes (every shard is one "client") and optionally
+                     row-sharded over the model axis.  The consensus average
+                     is a single ``lax.pmean`` of the (m, r) factor per
+                     round -- the paper's 2 E m r communication bound, run
+                     as a bandwidth-optimal ICI all-reduce.  V_i and S_i
+                     never leave their shard (the privacy property).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import factorized as fz
+from repro.core import problems as prob
+
+Array = jax.Array
+
+
+class DCFResult(NamedTuple):
+    l: Array  # recovered low-rank matrix, client-blocked (E, m, n_i) or (m, n)
+    s: Array  # recovered sparse matrix, same layout
+    u: Array  # consensus left factor (m, r)
+    v: Array  # right factors (E, n_i, r) or (n, r)
+    history: Array  # (T,) global objective per round (0 if not tracked)
+
+
+# ---------------------------------------------------------------------------
+# Engine 1: simulated clients (paper Sec. 4.1 "Implementation")
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("cfg", "num_clients"))
+def dcf_pca(
+    m_obs: Array,
+    cfg: fz.DCFConfig,
+    num_clients: int,
+    key: Array | None = None,
+) -> DCFResult:
+    """Run DCF-PCA with ``num_clients`` simulated clients on one device."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    m, n = m_obs.shape
+    lam = cfg.lam if cfg.lam is not None else fz.robust_lam(m_obs)
+    blocks = prob.split_columns(m_obs, num_clients)  # (E, m, n_i)
+    n_i = blocks.shape[-1]
+    n_frac = n_i / n
+
+    k_u, k_v = jax.random.split(key)
+    state0 = fz.init_state(k_u, m, n_i, cfg.rank, m_obs.dtype)
+    u0 = state0.u
+    # Independent V_i inits per client (paper: "randomly initializes V_i").
+    v0 = jax.vmap(
+        lambda k: fz.init_state(k, 1, n_i, cfg.rank, m_obs.dtype).v
+    )(jax.random.split(k_v, num_clients))
+
+    def round_(carry, t):
+        u, v = carry
+        eta = cfg.lr(t)
+        lam_t = cfg.lam_at(lam, t)
+        local = partial(fz.local_round, cfg=cfg, lam=lam_t, n_frac=n_frac)
+        # Server broadcasts U; clients run K local iterations concurrently.
+        u_i, v = jax.vmap(lambda vb, mb: local(u, vb, mb, eta=eta))(v, blocks)
+        u = jnp.mean(u_i, axis=0)  # Eq. (9): FedAvg consensus
+        obj = (
+            jax.vmap(
+                lambda vb, mb: fz.local_objective(u, vb, mb, cfg.rho, lam_t, n_frac)
+            )(v, blocks).sum()
+            if cfg.track_objective
+            else jnp.zeros((), m_obs.dtype)
+        )
+        return (u, v), obj
+
+    (u, v), history = jax.lax.scan(
+        round_, (u0, v0), jnp.arange(cfg.outer_iters)
+    )
+    l_blocks, s_blocks = jax.vmap(
+        lambda vb, mb: fz.finalize(u, vb, mb, cfg.final_lam(lam), cfg.impl)
+    )(v, blocks)
+    return DCFResult(
+        l=prob.merge_columns(l_blocks),
+        s=prob.merge_columns(s_blocks),
+        u=u,
+        v=v,
+        history=history,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Engine 2: SPMD over a device mesh (production path)
+# ---------------------------------------------------------------------------
+def dcf_pca_sharded(
+    m_obs: Array,
+    cfg: fz.DCFConfig,
+    mesh: Mesh,
+    *,
+    data_axes: tuple[str, ...] = ("data",),
+    model_axis: str | None = None,
+    key: Array | None = None,
+) -> DCFResult:
+    """DCF-PCA where each shard along ``data_axes`` is one paper "client".
+
+    * ``M`` sharded: rows over ``model_axis`` (optional), cols over
+      ``data_axes`` -- P(model, data).
+    * ``U`` consensus: row-sharded over model, replicated over data;
+      one pmean over ``data_axes`` per round (Eq. 9).
+    * ``V``: column-block-sharded over data, replicated over model
+      (each model shard of a client needs full V_i rows).
+    * When ``model_axis`` is set, the r x r Gram and the (n_i, r) inner
+      contraction are psum-ed over it (DESIGN.md Sec. 8, item 3).
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    m, n = m_obs.shape
+    lam = cfg.lam if cfg.lam is not None else fz.robust_lam(m_obs)
+    num_clients = 1
+    for a in data_axes:
+        num_clients *= mesh.shape[a]
+    n_frac = 1.0 / num_clients
+
+    row_spec = model_axis  # None => replicated rows
+    m_sharding = NamedSharding(mesh, P(row_spec, data_axes))
+    u_sharding = NamedSharding(mesh, P(row_spec, None))
+    v_sharding = NamedSharding(mesh, P(data_axes, None))
+
+    reduce_m = (
+        (lambda x: jax.lax.psum(x, model_axis))
+        if model_axis is not None
+        else (lambda x: x)
+    )
+    all_axes = data_axes + ((model_axis,) if model_axis else ())
+
+    k_u, k_v = jax.random.split(key)
+    scale = 1.0 / float(jnp.sqrt(float(cfg.rank)))
+    # U init is identical across clients (the server broadcast); sharded
+    # over rows only.  V_i inits are per-client (folded client index).
+    u0 = jax.random.normal(k_u, (m, cfg.rank), m_obs.dtype) * scale
+
+    def solve(m_local_full, u):
+        """shard_map body: this shard's (m_loc, n_i) block + its U rows."""
+        m_loc, n_i = m_local_full.shape
+        idx = jax.lax.axis_index(data_axes)
+        kv_local = jax.random.fold_in(k_v, idx)
+        v = jax.random.normal(kv_local, (n_i, cfg.rank), m_local_full.dtype) * scale
+
+        def round_(carry, t):
+            u, v = carry
+            eta = cfg.lr(t)
+            lam_t = cfg.lam_at(lam, t)
+            u_i, v = fz.local_round(
+                u, v, m_local_full, cfg=cfg, lam=lam_t, n_frac=n_frac,
+                eta=eta, reduce_m=reduce_m,
+            )
+            u = jax.lax.pmean(u_i, data_axes)  # Eq. (9) consensus all-reduce
+            obj = (
+                jax.lax.psum(
+                    fz.local_objective(u, v, m_local_full, cfg.rho, lam_t, n_frac),
+                    all_axes,
+                )
+                if cfg.track_objective
+                else jnp.zeros((), m_local_full.dtype)
+            )
+            return (u, v), obj
+
+        (u, v), history = jax.lax.scan(
+            round_, (u, v), jnp.arange(cfg.outer_iters)
+        )
+        l_blk, s_blk = fz.finalize(u, v, m_local_full, cfg.final_lam(lam), cfg.impl)
+        return l_blk, s_blk, u, v, history
+
+    specs_out = (
+        P(row_spec, data_axes),  # L
+        P(row_spec, data_axes),  # S
+        P(row_spec, None),  # U
+        P(data_axes, None),  # V
+        P(None),  # history (replicated)
+    )
+    fn = jax.shard_map(
+        solve,
+        mesh=mesh,
+        in_specs=(P(row_spec, data_axes), P(row_spec, None)),
+        out_specs=specs_out,
+        check_vma=False,
+    )
+    m_placed = jax.device_put(m_obs, m_sharding)
+    u_placed = jax.device_put(u0, u_sharding)
+    l, s, u, v, history = jax.jit(fn)(m_placed, u_placed)
+    return DCFResult(l=l, s=s, u=u, v=v, history=history)

@@ -1,0 +1,299 @@
+"""Shared machinery for consensus-factorization RPCA (paper Sec. 2.2).
+
+Implements the *local* computation of Algorithm 1 -- everything a single
+client does between two consensus rounds -- as pure functions reused by:
+
+  * ``cf_pca``  (centralized, E=1),
+  * ``dcf_pca`` simulated-client engine (vmap over the client axis),
+  * ``dcf_pca`` sharded engine (shard_map over the device mesh),
+  * ``distributed.grad_compress`` (robust gradient aggregation).
+
+Two inner solvers for Eq. (7) are provided:
+
+``altmin``   Exact block-coordinate descent alternating the closed forms
+             Eq. (15) (ridge solve for V given S, an r x r linear system)
+             and Eq. (16) (soft-threshold for S given V).  Converges to the
+             unique optimum of the jointly-convex subproblem; in practice
+             2-4 sweeps suffice.  Never materializes S or the residual:
+             the ridge RHS is rewritten as
+                U^T (M - S) = (U^T U) V^T + U^T Psi
+             so each sweep costs one fused ``huber_contract_v`` pass plus an
+             r x r solve.
+
+``huber_gd`` The paper's analysis path: gradient descent on the eliminated
+             rho-strongly-convex Huber objective h(V) (Eq. 17), step size
+             1/(rho + sigma_max(U)^2) per Lemma 1.
+
+Both consume the fused kernels through ``repro.kernels.ops``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ops as core_ops
+from repro.kernels import ops as kops
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class DCFConfig:
+    """Hyperparameters of (D)CF-PCA.
+
+    Defaults follow Sec. 4: decaying learning rate ``eta0 / (1 + t)``,
+    ``K`` local iterations per consensus round.  ``lam``/``rho`` default to
+    the convex-calibrated scaling ``rho * lambda_cvx`` with
+    ``lambda_cvx = 1/sqrt(max(m, n))`` (see DESIGN.md Sec. 1); Theorem 2's
+    necessary condition ``rho^2 <= lam^2 m n`` then always holds.
+    """
+
+    rank: int
+    outer_iters: int = 50  # T, consensus rounds
+    local_iters: int = 2  # K, local U-steps per round
+    inner_sweeps: int = 3  # J, (V,S) solver sweeps per local U-step
+    rho: float = 1e-2
+    lam: float | None = None  # None => robust-scale heuristic (see robust_lam)
+    # Threshold continuation (beyond-paper, EXPERIMENTS.md "perf/quality"):
+    # lam_t = lam * max(lam_decay^t, lam_min_frac).  The paper's fixed-lam
+    # scheme leaves a +-lam bias on every corrupted entry's Huber gradient
+    # at stationarity (error floor ~ lam); annealing lam -- the exact analog
+    # of IALM's growing-mu threshold continuation -- removes the floor.
+    # Set lam_decay=1.0 for the paper-faithful fixed threshold.
+    lam_decay: float = 1.0
+    lam_min_frac: float = 1e-3
+    eta0: float = 0.05
+    lr_schedule: Literal["decay", "fixed", "theory"] = "decay"
+    inner: Literal["altmin", "huber_gd"] = "altmin"
+    # U-step conditioning.  "lipschitz" divides eta by the exact smoothness
+    # of the U-subproblem (sigma_max(V)^2 + rho n_i/n) so Thm. 1's eta < 1/L
+    # holds by construction; "newton" solves against the local Hessian
+    # (V^T V + rho n_i/n I) -- an ALS-flavored beyond-paper accelerator;
+    # "raw" is the literal Eq. (8) update.
+    precondition: Literal["lipschitz", "newton", "raw"] = "lipschitz"
+    impl: Literal["auto", "pallas", "ref"] = "auto"
+    track_objective: bool = False  # record eliminated objective per round
+
+    def resolved_lam(self, m: int, n: int) -> float:
+        if self.lam is not None:
+            return float(self.lam)
+        # Fallback when no data is available to calibrate: the corruption
+        # scale of the paper's generator.  Prefer `robust_lam(M)`.
+        return 0.1 * float(jnp.sqrt(float(m) * float(n)))
+
+    def lr(self, t: Array | int) -> Array:
+        """Learning rate at consensus round t."""
+        t = jnp.asarray(t, jnp.float32)
+        if self.lr_schedule == "decay":
+            return self.eta0 / (1.0 + t)  # paper Sec. 4.2
+        if self.lr_schedule == "theory":  # Thm. 1: eta = c / sqrt(K T)
+            return self.eta0 / jnp.sqrt(float(self.local_iters * self.outer_iters))
+        return jnp.asarray(self.eta0, jnp.float32)
+
+    def lam_at(self, lam0: Array | float, t: Array | int) -> Array:
+        """Annealed threshold at round t (fixed when lam_decay == 1)."""
+        if self.lam_decay >= 1.0:
+            return jnp.asarray(lam0, jnp.float32)
+        t = jnp.asarray(t, jnp.float32)
+        frac = jnp.maximum(self.lam_decay**t, self.lam_min_frac)
+        return jnp.asarray(lam0, jnp.float32) * frac
+
+    def final_lam(self, lam0: Array | float) -> Array:
+        return self.lam_at(lam0, self.outer_iters - 1)
+
+    @classmethod
+    def paper(cls, rank: int, **overrides) -> "DCFConfig":
+        """Paper-faithful preset: fixed lam, decaying eta0=0.05, K=2
+        (Sec. 4.2).  The 'lipschitz' conditioning only rescales eta to
+        satisfy Thm. 1's eta < 1/L; pass precondition='raw' for the literal
+        Eq. (8) update."""
+        kw = dict(rank=rank, outer_iters=50, local_iters=2, inner_sweeps=3,
+                  rho=1e-2, eta0=0.05, lr_schedule="decay", lam_decay=1.0,
+                  precondition="lipschitz")
+        kw.update(overrides)
+        return cls(**kw)
+
+    @classmethod
+    def tuned(cls, rank: int, **overrides) -> "DCFConfig":
+        """Beyond-paper preset (EXPERIMENTS.md 'quality hillclimb'):
+        annealed threshold (IALM-style continuation), fixed eta with
+        Lipschitz conditioning.  ~1e3x lower recovery error at the same
+        iteration budget."""
+        kw = dict(rank=rank, outer_iters=100, local_iters=2, inner_sweeps=3,
+                  rho=1e-2, eta0=0.5, lr_schedule="fixed", lam_decay=0.9,
+                  lam_min_frac=1e-3, precondition="lipschitz")
+        kw.update(overrides)
+        return cls(**kw)
+
+    @classmethod
+    def tuned_hard(cls, rank: int, **overrides) -> "DCFConfig":
+        """Slow-anneal preset for hard corners of the (rank, sparsity)
+        phase plane: a gentler threshold schedule tracks the slower decay
+        of the clean residual at high rank (recovers r = 0.1 n exactly
+        where the fast anneal plateaus; see benchmarks/fig2_phase.py)."""
+        kw = dict(rank=rank, outer_iters=300, local_iters=2, inner_sweeps=3,
+                  rho=1e-2, eta0=0.5, lr_schedule="fixed", lam_decay=0.97,
+                  lam_min_frac=1e-3, precondition="lipschitz")
+        kw.update(overrides)
+        return cls(**kw)
+
+
+def robust_lam(m_obs: Array, mult: float = 2.0) -> Array:
+    """Data-driven soft-threshold level: ``mult * 1.4826 * MAD(M)``.
+
+    The shrinkage threshold must sit between the clean-entry residual scale
+    (~entry std of L0) and the corruption magnitude; the median absolute
+    deviation is immune to the sparse gross errors, so a small multiple of
+    the robust std separates the two regimes.  Distributed setting: each
+    shard computes its local MAD and the consensus uses their mean
+    (medians commute with column partitioning only approximately; the
+    threshold tolerates that slack).
+    """
+    med = jnp.median(m_obs)
+    return mult * 1.4826 * jnp.median(jnp.abs(m_obs - med))
+
+
+@dataclass(frozen=True)
+class DCFState:
+    """Consensus state: ``u`` is global, ``v`` is per-client (leading E axis
+    in the simulated engine, mesh-sharded in the SPMD engine)."""
+
+    u: Array  # (m, r)
+    v: Array  # (n_i, r) local / (E, n_i, r) stacked / (n, r) global view
+    step: Array  # scalar int32
+
+
+def init_state(key: Array, m: int, n_local: int, rank: int,
+               dtype=jnp.float32) -> DCFState:
+    """Random init. U ~ N(0, 1/sqrt(r)) keeps ||U V^T|| at O(1) scale."""
+    ku, kv = jax.random.split(key)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(rank, dtype))
+    u = jax.random.normal(ku, (m, rank), dtype) * scale
+    v = jax.random.normal(kv, (n_local, rank), dtype) * scale
+    return DCFState(u=u, v=v, step=jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Inner solvers for Eq. (7):  argmin_{V,S} given U
+# ---------------------------------------------------------------------------
+def _identity(x: Array) -> Array:
+    return x
+
+
+def inner_solve_altmin(
+    u: Array, v: Array, m_blk: Array, rho: float, lam: Array | float,
+    sweeps: int, impl: str, reduce_m=_identity,
+) -> Array:
+    """Block-coordinate descent on the jointly-convex (V, S) subproblem.
+
+    Per sweep: ``V^T <- (G + rho I)^{-1} (G V^T + U^T Psi)`` with
+    ``G = U^T U`` -- the S elimination identity (DESIGN.md Sec. 2).
+
+    ``reduce_m`` sums partial contractions over the row (m) dimension when U
+    is row-sharded across the "model" mesh axis (psum of the r x r Gram and
+    the (n_i, r) contraction; identity in the unsharded case).
+    """
+    g = reduce_m(u.T @ u)  # (r, r)
+    g_reg = g + rho * jnp.eye(g.shape[0], dtype=g.dtype)
+
+    def sweep(v, _):
+        contr = reduce_m(kops.huber_contract_v(u, v, m_blk, lam, impl=impl))
+        rhs = g @ v.T + contr.T
+        v_new = jnp.linalg.solve(g_reg, rhs).T
+        return v_new, None
+
+    v, _ = jax.lax.scan(sweep, v, None, length=sweeps)
+    return v
+
+
+def inner_solve_huber_gd(
+    u: Array, v: Array, m_blk: Array, rho: float, lam: Array | float,
+    sweeps: int, impl: str, reduce_m=_identity,
+) -> Array:
+    """GD on ``h(V) = rho/2 ||V||^2 + H_lam(M - U V^T)`` (Lemma 1 step size)."""
+    g = reduce_m(u.T @ u)
+    sigma2 = core_ops.spectral_norm_ub_gram(g)
+    step = 1.0 / (rho + sigma2)
+
+    def sweep(v, _):
+        contr = reduce_m(kops.huber_contract_v(u, v, m_blk, lam, impl=impl))
+        grad = rho * v - contr
+        return v - step * grad, None
+
+    v, _ = jax.lax.scan(sweep, v, None, length=sweeps)
+    return v
+
+
+def local_round(
+    u_global: Array,
+    v: Array,
+    m_blk: Array,
+    *,
+    cfg: DCFConfig,
+    lam: Array | float,
+    n_frac: Array | float,
+    eta: Array,
+    reduce_m=_identity,
+) -> tuple[Array, Array]:
+    """One client's work in one consensus round: K local iterations of
+    {inner (V,S) solve; one gradient step on the local U copy} (Alg. 1).
+
+    ``n_frac = n_i / n`` weights the client's share of the rho/2 ||U||^2
+    regularizer (paper Eq. 11).  Returns (U_i, V_i) to be averaged /
+    kept local respectively.
+    """
+    inner = (
+        inner_solve_altmin if cfg.inner == "altmin" else inner_solve_huber_gd
+    )
+
+    def one_local_iter(carry, _):
+        u_i, v_i = carry
+        v_i = inner(u_i, v_i, m_blk, cfg.rho, lam, cfg.inner_sweeps,
+                    cfg.impl, reduce_m)
+        # grad_U L_i = (U V^T + S - M) V + (n_i/n) rho U = -Psi V + (n_i/n) rho U
+        # (rows of grad_U stay local under row sharding -- no collective).
+        psi_v = kops.huber_contract_u(u_i, v_i, m_blk, lam, impl=cfg.impl)
+        grad_u = -psi_v + n_frac * cfg.rho * u_i
+        if cfg.precondition == "raw":
+            upd = eta * grad_u
+        else:
+            # For fixed (V, S) the U-subproblem is quadratic with Hessian
+            # H = V^T V + rho (n_i/n) I  (r x r, local -- no collective).
+            gram_v = v_i.T @ v_i
+            if cfg.precondition == "newton":
+                h = gram_v + n_frac * cfg.rho * jnp.eye(
+                    gram_v.shape[0], dtype=gram_v.dtype
+                )
+                upd = eta * jnp.linalg.solve(h, grad_u.T).T
+            else:  # "lipschitz": eta / L with L = sigma_max(V)^2 + rho n_i/n
+                lip = core_ops.spectral_norm_ub_gram(gram_v) + n_frac * cfg.rho
+                upd = (eta / lip) * grad_u
+        return (u_i - upd, v_i), None
+
+    (u_i, v_i), _ = jax.lax.scan(
+        one_local_iter, (u_global, v), None, length=cfg.local_iters
+    )
+    return u_i, v_i
+
+
+def finalize(u: Array, v: Array, m_blk: Array, lam: Array | float,
+             impl: str) -> tuple[Array, Array]:
+    """Recovered ``(L_i, S_i)`` for output (Alg. 1 return)."""
+    l_blk = u @ v.T
+    s_blk = kops.residual_shrink(u, v, m_blk, lam, impl=impl)
+    return l_blk, s_blk
+
+
+def local_objective(u: Array, v: Array, m_blk: Array, rho: float,
+                    lam: Array | float, n_frac: Array | float) -> Array:
+    """g_i(U) surrogate at the current (V): eliminated objective Eq. (17)
+    plus this client's share of the U regularizer."""
+    resid = m_blk - u @ v.T
+    return (
+        core_ops.huber_loss(resid, lam)
+        + 0.5 * rho * (jnp.sum(v * v) + n_frac * jnp.sum(u * u))
+    )

@@ -1,0 +1,38 @@
+"""Evaluation metrics -- paper Section 4.1 (Eq. 30) and Table 1."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def relative_error(l: Array, s: Array, l0: Array, s0: Array) -> Array:
+    """Paper Eq. (30): ``(||L-L0||_F^2 + ||S-S0||_F^2) / (||L0||_F^2 + ||S0||_F^2)``."""
+    num = jnp.sum((l - l0) ** 2) + jnp.sum((s - s0) ** 2)
+    den = jnp.sum(l0**2) + jnp.sum(s0**2)
+    return num / den
+
+
+def low_rank_relative_error(l: Array, l0: Array) -> Array:
+    """``||L - L0||_F / ||L0||_F`` -- the standard RPCA recovery metric."""
+    return jnp.linalg.norm(l - l0) / jnp.linalg.norm(l0)
+
+
+def singular_value_error(l: Array, l0: Array, rank: int) -> Array:
+    """Table 1 metric: ``max_i |sigma_i(L) - sigma_i(L0)| / sigma_r(L0)``.
+
+    Compares the spectra of the recovered and ground-truth matrices; small
+    values mean the upper-bound-rank run recovered both the column space and
+    the spectrum (Fig. 3).
+    """
+    sv = jnp.linalg.svd(l, compute_uv=False)
+    sv0 = jnp.linalg.svd(l0, compute_uv=False)
+    k = min(sv.shape[-1], sv0.shape[-1])
+    return jnp.max(jnp.abs(sv[..., :k] - sv0[..., :k])) / sv0[..., rank - 1]
+
+
+def rank_gap(l: Array, rank: int) -> Array:
+    """``sigma_{r+1}(L) / sigma_r(L)`` -- recovered-rank sharpness (Fig. 3)."""
+    sv = jnp.linalg.svd(l, compute_uv=False)
+    return sv[..., rank] / sv[..., rank - 1]

@@ -1,0 +1,73 @@
+"""Synthetic RPCA problem generation -- paper Section 4.1.
+
+``L0 = U0 V0^T`` with standard-Gaussian factors, plus a sparse corruption
+``S0`` with ``s*m*n`` nonzero entries drawn from ``{-sqrt(mn), +sqrt(mn)}``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class RPCAProblem:
+    """A generated RPCA instance and its ground truth."""
+
+    m_obs: Array  # observed matrix M = L0 + S0, (m, n)
+    l0: Array  # ground-truth low-rank component, (m, n)
+    s0: Array  # ground-truth sparse component, (m, n)
+    rank: int  # true rank r
+    sparsity: float  # fraction of corrupted entries s
+
+
+def generate_problem(
+    key: Array,
+    m: int,
+    n: int,
+    rank: int,
+    sparsity: float,
+    dtype: jnp.dtype = jnp.float32,
+) -> RPCAProblem:
+    """Generate a synthetic problem per paper Sec. 4.1.
+
+    * ``L0 = U0 V0^T``, entries of U0, V0 ~ N(0, 1).
+    * ``S0`` has ``round(s*m*n)`` nonzeros placed uniformly at random, each
+      ``+-sqrt(m n)`` with equal probability (gross corruptions, much larger
+      than the O(sqrt(r)) scale of L0's entries).
+    """
+    k_u, k_v, k_mask, k_sign = jax.random.split(key, 4)
+    u0 = jax.random.normal(k_u, (m, rank), dtype)
+    v0 = jax.random.normal(k_v, (n, rank), dtype)
+    l0 = u0 @ v0.T
+
+    nnz = int(round(sparsity * m * n))
+    # Uniformly choose nnz corrupted positions without replacement.
+    flat_idx = jax.random.choice(k_mask, m * n, shape=(nnz,), replace=False)
+    signs = jax.random.rademacher(k_sign, (nnz,), dtype=dtype)
+    mag = jnp.asarray(jnp.sqrt(float(m) * float(n)), dtype)
+    s0 = jnp.zeros((m * n,), dtype).at[flat_idx].set(signs * mag).reshape(m, n)
+
+    return RPCAProblem(m_obs=l0 + s0, l0=l0, s0=s0, rank=rank, sparsity=sparsity)
+
+
+def split_columns(mat: Array, num_clients: int) -> Array:
+    """Split ``(m, n)`` into equal column blocks, stacked as ``(E, m, n/E)``.
+
+    The paper's distributed data model (Eq. 6): client i holds ``M_i``.
+    Requires ``n % num_clients == 0`` (pad upstream otherwise).
+    """
+    m, n = mat.shape
+    if n % num_clients:
+        raise ValueError(f"n={n} not divisible by E={num_clients}")
+    ni = n // num_clients
+    return jnp.moveaxis(mat.reshape(m, num_clients, ni), 1, 0)
+
+
+def merge_columns(blocks: Array) -> Array:
+    """Inverse of :func:`split_columns`: ``(E, m, ni) -> (m, E*ni)``."""
+    e, m, ni = blocks.shape
+    return jnp.moveaxis(blocks, 0, 1).reshape(m, e * ni)

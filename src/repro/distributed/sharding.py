@@ -1,0 +1,74 @@
+"""Logical-axis sharding rules.
+
+Model code annotates params/activations with *logical* axes; a
+:class:`ShardingRules` instance binds them to physical mesh axes:
+
+    logical axis   meaning                         production binding
+    ------------   -----------------------------   -------------------
+    "dp"           batch (pure data parallel)      ("pod", "data")
+    "fsdp"         weight dim sharded ZeRO-3       ("pod", "data")
+    "tp"           tensor-parallel weight dim      "model"
+    "sp"           sequence dim (long-ctx KV)      "model"
+    "ep"           expert dim                      "model"
+
+The same model definition thus runs on a single device (all None), one pod
+(16 x 16) or the 2 x 16 x 16 multi-pod mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    dp: Any = None
+    fsdp: Any = None
+    tp: Any = None
+    sp: Any = None
+    ep: Any = None
+
+    def resolve(self, logical: str | None):
+        if logical is None:
+            return None
+        try:
+            return getattr(self, logical)
+        except AttributeError:
+            raise ValueError(f"unknown logical axis {logical!r}") from None
+
+    def pspec(self, *axes: str | None) -> P:
+        return P(*(self.resolve(a) for a in axes))
+
+
+# Standard bindings ----------------------------------------------------------
+SINGLE_DEVICE = ShardingRules()
+
+SINGLE_POD = ShardingRules(
+    dp=("data",), fsdp=("data",), tp="model", sp="model", ep="model"
+)
+
+MULTI_POD = ShardingRules(
+    dp=("pod", "data"), fsdp=("pod", "data"), tp="model", sp="model",
+    ep="model",
+)
+
+
+def rules_for_mesh(mesh: Mesh) -> ShardingRules:
+    names = mesh.axis_names
+    if "pod" in names:
+        return MULTI_POD
+    if "data" in names:
+        return SINGLE_POD
+    return SINGLE_DEVICE
+
+
+def constrain(x: Array, rules: ShardingRules, *axes: str | None) -> Array:
+    """with_sharding_constraint under logical names; no-op off-mesh."""
+    if all(rules.resolve(a) is None for a in axes):
+        return x
+    return jax.lax.with_sharding_constraint(x, rules.pspec(*axes))

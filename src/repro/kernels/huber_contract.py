@@ -1,0 +1,167 @@
+"""Fused Huber-residual contraction kernels (the DCF-PCA compute hot spot).
+
+The inner solver needs, per sweep over a client block ``M_i`` (m x n):
+
+    Psi   = clip(M - U V^T, [-lam, lam])      -- (m, n), never needed in HBM
+    out_v = Psi^T U                           -- (n, r)
+    out_u = Psi V                             -- (m, r)
+
+A naive jnp implementation materializes R, S/Psi in HBM (>= 3 full m x n
+transfers on top of the matmul reads).  On TPU both contractions are
+flash-attention-shaped: two MXU matmuls with an elementwise clamp in
+between, so we tile over (m, n), compute the Psi tile in VMEM, contract it
+immediately, and accumulate the skinny output in place across the reduction
+grid axis.  HBM traffic drops to one read of M (+ the skinny U/V/out).
+
+Blocking: the full factor width ``r`` (padded to a lane multiple) is kept
+resident; tiles default to 256 x 256 so the working set is
+``bm*bn + (bm+bn)*r_pad + bn*r_pad`` floats ~= 1.3 MB at r=128, far under
+the ~16 MB VMEM budget (see DESIGN.md Sec. 2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+# MXU/VREG-aligned defaults.  The second-minor dim of every block is a
+# multiple of 8 and the minor dim a multiple of 128 (f32 tiling).
+DEFAULT_BM = 256
+DEFAULT_BN = 256
+LANE = 128
+
+
+def _pad_to(x: Array, axis: int, mult: int) -> Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# ---------------------------------------------------------------------------
+# out_v = Psi^T U  : grid (n/bn, m/bm), m is the reduction (last, "arbitrary")
+# ---------------------------------------------------------------------------
+def _contract_v_kernel(u_ref, v_ref, m_ref, lam_ref, out_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    u = u_ref[...]  # (bm, r)
+    v = v_ref[...]  # (bn, r)
+    mt = m_ref[...]  # (bm, bn)
+    lam = lam_ref[0]
+    low = jnp.dot(u, v.T, preferred_element_type=jnp.float32)
+    psi = jnp.clip(mt.astype(jnp.float32) - low, -lam, lam)
+    out_ref[...] += jnp.dot(psi.T, u.astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# out_u = Psi V  : grid (m/bm, n/bn), n is the reduction (last, "arbitrary")
+# ---------------------------------------------------------------------------
+def _contract_u_kernel(u_ref, v_ref, m_ref, lam_ref, out_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    u = u_ref[...]  # (bm, r)
+    v = v_ref[...]  # (bn, r)
+    mt = m_ref[...]  # (bm, bn)
+    lam = lam_ref[0]
+    low = jnp.dot(u, v.T, preferred_element_type=jnp.float32)
+    psi = jnp.clip(mt.astype(jnp.float32) - low, -lam, lam)
+    out_ref[...] += jnp.dot(psi, v.astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+
+
+def _should_interpret(interpret: bool | None) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "interpret")
+)
+def huber_contract_v(
+    u: Array,
+    v: Array,
+    m: Array,
+    lam: float | Array,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    interpret: bool | None = None,
+) -> Array:
+    """Psi^T U, Psi = clip(M - U V^T, +-lam).  Returns (n, r) in f32."""
+    mm, r = u.shape
+    n = v.shape[0]
+    # Zero-padding is exact: padded rows/cols of U/V/M produce Psi == 0.
+    u_p = _pad_to(_pad_to(u, 0, bm), 1, LANE)
+    v_p = _pad_to(_pad_to(v, 0, bn), 1, LANE)
+    m_p = _pad_to(_pad_to(m, 0, bm), 1, bn)
+    r_pad = u_p.shape[1]
+    lam_arr = jnp.asarray([lam], jnp.float32)
+
+    grid = (m_p.shape[1] // bn, m_p.shape[0] // bm)  # (n-blocks, m-blocks)
+    out = pl.pallas_call(
+        _contract_v_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, r_pad), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, r_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, bn), lambda i, j: (j, i)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((bn, r_pad), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((v_p.shape[0], r_pad), jnp.float32),
+        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel", "arbitrary")),
+        interpret=_should_interpret(interpret),
+    )(u_p, v_p, m_p, lam_arr)
+    return out[:n, :r]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "interpret")
+)
+def huber_contract_u(
+    u: Array,
+    v: Array,
+    m: Array,
+    lam: float | Array,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    interpret: bool | None = None,
+) -> Array:
+    """Psi V, Psi = clip(M - U V^T, +-lam).  Returns (m, r) in f32."""
+    mm, r = u.shape
+    u_p = _pad_to(_pad_to(u, 0, bm), 1, LANE)
+    v_p = _pad_to(_pad_to(v, 0, bn), 1, LANE)
+    m_p = _pad_to(_pad_to(m, 0, bm), 1, bn)
+    r_pad = u_p.shape[1]
+    lam_arr = jnp.asarray([lam], jnp.float32)
+
+    grid = (m_p.shape[0] // bm, m_p.shape[1] // bn)  # (m-blocks, n-blocks)
+    out = pl.pallas_call(
+        _contract_u_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, r_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, r_pad), lambda i, j: (j, 0)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((bm, r_pad), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((u_p.shape[0], r_pad), jnp.float32),
+        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel", "arbitrary")),
+        interpret=_should_interpret(interpret),
+    )(u_p, v_p, m_p, lam_arr)
+    return out[:mm, :r]

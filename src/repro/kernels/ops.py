@@ -1,0 +1,57 @@
+"""Dispatch layer: every consumer calls these; ``impl`` picks the backend.
+
+``impl='pallas'``  -- the fused TPU kernels (interpret mode off-TPU).
+``impl='ref'``     -- the pure-jnp oracles (used inside the 512-device
+                      dry-run and anywhere XLA fusion is already adequate).
+``impl='auto'``    -- pallas on TPU, ref elsewhere (CPU interpret mode is a
+                      correctness tool, not a fast path).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import huber_contract as _hc
+from repro.kernels import ref as _ref
+from repro.kernels import shrinkage as _sh
+
+Array = jax.Array
+
+_IMPLS = ("auto", "pallas", "ref")
+
+
+def _resolve(impl: str) -> str:
+    if impl not in _IMPLS:
+        raise ValueError(f"impl must be one of {_IMPLS}, got {impl!r}")
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return impl
+
+
+def huber_contract_v(u, v, m, lam, *, impl: str = "auto") -> Array:
+    """(n, r) = Psi^T U,  Psi = clip(M - U V^T, +-lam)."""
+    if _resolve(impl) == "pallas":
+        return _hc.huber_contract_v(u, v, m, lam)
+    return _ref.huber_contract_v(u, v, m, lam)
+
+
+def huber_contract_u(u, v, m, lam, *, impl: str = "auto") -> Array:
+    """(m, r) = Psi V,  Psi = clip(M - U V^T, +-lam)."""
+    if _resolve(impl) == "pallas":
+        return _hc.huber_contract_u(u, v, m, lam)
+    return _ref.huber_contract_u(u, v, m, lam)
+
+
+def residual_shrink(u, v, m, lam, *, impl: str = "auto") -> Array:
+    """(m, n) = soft_threshold(M - U V^T, lam)."""
+    if _resolve(impl) == "pallas":
+        return _sh.residual_shrink(u, v, m, lam)
+    return _ref.residual_shrink(u, v, m, lam)
+
+
+def residual_shrink_psi(u, v, m, lam, *, impl: str = "auto"):
+    """((m,n) S, (m,n) Psi) in one pass."""
+    if _resolve(impl) == "pallas":
+        return _sh.residual_shrink_psi(u, v, m, lam)
+    s = _ref.residual_shrink(u, v, m, lam)
+    psi = _ref.residual_clip(u, v, m, lam)
+    return s, psi

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These define the exact semantics the kernels must reproduce (tests sweep
+shapes/dtypes and assert_allclose against these).  They are also the
+implementation used under ``impl='ref'`` -- e.g. inside the 512-device
+dry-run where Pallas interpret mode would be needlessly slow.
+
+Notation (paper Sec. 2.2):
+    R   = M - U V^T                    (residual)
+    S   = soft_threshold(R, lam)       (Eq. 16 -- sparse component)
+    Psi = clip(R, -lam, lam) = R - S   (H'_lam(R), the Huber derivative)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _residual(u: Array, v: Array, m: Array) -> Array:
+    return m - (u @ v.T).astype(m.dtype)
+
+
+def residual_shrink(u: Array, v: Array, m: Array, lam: float) -> Array:
+    """S = soft_threshold(M - U V^T, lam).  Materializes (m, n) output only."""
+    r = _residual(u, v, m)
+    return jnp.sign(r) * jnp.maximum(jnp.abs(r) - lam, 0.0)
+
+
+def residual_clip(u: Array, v: Array, m: Array, lam: float) -> Array:
+    """Psi = clip(M - U V^T, [-lam, lam])."""
+    return jnp.clip(_residual(u, v, m), -lam, lam)
+
+
+def huber_contract_v(u: Array, v: Array, m: Array, lam: float) -> Array:
+    """Psi^T U with Psi = clip(M - U V^T): the (n, r) inner-solve contraction.
+
+    Appears in both inner solvers:
+      * altmin ridge RHS:  U^T(M - S) = (U^T U) V^T + U^T Psi
+      * Huber GD:          grad_V h = rho V - Psi^T U
+    """
+    psi = residual_clip(u, v, m, lam)
+    return (psi.T @ u).astype(u.dtype)
+
+
+def huber_contract_u(u: Array, v: Array, m: Array, lam: float) -> Array:
+    """Psi V with Psi = clip(M - U V^T): the (m, r) outer-step contraction.
+
+    grad_U L_i = -(Psi V) + (n_i/n) rho U   (paper Eq. 55/59).
+    """
+    psi = residual_clip(u, v, m, lam)
+    return (psi @ v).astype(u.dtype)
+
+
+def huber_contract_uv(
+    u: Array, v: Array, m: Array, lam: float
+) -> tuple[Array, Array]:
+    """Both contractions from one Psi (single residual materialization)."""
+    psi = residual_clip(u, v, m, lam)
+    return (psi.T @ u).astype(u.dtype), (psi @ v).astype(u.dtype)

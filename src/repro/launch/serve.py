@@ -1,0 +1,52 @@
+"""Serving launcher: batched generation driver.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+        --smoke --batch 4 --prompt-len 32 --new-tokens 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.distributed.sharding import ShardingRules, rules_for_mesh
+from repro.launch.mesh import make_host_mesh
+from repro.models import get_model
+from repro.models import params as pm
+from repro.serving.engine import ServeConfig, generate
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="tinyllama-1.1b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = get_model(cfg)
+    mesh = make_host_mesh()
+    rules = rules_for_mesh(mesh) if mesh.size > 1 else ShardingRules()
+    params = pm.materialize(model.specs(), jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(1),
+                                (args.batch, args.prompt_len), 0, cfg.vocab)
+    t0 = time.time()
+    with mesh:
+        out = generate(model, params, prompt, rules,
+                       ServeConfig(max_new_tokens=args.new_tokens,
+                                   temperature=args.temperature))
+    dt = time.time() - t0
+    tps = args.batch * args.new_tokens / dt
+    print(f"generated {out.shape} in {dt:.1f}s ({tps:.1f} tok/s, "
+          f"incl. compile)")
+    print("first row:", out[0].tolist())
+    return {"tokens_per_s": tps}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Model facade: one interface over all architecture families.
+
+    model = get_model(cfg)
+    model.specs()                      -> ParamSpec pytree
+    model.loss(params, batch, rules)   -> (loss, metrics)
+    model.prefill(params, batch, rules)-> (logits, caches)
+    model.decode_step(params, tokens, caches, pos, rules) -> (logits, caches)
+    model.cache_specs(batch, s_max)    -> ParamSpec pytree for the KV/SSM cache
+    model.batch_specs(shape)           -> input ParamSpec dict builder
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import encdec, hybrid, lm, vision
+from repro.models.params import ParamSpec
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    _specs: Callable
+    _loss: Callable
+    _prefill: Callable
+    _decode: Callable
+    _cache_specs: Callable
+
+    def specs(self):
+        return self._specs(self.cfg)
+
+    def loss(self, params, batch, rules):
+        return self._loss(params, batch, self.cfg, rules)
+
+    def prefill(self, params, batch, rules):
+        return self._prefill(params, batch, self.cfg, rules)
+
+    def decode_step(self, params, tokens, caches, pos, rules):
+        return self._decode(params, tokens, caches, pos, self.cfg, rules)
+
+    def cache_specs(self, batch: int, s_max: int):
+        return self._cache_specs(self.cfg, batch, s_max)
+
+    # -- input specs --------------------------------------------------------
+    def batch_specs(self, shape: ShapeSpec) -> dict[str, ParamSpec]:
+        """ParamSpec stand-ins for every model input of a shape cell.
+
+        Modality frontends are stubs: encdec/vlm get precomputed context
+        embeddings via "ctx" (the assignment's ``input_specs()`` contract).
+        """
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        if shape.kind == "decode":
+            toks = ParamSpec((b, 1), ("dp", None), dtype=jnp.int32,
+                             init="zeros")
+        else:
+            toks = ParamSpec((b, s), ("dp", None), dtype=jnp.int32,
+                             init="zeros")
+        out: dict[str, Any] = {"tokens": toks}
+        if shape.kind == "train":
+            out["labels"] = ParamSpec((b, s), ("dp", None), dtype=jnp.int32,
+                                      init="zeros")
+        if cfg.family in ("encdec", "vlm") and shape.kind != "decode":
+            t = (cfg.encdec.n_context_tokens if cfg.family == "encdec"
+                 else cfg.cross.n_context_tokens)
+            out["ctx"] = ParamSpec((b, t, cfg.d_model), ("dp", None, None),
+                                   dtype=cfg.cdtype, init="normal", scale=1.0)
+        return out
+
+
+_FAMILY = {
+    "dense": (lm.lm_specs, lm.lm_loss, lm.lm_prefill, lm.lm_decode_step,
+              lm.lm_cache_specs),
+    "moe": (lm.lm_specs, lm.lm_loss, lm.lm_prefill, lm.lm_decode_step,
+            lm.lm_cache_specs),
+    "ssm": (lm.lm_specs, lm.lm_loss, lm.lm_prefill, lm.lm_decode_step,
+            lm.lm_cache_specs),
+    "vlm": (vision.vlm_specs, vision.vlm_loss, vision.vlm_prefill,
+            vision.vlm_decode_step, vision.vlm_cache_specs),
+    "encdec": (encdec.encdec_specs, encdec.encdec_loss, encdec.encdec_prefill,
+               encdec.encdec_decode_step, encdec.encdec_cache_specs),
+    "hybrid": (hybrid.hybrid_specs, hybrid.hybrid_loss, hybrid.hybrid_prefill,
+               hybrid.hybrid_decode_step, hybrid.hybrid_cache_specs),
+}
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    fns = _FAMILY[cfg.family]
+    return Model(cfg, *fns)

@@ -1,0 +1,357 @@
+"""Attention: GQA (train/prefill/decode), cross-attention, and MLA.
+
+Memory policy: scores are never materialized at (B, H, S, S).  Training and
+prefill use *chunked-query* attention (scan over query blocks of
+``cfg.q_chunk``); decode masks over the cache with the sequence dim sharded
+across the "sp" (=model) mesh axis, so XLA reduces the softmax and the
+probs-V contraction with small (B, H)-sized collectives (flash-decoding
+layout, DESIGN.md Sec. 6).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ShardingRules, constrain
+from repro.models.layers import apply_rope, axis_if, rmsnorm, rmsnorm_spec, tp_ok
+from repro.models.params import ParamSpec
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+def attn_specs(cfg: ModelConfig) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q_tp = axis_if(tp_ok(h * hd), "tp")
+    kv_tp = axis_if(tp_ok(kv * hd), "tp")
+    return {
+        "wq": ParamSpec((d, h * hd), ("fsdp", q_tp), dtype=cfg.pdtype),
+        "wk": ParamSpec((d, kv * hd), ("fsdp", kv_tp), dtype=cfg.pdtype),
+        "wv": ParamSpec((d, kv * hd), ("fsdp", kv_tp), dtype=cfg.pdtype),
+        "wo": ParamSpec((h * hd, d), (q_tp, "fsdp"), dtype=cfg.pdtype),
+    }
+
+
+def mla_specs(cfg: ModelConfig) -> dict:
+    mla = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qd = mla.qk_nope_dim + mla.qk_rope_dim
+    return {
+        "wq_a": ParamSpec((d, mla.q_lora_rank), ("fsdp", None), dtype=cfg.pdtype),
+        "q_norm": rmsnorm_spec(mla.q_lora_rank),
+        "wq_b": ParamSpec(
+            (mla.q_lora_rank, h * qd), (None, "tp"), dtype=cfg.pdtype
+        ),
+        "wkv_a": ParamSpec(
+            (d, mla.kv_lora_rank + mla.qk_rope_dim), ("fsdp", None),
+            dtype=cfg.pdtype,
+        ),
+        "kv_norm": rmsnorm_spec(mla.kv_lora_rank),
+        "wkv_b": ParamSpec(
+            (mla.kv_lora_rank, h * (mla.qk_nope_dim + mla.v_head_dim)),
+            (None, "tp"), dtype=cfg.pdtype,
+        ),
+        "wo": ParamSpec(
+            (h * mla.v_head_dim, d), ("tp", "fsdp"), dtype=cfg.pdtype
+        ),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Core chunked SDPA (full-head layout)
+# ---------------------------------------------------------------------------
+def _sdpa_chunked(
+    q: Array,  # (B, S_q, H, hd)
+    k: Array,  # (B, S_k, H, hd)  -- GQA KV already repeated to H heads
+    v: Array,  # (B, S_k, H, hd)
+    *,
+    causal: bool,
+    q_chunk: int,
+    scale: float,
+    rules: ShardingRules | None = None,
+    head_tp: bool = False,
+) -> Array:
+    """Exact attention, scanned over query chunks; scores peak at
+    (B, H, q_chunk, S_k).
+
+    Everything stays in full-head (H) layout: a (kv, group) split would
+    break the tensor-parallel head sharding whenever neither factor
+    divides the TP degree (e.g. kv=4, g=8 on a 16-way axis), forcing XLA
+    to replicate the score tensor.  Repeating KV to H heads is local
+    (the KV source is TP-replicated), so no collective is introduced.
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    ck = min(q_chunk, sq)
+    pad = (-sq) % ck
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = q.shape[1] // ck
+    qs = q.reshape(b, nc, ck, h, hd).transpose(1, 0, 2, 3, 4)
+
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    tp_axis = "tp" if head_tp else None
+
+    # Per-chunk remat: without it the scan's transpose stacks the f32
+    # probs of EVERY chunk ((nc, B, H, ck, S_k) -- gigabytes per layer);
+    # rematerializing one chunk's scores in backward is the flash-attention
+    # memory behaviour at ~1/3 extra attention flops.
+    @jax.checkpoint
+    def one_chunk_body(c, qc):
+        qf = qc.astype(jnp.float32) * scale
+        scores = jnp.einsum("bqhd,bshd->bhqs", qf, kf)
+        if rules is not None:
+            scores = constrain(scores, rules, "dp", tp_axis, None, None)
+        if causal:
+            rows = c * ck + jnp.arange(ck)
+            mask = rows[:, None] >= jnp.arange(sk)[None, :]
+            scores = jnp.where(mask[None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhqs,bshd->bqhd", probs, vf)
+        return out.astype(q.dtype)
+
+    def one_chunk(c, qc):
+        return c + 1, one_chunk_body(c, qc)
+
+    _, outs = jax.lax.scan(one_chunk, 0, qs)
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, nc * ck, h, hd)
+    return out[:, :sq]
+
+
+def repeat_kv(x: Array, n_rep: int) -> Array:
+    """(B, S, KV, hd) -> (B, S, KV * n_rep, hd), GQA group-expansion."""
+    if n_rep == 1:
+        return x
+    b, s, kv, hd = x.shape
+    x = jnp.broadcast_to(x[:, :, :, None, :], (b, s, kv, n_rep, hd))
+    return x.reshape(b, s, kv * n_rep, hd)
+
+
+def _split_heads(x: Array, n: int, hd: int) -> Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, hd)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention: train / prefill
+# ---------------------------------------------------------------------------
+def attention(
+    params: dict,
+    x: Array,  # (B, S, d)
+    positions: Array,  # (B, S)
+    cfg: ModelConfig,
+    rules: ShardingRules,
+    *,
+    causal: bool = True,
+    ctx: Array | None = None,  # (B, T, d) for cross-attention
+    return_cache: bool = False,
+    allow_flash: bool = False,  # prefill/serving only (kernel has no VJP on TPU)
+):
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    g = h // kv
+    cd = cfg.cdtype
+    kv_src = x if ctx is None else ctx
+
+    q = _split_heads(x @ params["wq"].astype(cd), h, hd)
+    k = _split_heads(kv_src @ params["wk"].astype(cd), kv, hd)
+    v = _split_heads(kv_src @ params["wv"].astype(cd), kv, hd)
+    if ctx is None:  # RoPE only for self-attention
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    k_cache, v_cache = k, v  # cache stores the un-repeated KV heads
+    head_tp = tp_ok(h * hd)
+    tp_axis = "tp" if head_tp else None
+    q = constrain(q, rules, "dp", None, tp_axis, None)
+    k = constrain(repeat_kv(k, g), rules, "dp", None, tp_axis, None)
+    v = constrain(repeat_kv(v, g), rules, "dp", None, tp_axis, None)
+
+    b, s, _, _ = q.shape
+    if allow_flash and cfg.flash_attention:
+        from repro.kernels.flash_attention import flash_attention
+
+        out = flash_attention(q, k, v, causal=causal and ctx is None,
+                              scale=1.0 / float(hd) ** 0.5)
+    else:
+        out = _sdpa_chunked(
+            q, k, v,
+            causal=causal and ctx is None,
+            q_chunk=cfg.q_chunk,
+            scale=1.0 / float(hd) ** 0.5,
+            rules=rules,
+            head_tp=head_tp,
+        )
+    y = out.reshape(b, s, h * hd) @ params["wo"].astype(cd)
+    y = constrain(y, rules, "dp", None, None)
+    if return_cache:
+        return y, (k_cache, v_cache)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# GQA attention: decode (one new token against a seq-sharded cache)
+# ---------------------------------------------------------------------------
+def attention_decode(
+    params: dict,
+    x: Array,  # (B, 1, d)
+    cache_k: Array,  # (B, S_max, KV, hd)  -- sharded P(dp, sp, ., .)
+    cache_v: Array,
+    pos: Array,  # scalar int32: current length (same for the batch)
+    cfg: ModelConfig,
+    rules: ShardingRules,
+):
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    g = h // kv
+    cd = cfg.cdtype
+    b = x.shape[0]
+    s_max = cache_k.shape[1]
+
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q = apply_rope(_split_heads(x @ params["wq"].astype(cd), h, hd),
+                   positions, cfg.rope_theta)
+    k_new = apply_rope(_split_heads(x @ params["wk"].astype(cd), kv, hd),
+                       positions, cfg.rope_theta)
+    v_new = _split_heads(x @ params["wv"].astype(cd), kv, hd)
+
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new.astype(cache_k.dtype), pos, 1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new.astype(cache_v.dtype), pos, 1)
+    cache_k = constrain(cache_k, rules, "dp", "sp", None, None)
+    cache_v = constrain(cache_v, rules, "dp", "sp", None, None)
+
+    qf = q.reshape(b, 1, kv, g, hd).astype(jnp.float32) / float(hd) ** 0.5
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qf, cache_k.astype(jnp.float32))
+    mask = jnp.arange(s_max) <= pos
+    scores = jnp.where(mask[None, None, None, None, :], scores, NEG_INF)
+    scores = constrain(scores, rules, "dp", None, None, None, "sp")
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, cache_v.astype(jnp.float32))
+    y = out.astype(cd).reshape(b, 1, h * hd) @ params["wo"].astype(cd)
+    return y, (cache_k, cache_v)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): train + absorbed decode over the latent cache
+# ---------------------------------------------------------------------------
+def _mla_qkv(params, x, positions, cfg):
+    """Shared projections (train path, non-absorbed)."""
+    mla, h = cfg.mla, cfg.n_heads
+    cd = cfg.cdtype
+    b, s, _ = x.shape
+    qd = mla.qk_nope_dim + mla.qk_rope_dim
+
+    q = rmsnorm(params["q_norm"], x @ params["wq_a"].astype(cd), cfg.norm_eps, cfg.bf16_norm_grad)
+    q = (q @ params["wq_b"].astype(cd)).reshape(b, s, h, qd)
+    q_nope, q_rope = jnp.split(q, [mla.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = x @ params["wkv_a"].astype(cd)
+    c_kv, k_rope = jnp.split(kv_a, [mla.kv_lora_rank], axis=-1)
+    c_kv = rmsnorm(params["kv_norm"], c_kv, cfg.norm_eps, cfg.bf16_norm_grad)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+    return q_nope, q_rope, c_kv, k_rope[:, :, 0, :]
+
+
+def mla_attention(
+    params: dict,
+    x: Array,
+    positions: Array,
+    cfg: ModelConfig,
+    rules: ShardingRules,
+    *,
+    return_cache: bool = False,
+):
+    """Training / prefill MLA: per-head K/V decoded from the latent."""
+    mla, h = cfg.mla, cfg.n_heads
+    cd = cfg.cdtype
+    b, s, _ = x.shape
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, x, positions, cfg)
+
+    wkv_b = params["wkv_b"].astype(cd).reshape(
+        mla.kv_lora_rank, h, mla.qk_nope_dim + mla.v_head_dim
+    )
+    w_uk, w_uv = jnp.split(wkv_b, [mla.qk_nope_dim], axis=-1)
+    k_nope = jnp.einsum("bsk,khn->bshn", c_kv, w_uk)
+    v = jnp.einsum("bsk,khv->bshv", c_kv, w_uv)
+
+    # Chunked over queries, exactly like GQA but with split nope/rope scores.
+    ck = min(cfg.q_chunk, s)
+    pad = (-s) % ck
+    qn = jnp.pad(q_nope, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qr = jnp.pad(q_rope, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = qn.shape[1] // ck
+    scale = 1.0 / float(mla.qk_nope_dim + mla.qk_rope_dim) ** 0.5
+    kf, rf, vf = (t.astype(jnp.float32) for t in (k_nope, k_rope, v))
+
+    def one_chunk(c, inp):
+        qnc, qrc = inp
+        sc = jnp.einsum("bqhn,bshn->bhqs", qnc.astype(jnp.float32), kf)
+        sc += jnp.einsum("bqhr,bsr->bhqs", qrc.astype(jnp.float32), rf)
+        rows = c * ck + jnp.arange(ck)
+        mask = rows[:, None] >= jnp.arange(s)[None, :]
+        sc = jnp.where(mask[None, None], sc * scale, NEG_INF)
+        probs = jax.nn.softmax(sc, axis=-1)
+        out = jnp.einsum("bhqs,bshv->bqhv", probs, vf)
+        return c + 1, out.astype(cd)
+
+    _, outs = jax.lax.scan(
+        one_chunk, 0,
+        (qn.reshape(b, nc, ck, h, -1).swapaxes(0, 1),
+         qr.reshape(b, nc, ck, h, -1).swapaxes(0, 1)),
+    )
+    out = outs.swapaxes(0, 1).reshape(b, nc * ck, h, mla.v_head_dim)[:, :s]
+    y = out.reshape(b, s, h * mla.v_head_dim) @ params["wo"].astype(cd)
+    if return_cache:
+        return y, (c_kv, k_rope)
+    return y
+
+
+def mla_attention_decode(
+    params: dict,
+    x: Array,  # (B, 1, d)
+    cache_ckv: Array,  # (B, S_max, kv_lora)  latent cache (the MLA win)
+    cache_rope: Array,  # (B, S_max, rope_dim)
+    pos: Array,
+    cfg: ModelConfig,
+    rules: ShardingRules,
+):
+    """Absorbed decode: queries are mapped into the latent space, so the
+    cache stays at kv_lora + rope_dim per token."""
+    mla, h = cfg.mla, cfg.n_heads
+    cd = cfg.cdtype
+    b = x.shape[0]
+    s_max = cache_ckv.shape[1]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+
+    q_nope, q_rope, c_new, r_new = _mla_qkv(params, x, positions, cfg)
+    cache_ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache_ckv, c_new.astype(cache_ckv.dtype), pos, 1)
+    cache_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache_rope, r_new.astype(cache_rope.dtype), pos, 1)
+    cache_ckv = constrain(cache_ckv, rules, "dp", "sp", None)
+    cache_rope = constrain(cache_rope, rules, "dp", "sp", None)
+
+    wkv_b = params["wkv_b"].astype(cd).reshape(
+        mla.kv_lora_rank, h, mla.qk_nope_dim + mla.v_head_dim
+    )
+    w_uk, w_uv = jnp.split(wkv_b, [mla.qk_nope_dim], axis=-1)
+    # Absorb W_uk into the query: q_lat (B, 1, H, kv_lora).
+    q_lat = jnp.einsum("bqhn,khn->bqhk", q_nope, w_uk)
+
+    scale = 1.0 / float(mla.qk_nope_dim + mla.qk_rope_dim) ** 0.5
+    sc = jnp.einsum("bqhk,bsk->bhqs", q_lat.astype(jnp.float32),
+                    cache_ckv.astype(jnp.float32))
+    sc += jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32),
+                     cache_rope.astype(jnp.float32))
+    mask = jnp.arange(s_max) <= pos
+    sc = jnp.where(mask[None, None, None], sc * scale, NEG_INF)
+    sc = constrain(sc, rules, "dp", None, None, "sp")
+    probs = jax.nn.softmax(sc, axis=-1)
+    o_lat = jnp.einsum("bhqs,bsk->bqhk", probs,
+                       cache_ckv.astype(jnp.float32))
+    out = jnp.einsum("bqhk,khv->bqhv", o_lat.astype(cd), w_uv)
+    y = out.reshape(b, 1, h * mla.v_head_dim) @ params["wo"].astype(cd)
+    return y, (cache_ckv, cache_rope)

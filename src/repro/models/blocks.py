@@ -1,0 +1,238 @@
+"""Layer blocks and the scan-over-layers stacking machinery.
+
+A *layer* = pre-norm mixer (self-attn | MLA | SSD | cross-attn) [+ optional
+cross-attention sub-block] [+ pre-norm FFN (dense MLP | MoE)], with residual
+connections.  Layers are stacked with ``lax.scan`` over parameters stacked
+on a leading axis -- HLO size and compile time stay O(1) in depth, which is
+what makes the 95-layer 512-device dry-runs tractable -- and each layer body
+is wrapped in ``jax.checkpoint`` per ``cfg.remat``.
+
+Three execution modes share one layer definition:
+  * train:    causal, no cache
+  * prefill:  causal, emits this layer's cache
+  * decode:   one token, consumes + updates the cache
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ShardingRules, constrain
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import rmsnorm, rmsnorm_spec
+from repro.models.mlp import mlp, mlp_specs
+from repro.models.params import ParamSpec
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Layer kinds
+# ---------------------------------------------------------------------------
+def layer_specs(
+    cfg: ModelConfig,
+    *,
+    mixer: str = "attn",  # "attn" | "mla" | "ssm" | "cross"
+    ffn: str = "mlp",  # "mlp" | "moe" | "none"
+    add_cross: bool = False,  # whisper-decoder style self+cross layer
+) -> dict:
+    d = cfg.d_model
+    spec: dict[str, Any] = {"ln1": rmsnorm_spec(d)}
+    if mixer in ("attn", "cross"):
+        spec["mixer"] = attn_mod.attn_specs(cfg)
+    elif mixer == "mla":
+        spec["mixer"] = attn_mod.mla_specs(cfg)
+    elif mixer == "ssm":
+        spec["mixer"] = ssm_mod.ssm_specs(cfg)
+    else:
+        raise ValueError(mixer)
+    if mixer == "cross":
+        # Learned gate on cross-attn output (llama-3.2-vision style).
+        spec["gate"] = ParamSpec((), (), dtype=jnp.float32, init="zeros")
+    if add_cross:
+        spec["ln_cross"] = rmsnorm_spec(d)
+        spec["cross"] = attn_mod.attn_specs(cfg)
+    if ffn == "mlp":
+        spec["ln2"] = rmsnorm_spec(d)
+        spec["ffn"] = mlp_specs(cfg)
+    elif ffn == "moe":
+        spec["ln2"] = rmsnorm_spec(d)
+        spec["ffn"] = moe_mod.moe_specs(cfg)
+    elif ffn != "none":
+        raise ValueError(ffn)
+    return spec
+
+
+def layer_apply(
+    params: dict,
+    x: Array,  # (B, S, d)
+    *,
+    cfg: ModelConfig,
+    rules: ShardingRules,
+    mixer: str,
+    ffn: str,
+    mode: str,  # "train" | "prefill" | "decode"
+    positions: Array | None = None,  # (B, S) for train/prefill
+    pos: Array | None = None,  # scalar for decode
+    cache: Any = None,  # per-layer cache pytree (decode) / None
+    ctx: Array | None = None,  # (B, T, d) cross context (vlm / encdec)
+    causal: bool = True,
+    add_cross: bool = False,
+):
+    """Returns (x, aux_loss, new_cache)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: dict[str, Any] = {}
+    sp = cfg.seq_parallel and mode == "train"
+    if sp:  # sequence-parallel boundary: tokens sharded over tp
+        x = constrain(x, rules, "dp", "sp", None)
+    h = rmsnorm(params["ln1"], x, cfg.norm_eps, cfg.bf16_norm_grad)
+
+    if mixer == "attn":
+        if mode == "decode":
+            y, kv = attn_mod.attention_decode(
+                params["mixer"], h, cache["mixer"][0], cache["mixer"][1],
+                pos, cfg, rules)
+            new_cache["mixer"] = kv
+        else:
+            out = attn_mod.attention(
+                params["mixer"], h, positions, cfg, rules, causal=causal,
+                return_cache=(mode == "prefill"),
+                allow_flash=(mode != "train"))
+            y, kv = out if mode == "prefill" else (out, None)
+            if mode == "prefill":
+                new_cache["mixer"] = kv
+    elif mixer == "mla":
+        if mode == "decode":
+            y, kv = attn_mod.mla_attention_decode(
+                params["mixer"], h, cache["mixer"][0], cache["mixer"][1],
+                pos, cfg, rules)
+            new_cache["mixer"] = kv
+        else:
+            out = attn_mod.mla_attention(
+                params["mixer"], h, positions, cfg, rules,
+                return_cache=(mode == "prefill"))
+            y, kv = out if mode == "prefill" else (out, None)
+            if mode == "prefill":
+                new_cache["mixer"] = kv
+    elif mixer == "ssm":
+        if mode == "decode":
+            y, st = ssm_mod.ssd_decode(params["mixer"], h, cache["mixer"],
+                                       cfg, rules)
+            new_cache["mixer"] = st
+        elif mode == "prefill":
+            y, final = ssm_mod.ssd(params["mixer"], h, cfg, rules,
+                                   return_state=True)
+            # Conv tail: last (d_conv-1) pre-conv channel values.
+            new_cache["mixer"] = _ssm_prefill_state(params["mixer"], h,
+                                                    final, cfg)
+        else:
+            y = ssm_mod.ssd(params["mixer"], h, cfg, rules)
+    elif mixer == "cross":
+        # Cross-attn replaces self-attn (vlm layers); gated residual.
+        if mode == "decode":
+            k, v = cache["mixer"]
+            y = _cross_decode(params["mixer"], h, k, v, cfg, rules)
+            new_cache["mixer"] = (k, v)  # static
+        else:
+            y, kv = attn_mod.attention(
+                params["mixer"], h, positions, cfg, rules, causal=False,
+                ctx=ctx, return_cache=True)
+            if mode == "prefill":
+                new_cache["mixer"] = kv
+        y = jnp.tanh(params["gate"]).astype(y.dtype) * y
+    else:
+        raise ValueError(mixer)
+    x = x + y
+
+    if add_cross:
+        h = rmsnorm(params["ln_cross"], x, cfg.norm_eps, cfg.bf16_norm_grad)
+        if mode == "decode":
+            k, v = cache["cross"]
+            y = _cross_decode(params["cross"], h, k, v, cfg, rules)
+            new_cache["cross"] = (k, v)
+        else:
+            y, kv = attn_mod.attention(
+                params["cross"], h, positions, cfg, rules, causal=False,
+                ctx=ctx, return_cache=True)
+            if mode == "prefill":
+                new_cache["cross"] = kv
+        x = x + y
+
+    if ffn != "none":
+        if sp:
+            x = constrain(x, rules, "dp", "sp", None)
+        h = rmsnorm(params["ln2"], x, cfg.norm_eps, cfg.bf16_norm_grad)
+        if ffn == "moe":
+            y, aux = moe_mod.moe_ffn(params["ffn"], h, cfg, rules)
+        else:
+            y = mlp(params["ffn"], h, cfg, rules)
+        x = x + y
+    return x, aux, (new_cache if new_cache else None)
+
+
+def _ssm_prefill_state(mixer_params, h, final_ssm, cfg):
+    """Build the decode-ready SSMState after a prefill pass."""
+    s = cfg.ssm
+    cd = cfg.cdtype
+    z, x, bb, cc, dt = ssm_mod._proj_inputs(mixer_params, h, cfg)  # noqa: SLF001
+    xbc = jnp.concatenate([x, bb, cc], axis=-1)
+    tail = xbc[:, -(s.d_conv - 1):, :]
+    return ssm_mod.SSMState(conv=tail.astype(cd), ssm=final_ssm)
+
+
+def _cross_decode(params, h, k, v, cfg, rules):
+    """Cross-attention with precomputed context K/V (decode path)."""
+    hh, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    cd = cfg.cdtype
+    b = h.shape[0]
+    q = (h @ params["wq"].astype(cd)).reshape(b, 1, hh, hd)
+    g = hh // kv
+    out = attn_mod._sdpa_chunked(  # noqa: SLF001
+        q, attn_mod.repeat_kv(k, g), attn_mod.repeat_kv(v, g),
+        causal=False, q_chunk=1, scale=1.0 / float(hd) ** 0.5)
+    return out.reshape(b, 1, hh * hd) @ params["wo"].astype(cd)
+
+
+# ---------------------------------------------------------------------------
+# Stacking
+# ---------------------------------------------------------------------------
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    policy = (
+        jax.checkpoint_policies.nothing_saveable
+        if cfg.remat == "full"
+        else jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    )
+    return jax.checkpoint(fn, policy=policy)
+
+
+def scan_stack(
+    layer_fn,  # (params, x, cache) -> (x, aux, new_cache)
+    stacked_params: Any,  # leaves (L, ...)
+    x: Array,
+    cfg: ModelConfig,
+    *,
+    cache: Any = None,  # stacked (L, ...) cache pytree or None
+    length: int | None = None,
+):
+    """Scan layers; returns (x, total_aux, stacked_new_cache | None)."""
+
+    def body(carry, inp):
+        xx, aux = carry
+        p, c = inp
+        xx, a, nc = layer_fn(p, xx, c)
+        return (xx, aux + a), nc
+
+    body = _remat(body, cfg)
+    (x, aux), new_cache = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (stacked_params, cache),
+        length=length,
+    )
+    return x, aux, new_cache

@@ -1,0 +1,119 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv audio frontend is a stub per the assignment: ``batch["ctx"]``
+carries precomputed frame embeddings (B, n_context_tokens, d_model).
+Encoder: bidirectional self-attention stack.  Decoder: causal self-attn +
+cross-attn + MLP per layer.  (Adaptation note, DESIGN.md Sec. 5: RoPE is
+used in place of Whisper's learned absolute positions -- backbone-only
+reproduction.)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ShardingRules
+from repro.models import blocks
+from repro.models.layers import (
+    chunked_cross_entropy,
+    embed,
+    embed_specs,
+    rmsnorm,
+    rmsnorm_spec,
+    unembed_matrix,
+)
+from repro.models.lm import _mixer_cache_spec, _stack_cache
+from repro.models.params import stack_specs
+
+Array = jax.Array
+
+
+def encdec_specs(cfg: ModelConfig) -> dict:
+    ed = cfg.encdec
+    return {
+        "embed": embed_specs(cfg),
+        "encoder": stack_specs(
+            lambda: blocks.layer_specs(cfg, mixer="attn", ffn="mlp"),
+            ed.n_encoder_layers),
+        "ln_enc": rmsnorm_spec(cfg.d_model),
+        "decoder": stack_specs(
+            lambda: blocks.layer_specs(cfg, mixer="attn", ffn="mlp",
+                                       add_cross=True),
+            cfg.n_layers),
+        "ln_f": rmsnorm_spec(cfg.d_model),
+    }
+
+
+def encdec_cache_specs(cfg: ModelConfig, batch: int, s_max: int):
+    layer = {
+        "mixer": _mixer_cache_spec(cfg, "attn", batch, s_max),
+        "cross": _mixer_cache_spec(cfg, "cross", batch, s_max),
+    }
+    return _stack_cache(layer, cfg.n_layers)
+
+
+def encode(params, ctx: Array, cfg: ModelConfig, rules: ShardingRules):
+    """Bidirectional encoder over stub frame embeddings (B, T, d)."""
+    b, t, _ = ctx.shape
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+
+    def layer_fn(p, xx, c):
+        return blocks.layer_apply(
+            p, xx, cfg=cfg, rules=rules, mixer="attn", ffn="mlp",
+            mode="train", positions=positions, causal=False)
+
+    x, _, _ = blocks.scan_stack(layer_fn, params["encoder"],
+                                ctx.astype(cfg.cdtype), cfg)
+    return rmsnorm(params["ln_enc"], x, cfg.norm_eps, cfg.bf16_norm_grad)
+
+
+def _run_decoder(params, x, enc_out, cfg, rules, *, mode, positions=None,
+                 pos=None, caches=None):
+    def layer_fn(p, xx, c):
+        return blocks.layer_apply(
+            p, xx, cfg=cfg, rules=rules, mixer="attn", ffn="mlp", mode=mode,
+            positions=positions, pos=pos, cache=c, ctx=enc_out,
+            add_cross=True)
+
+    return blocks.scan_stack(layer_fn, params["decoder"], x, cfg,
+                             cache=caches)
+
+
+def encdec_loss(params, batch: dict, cfg: ModelConfig,
+                rules: ShardingRules) -> tuple[Array, dict]:
+    tokens, labels, ctx = batch["tokens"], batch["labels"], batch["ctx"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    enc_out = encode(params, ctx, cfg, rules)
+    x = embed(params["embed"], tokens, cfg, rules)
+    x, aux, _ = _run_decoder(params, x, enc_out, cfg, rules, mode="train",
+                             positions=positions)
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps, cfg.bf16_norm_grad)
+    ce = chunked_cross_entropy(x, unembed_matrix(params["embed"]), labels,
+                               cfg, rules)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def encdec_prefill(params, batch: dict, cfg: ModelConfig,
+                   rules: ShardingRules):
+    tokens, ctx = batch["tokens"], batch["ctx"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    enc_out = encode(params, ctx, cfg, rules)
+    x = embed(params["embed"], tokens, cfg, rules)
+    x, _, caches = _run_decoder(params, x, enc_out, cfg, rules,
+                                mode="prefill", positions=positions)
+    x = rmsnorm(params["ln_f"], x[:, -1:], cfg.norm_eps)
+    logits = x @ unembed_matrix(params["embed"]).astype(x.dtype)
+    return logits[:, 0], caches
+
+
+def encdec_decode_step(params, tokens: Array, caches, pos: Array,
+                       cfg: ModelConfig, rules: ShardingRules):
+    x = embed(params["embed"], tokens, cfg, rules)
+    x, _, new_caches = _run_decoder(params, x, None, cfg, rules,
+                                    mode="decode", pos=pos, caches=caches)
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps, cfg.bf16_norm_grad)
+    logits = x @ unembed_matrix(params["embed"]).astype(x.dtype)
+    return logits[:, 0], new_caches

@@ -1,0 +1,127 @@
+"""Jamba-style hybrid stack: 1 attention layer per ``attn_period`` layers
+(the rest are Mamba SSD mixers), FFN alternating dense MLP / MoE.
+
+Layers are scanned per *period group* (one group = ``attn_period`` layers
+with a fixed mixer/ffn pattern), keeping the HLO O(1) in depth: the 72-layer
+Jamba lowers as 9 scanned groups of 8 distinct layer bodies.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ShardingRules
+from repro.models import blocks
+from repro.models.layers import (
+    chunked_cross_entropy,
+    embed,
+    embed_specs,
+    rmsnorm,
+    rmsnorm_spec,
+    unembed_matrix,
+)
+from repro.models.lm import _mixer_cache_spec, _stack_cache
+from repro.models.params import stack_specs
+
+Array = jax.Array
+
+
+def _pattern(cfg: ModelConfig) -> list[tuple[str, str]]:
+    """(mixer, ffn) for each layer inside one period group.
+
+    Attention sits mid-period (Jamba places it at offset period//2); MoE on
+    odd global layer indices (= odd in-group indices, since the period is
+    even)."""
+    period = cfg.attn_period
+    attn_at = period // 2
+    out = []
+    for i in range(period):
+        mixer = "attn" if i == attn_at else "ssm"
+        ffn = "moe" if (cfg.moe and i % cfg.moe.every_k_layers
+                        == cfg.moe.every_k_layers - 1) else "mlp"
+        out.append((mixer, ffn))
+    return out
+
+
+def _n_groups(cfg: ModelConfig) -> int:
+    assert cfg.n_layers % cfg.attn_period == 0
+    return cfg.n_layers // cfg.attn_period
+
+
+def hybrid_specs(cfg: ModelConfig) -> dict:
+    pattern = _pattern(cfg)
+    group = {
+        f"layer{i}": blocks.layer_specs(cfg, mixer=m, ffn=f)
+        for i, (m, f) in enumerate(pattern)
+    }
+    return {
+        "embed": embed_specs(cfg),
+        "groups": stack_specs(lambda: group, _n_groups(cfg)),
+        "ln_f": rmsnorm_spec(cfg.d_model),
+    }
+
+
+def hybrid_cache_specs(cfg: ModelConfig, batch: int, s_max: int):
+    group = {
+        f"layer{i}": {"mixer": _mixer_cache_spec(cfg, m, batch, s_max)}
+        for i, (m, _) in enumerate(_pattern(cfg))
+    }
+    return _stack_cache(group, _n_groups(cfg))
+
+
+def _run_groups(params, x, cfg, rules, *, mode, positions=None, pos=None,
+                caches=None):
+    pattern = _pattern(cfg)
+
+    def group_fn(gp, xx, gc):
+        aux_total = jnp.zeros((), jnp.float32)
+        nc = {}
+        for i, (mixer, ffn) in enumerate(pattern):
+            xx, aux, c = blocks.layer_apply(
+                gp[f"layer{i}"], xx, cfg=cfg, rules=rules, mixer=mixer,
+                ffn=ffn, mode=mode, positions=positions, pos=pos,
+                cache=gc[f"layer{i}"] if gc is not None else None)
+            aux_total = aux_total + aux
+            nc[f"layer{i}"] = c
+        return xx, aux_total, (nc if any(v is not None for v in nc.values())
+                               else None)
+
+    return blocks.scan_stack(group_fn, params["groups"], x, cfg, cache=caches)
+
+
+def hybrid_loss(params, batch: dict, cfg: ModelConfig,
+                rules: ShardingRules) -> tuple[Array, dict]:
+    tokens, labels = batch["tokens"], batch["labels"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = embed(params["embed"], tokens, cfg, rules)
+    x, aux, _ = _run_groups(params, x, cfg, rules, mode="train",
+                            positions=positions)
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps, cfg.bf16_norm_grad)
+    ce = chunked_cross_entropy(x, unembed_matrix(params["embed"]), labels,
+                               cfg, rules)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def hybrid_prefill(params, batch: dict, cfg: ModelConfig,
+                   rules: ShardingRules):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = embed(params["embed"], tokens, cfg, rules)
+    x, _, caches = _run_groups(params, x, cfg, rules, mode="prefill",
+                               positions=positions)
+    x = rmsnorm(params["ln_f"], x[:, -1:], cfg.norm_eps)
+    logits = x @ unembed_matrix(params["embed"]).astype(x.dtype)
+    return logits[:, 0], caches
+
+
+def hybrid_decode_step(params, tokens: Array, caches, pos: Array,
+                       cfg: ModelConfig, rules: ShardingRules):
+    x = embed(params["embed"], tokens, cfg, rules)
+    x, _, new_caches = _run_groups(params, x, cfg, rules, mode="decode",
+                                   pos=pos, caches=caches)
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps, cfg.bf16_norm_grad)
+    logits = x @ unembed_matrix(params["embed"]).astype(x.dtype)
+    return logits[:, 0], new_caches

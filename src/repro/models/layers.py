@@ -1,0 +1,192 @@
+"""Shared model primitives: norms, RoPE, embeddings, chunked attention math.
+
+Everything is pjit-style: functions operate on *global* shapes; sharding is
+expressed via ParamSpec logical axes plus ``constrain`` hints on
+activations.  No flax -- params are plain pytrees built by each module's
+``*_specs`` function (see ``repro.models.params``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ShardingRules, constrain
+from repro.models.params import ParamSpec
+
+Array = jax.Array
+
+# The production meshes fix the tensor-parallel degree; ParamSpec axes are
+# chosen statically against it (dims not divisible by TP_SIZE stay
+# replicated -- e.g. whisper's 12 heads).  Single-device runs resolve every
+# logical axis to None, so this constant only gates *which* dims carry the
+# "tp" tag.
+TP_SIZE = 16
+FSDP_SIZE = 32  # pod x data in the multi-pod mesh (16 single-pod divides it)
+
+
+def tp_ok(dim: int) -> bool:
+    return dim % TP_SIZE == 0
+
+
+def fsdp_ok(dim: int) -> bool:
+    return dim % FSDP_SIZE == 0
+
+
+def axis_if(cond: bool, name: str) -> str | None:
+    return name if cond else None
+
+
+def padded_vocab(vocab: int) -> int:
+    """Pad embedding tables to a multiple of 256 (16 TP x 16 lanes)."""
+    return -(-vocab // 256) * 256
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rmsnorm_spec(d: int) -> ParamSpec:
+    return ParamSpec((d,), (None,), dtype=jnp.float32, init="ones")
+
+
+def rmsnorm(w: Array, x: Array, eps: float = 1e-5,
+            bf16_grad: bool = False) -> Array:
+    """RMSNorm, f32 internals.
+
+    ``bf16_grad`` (EXPERIMENTS.md Sec. Perf, deepseek-67b hillclimb): the
+    autodiff of the f32 upcast promotes the *residual-stream cotangent* to
+    f32, which doubles every backward tensor-parallel all-reduce.  The
+    custom-vjp path computes the same gradient but hands back dx in x's
+    own dtype (bf16), halving those collective bytes; dw stays f32.
+    """
+    if bf16_grad:
+        return _rmsnorm_vjp(w, x, eps)
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * w).astype(dt)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _rmsnorm_vjp(w: Array, x: Array, eps: float) -> Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w).astype(dt)
+
+
+def _rmsnorm_fwd(w, x, eps):
+    return _rmsnorm_vjp(w, x, eps), (w, x)
+
+
+def _rmsnorm_bwd(eps, res, dy):
+    w, x = res
+    d = x.shape[-1]
+    xf = x.astype(jnp.float32)
+    r = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    g = dy.astype(jnp.float32) * w  # (.., d)
+    xg = jnp.sum(xf * g, axis=-1, keepdims=True)
+    dx = r * g - (r**3 / d) * xf * xg
+    dw = jnp.sum(dy.astype(jnp.float32) * xf * r,
+                 axis=tuple(range(x.ndim - 1)))
+    return dw, dx.astype(x.dtype)  # dx cast back: bf16 collective bytes
+
+
+_rmsnorm_vjp.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_freqs(hd: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+def embed_specs(cfg: ModelConfig) -> dict:
+    pv = padded_vocab(cfg.vocab)
+    spec = {
+        "table": ParamSpec(
+            (pv, cfg.d_model),
+            ("tp", axis_if(fsdp_ok(cfg.d_model), "fsdp")),
+            dtype=cfg.pdtype,
+            scale=1.0,
+        )
+    }
+    if not cfg.tie_embeddings:
+        spec["unembed"] = ParamSpec(
+            (cfg.d_model, pv),
+            (axis_if(fsdp_ok(cfg.d_model), "fsdp"), "tp"),
+            dtype=cfg.pdtype,
+        )
+    return spec
+
+
+def embed(params: dict, tokens: Array, cfg: ModelConfig,
+          rules: ShardingRules) -> Array:
+    x = jnp.take(params["table"], tokens, axis=0).astype(cfg.cdtype)
+    return constrain(x, rules, "dp", None, None)
+
+
+def unembed_matrix(params: dict) -> Array:
+    if "unembed" in params:
+        return params["unembed"]
+    return params["table"].T
+
+
+# ---------------------------------------------------------------------------
+# Chunked softmax cross-entropy (never materializes full (B, S, V) logits)
+# ---------------------------------------------------------------------------
+def chunked_cross_entropy(
+    x: Array,  # (B, S, d) final hidden states
+    w_unembed: Array,  # (d, V)
+    labels: Array,  # (B, S) int32
+    cfg: ModelConfig,
+    rules: ShardingRules,
+) -> Array:
+    """Mean CE over all positions, computed in sequence chunks so the peak
+    logits buffer is (B, ce_chunk, V) instead of (B, S, V)."""
+    b, s, d = x.shape
+    ck = min(cfg.ce_chunk, s)
+    # Pad so the sequence divides evenly; padded positions get weight 0.
+    pad = (-s) % ck
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nc = x.shape[1] // ck
+    xs = x.reshape(b, nc, ck, d).swapaxes(0, 1)  # (nc, B, ck, d)
+    ls = labels.reshape(b, nc, ck).swapaxes(0, 1)
+
+    def chunk_loss(carry, inp):
+        xc, lc = inp
+        logits = (xc @ w_unembed.astype(xc.dtype)).astype(jnp.float32)
+        logits = constrain(logits, rules, "dp", None, "tp")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        valid = lc >= 0
+        tgt = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1
+        )[..., 0]
+        nll = jnp.where(valid, lse - tgt, 0.0)
+        return (carry[0] + nll.sum(), carry[1] + valid.sum()), None
+
+    (total, count), _ = jax.lax.scan(
+        chunk_loss, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
+        (xs, ls),
+    )
+    return total / jnp.maximum(count, 1).astype(jnp.float32)

@@ -1,0 +1,198 @@
+"""Decoder-only LM assembly for the uniform-stack families:
+
+  dense (deepseek-67b / yi-6b / llama3-8b / tinyllama),
+  moe   (qwen2-moe; deepseek-v2 = MLA mixer + leading dense layers),
+  ssm   (mamba2 -- attention-free).
+
+Heterogeneous families (vlm / encdec / hybrid) build on the same blocks in
+their own modules.  The stack is described by ``stack_plan`` segments; each
+segment is a scanned homogeneous run of layers.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ShardingRules
+from repro.models import blocks
+from repro.models.layers import (
+    chunked_cross_entropy,
+    embed,
+    embed_specs,
+    padded_vocab,
+    rmsnorm,
+    rmsnorm_spec,
+    unembed_matrix,
+)
+from repro.models.params import ParamSpec, stack_specs
+
+Array = jax.Array
+
+
+class Segment(NamedTuple):
+    mixer: str
+    ffn: str
+    count: int
+
+
+def stack_plan(cfg: ModelConfig) -> list[Segment]:
+    if cfg.family == "dense":
+        return [Segment("attn", "mlp", cfg.n_layers)]
+    if cfg.family == "ssm":
+        return [Segment("ssm", "none", cfg.n_layers)]
+    if cfg.family == "moe":
+        mixer = "mla" if cfg.mla is not None else "attn"
+        first = cfg.moe.first_dense
+        segs = []
+        if first:
+            segs.append(Segment(mixer, "mlp", first))
+        segs.append(Segment(mixer, "moe", cfg.n_layers - first))
+        return segs
+    raise ValueError(f"stack_plan: unsupported family {cfg.family}")
+
+
+def lm_specs(cfg: ModelConfig) -> dict:
+    segs = stack_plan(cfg)
+    return {
+        "embed": embed_specs(cfg),
+        "segments": [
+            stack_specs(
+                lambda m=s.mixer, f=s.ffn: blocks.layer_specs(
+                    cfg, mixer=m, ffn=f),
+                s.count,
+            )
+            for s in segs
+        ],
+        "ln_f": rmsnorm_spec(cfg.d_model),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Cache specs (ParamSpec trees -> reuse shape/sharding machinery)
+# ---------------------------------------------------------------------------
+def _mixer_cache_spec(cfg: ModelConfig, mixer: str, batch: int,
+                      s_max: int) -> Any:
+    cd = cfg.cdtype
+    if mixer == "attn":
+        kv_spec = ParamSpec(
+            (batch, s_max, cfg.n_kv_heads, cfg.hd),
+            ("dp", "sp", None, None), dtype=cd, init="zeros")
+        return (kv_spec, kv_spec)
+    if mixer == "mla":
+        return (
+            ParamSpec((batch, s_max, cfg.mla.kv_lora_rank),
+                      ("dp", "sp", None), dtype=cd, init="zeros"),
+            ParamSpec((batch, s_max, cfg.mla.qk_rope_dim),
+                      ("dp", "sp", None), dtype=cd, init="zeros"),
+        )
+    if mixer == "ssm":
+        from repro.models.ssm import SSMState, _dims
+
+        d_in, heads, conv_dim = _dims(cfg)
+        s = cfg.ssm
+        return SSMState(
+            conv=ParamSpec((batch, s.d_conv - 1, conv_dim),
+                           ("dp", None, None), dtype=cd, init="zeros"),
+            ssm=ParamSpec((batch, heads, s.d_state, s.head_dim),
+                          ("dp", None, None, None), dtype=jnp.float32,
+                          init="zeros"),
+        )
+    if mixer == "cross":
+        t = _ctx_len(cfg)
+        kv_spec = ParamSpec(
+            (batch, t, cfg.n_kv_heads, cfg.hd),
+            ("dp", None, None, None), dtype=cd, init="zeros")
+        return (kv_spec, kv_spec)
+    raise ValueError(mixer)
+
+
+def _ctx_len(cfg: ModelConfig) -> int:
+    if cfg.cross is not None:
+        return cfg.cross.n_context_tokens
+    if cfg.encdec is not None:
+        return cfg.encdec.n_context_tokens
+    raise ValueError("no context config")
+
+
+def _stack_cache(spec: Any, n: int) -> Any:
+    import dataclasses
+
+    from repro.models.params import is_spec
+
+    return jax.tree.map(
+        lambda p: dataclasses.replace(
+            p, shape=(n, *p.shape), axes=(None, *p.axes)),
+        spec, is_leaf=is_spec,
+    )
+
+
+def lm_cache_specs(cfg: ModelConfig, batch: int, s_max: int) -> list:
+    return [
+        _stack_cache({"mixer": _mixer_cache_spec(cfg, s.mixer, batch, s_max)},
+                     s.count)
+        for s in stack_plan(cfg)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+def _run_segments(params, x, cfg, rules, *, mode, positions=None, pos=None,
+                  caches=None):
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = []
+    for i, seg in enumerate(stack_plan(cfg)):
+        def layer_fn(p, xx, c, seg=seg):
+            return blocks.layer_apply(
+                p, xx, cfg=cfg, rules=rules, mixer=seg.mixer, ffn=seg.ffn,
+                mode=mode, positions=positions, pos=pos, cache=c)
+
+        cache_i = caches[i] if caches is not None else None
+        x, aux, nc = blocks.scan_stack(
+            layer_fn, params["segments"][i], x, cfg, cache=cache_i,
+            length=seg.count)
+        aux_total = aux_total + aux
+        new_caches.append(nc)
+    return x, aux_total, new_caches
+
+
+def lm_loss(params, batch: dict, cfg: ModelConfig,
+            rules: ShardingRules) -> tuple[Array, dict]:
+    tokens, labels = batch["tokens"], batch["labels"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = embed(params["embed"], tokens, cfg, rules)
+    x, aux, _ = _run_segments(params, x, cfg, rules, mode="train",
+                              positions=positions)
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps, cfg.bf16_norm_grad)
+    ce = chunked_cross_entropy(x, unembed_matrix(params["embed"]), labels,
+                               cfg, rules)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def lm_prefill(params, batch: dict, cfg: ModelConfig,
+               rules: ShardingRules):
+    """Forward over the prompt; returns (last-position logits, caches)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = embed(params["embed"], tokens, cfg, rules)
+    x, _, caches = _run_segments(params, x, cfg, rules, mode="prefill",
+                                 positions=positions)
+    x = rmsnorm(params["ln_f"], x[:, -1:], cfg.norm_eps)
+    logits = x @ unembed_matrix(params["embed"]).astype(x.dtype)
+    return logits[:, 0], caches
+
+
+def lm_decode_step(params, tokens: Array, caches, pos: Array,
+                   cfg: ModelConfig, rules: ShardingRules):
+    """One decode step.  tokens: (B, 1); pos: scalar current length."""
+    x = embed(params["embed"], tokens, cfg, rules)
+    x, _, new_caches = _run_segments(params, x, cfg, rules, mode="decode",
+                                     pos=pos, caches=caches)
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps, cfg.bf16_norm_grad)
+    logits = x @ unembed_matrix(params["embed"]).astype(x.dtype)
+    return logits[:, 0], new_caches

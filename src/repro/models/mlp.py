@@ -1,0 +1,33 @@
+"""Dense MLP (SwiGLU, llama-style) with Megatron column/row TP sharding."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ShardingRules, constrain
+from repro.models.layers import axis_if, tp_ok
+from repro.models.params import ParamSpec
+
+Array = jax.Array
+
+
+def mlp_specs(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    ff = d_ff if d_ff is not None else cfg.d_ff
+    ff_tp = axis_if(tp_ok(ff), "tp")
+    return {
+        "w_gate": ParamSpec((d, ff), ("fsdp", ff_tp), dtype=cfg.pdtype),
+        "w_up": ParamSpec((d, ff), ("fsdp", ff_tp), dtype=cfg.pdtype),
+        "w_down": ParamSpec((ff, d), (ff_tp, "fsdp"), dtype=cfg.pdtype),
+    }
+
+
+def mlp(params: dict, x: Array, cfg: ModelConfig, rules: ShardingRules) -> Array:
+    cd = cfg.cdtype
+    g = x @ params["w_gate"].astype(cd)
+    u = x @ params["w_up"].astype(cd)
+    h = jax.nn.silu(g) * u
+    h = constrain(h, rules, "dp", None, "tp")
+    y = h @ params["w_down"].astype(cd)
+    return constrain(y, rules, "dp", None, None)

@@ -1,0 +1,176 @@
+"""Mixture-of-Experts FFN with two dispatch strategies.
+
+``grouped`` (train/prefill default)
+    GShard/MaxText-style capacity dispatch with the *batch row as the
+    dispatch group*: ranks within (row, expert) come from a cumsum over the
+    sequence dim only, so no collective crosses the data-parallel batch
+    sharding.  Expert compute is one dense einsum over a (B, E, cap, d)
+    buffer -- FLOPs are honest (capacity_factor x useful), every expert
+    weight is read exactly once, and everything lowers on any backend.
+
+``gather`` (decode default)
+    Per-token expert-weight gather: for one-token-per-row shapes the
+    capacity buffer would waste E/top_k x FLOPs; instead we gather the
+    top-k experts' weights per token and contract exactly the useful FLOPs
+    (weight bytes read scale with B*top_k -- honest while B*top_k <~ E,
+    noted in EXPERIMENTS.md Sec. Roofline otherwise).
+
+Shared experts (Qwen/DeepSeek style) are a plain dense MLP added to the
+routed output.  Router aux loss is Switch-style load balancing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ShardingRules, constrain
+from repro.models.layers import axis_if, tp_ok
+from repro.models.mlp import mlp, mlp_specs
+from repro.models.params import ParamSpec
+
+Array = jax.Array
+
+
+def _use_ep(cfg: ModelConfig) -> bool:
+    from repro.models.layers import TP_SIZE
+
+    return bool(cfg.moe_ep) and cfg.moe.num_experts % TP_SIZE == 0
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    moe = cfg.moe
+    d, ff, e = cfg.d_model, moe.d_ff_expert, moe.num_experts
+    if _use_ep(cfg):
+        # Expert parallelism: experts sharded over the model axis; each
+        # rank holds E/TP full experts (FSDP on d would make XLA contract
+        # over the dp-sharded dim -- TB-scale all-reduces).
+        w_axes_up = ("ep", None, None)
+        w_axes_down = ("ep", None, None)
+    else:
+        ff_tp = axis_if(tp_ok(ff), "tp")
+        w_axes_up = (None, "fsdp", ff_tp)
+        w_axes_down = (None, ff_tp, "fsdp")
+    spec = {
+        "router": ParamSpec((d, e), (None, None), dtype=jnp.float32),
+        "w_gate": ParamSpec((e, d, ff), w_axes_up, dtype=cfg.pdtype),
+        "w_up": ParamSpec((e, d, ff), w_axes_up, dtype=cfg.pdtype),
+        "w_down": ParamSpec((e, ff, d), w_axes_down, dtype=cfg.pdtype),
+    }
+    if moe.num_shared:
+        spec["shared"] = mlp_specs(cfg, d_ff=moe.d_ff_shared)
+    return spec
+
+
+def _route(params, x, cfg):
+    """Top-k routing.  x: (B, S, d) -> (weights, ids) (B, S, k) + aux loss."""
+    moe = cfg.moe
+    logits = (x.astype(jnp.float32) @ params["router"])  # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, ids = jax.lax.top_k(probs, moe.top_k)  # (B, S, k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balancing aux: E * mean_e(frac_tokens_e * mean_prob_e)
+    num = moe.num_experts
+    counts = jnp.zeros((num,), jnp.float32).at[ids.reshape(-1)].add(1.0)
+    frac_tok = counts / jnp.maximum(counts.sum(), 1.0)
+    frac_prob = probs.mean(axis=(0, 1))
+    aux = num * jnp.sum(frac_tok * frac_prob) * moe.router_aux_weight
+    return w.astype(x.dtype), ids, aux
+
+
+def _moe_grouped(params, x, w, ids, cfg, rules):
+    """Capacity dispatch, group = batch row."""
+    moe = cfg.moe
+    b, s, d = x.shape
+    e, k = moe.num_experts, moe.top_k
+    cap = max(8, int(s * k / e * moe.capacity_factor + 0.999) // 8 * 8)
+
+    flat_ids = ids.reshape(b, s * k)  # assignments in seq-major order
+    onehot = jax.nn.one_hot(flat_ids, e, dtype=jnp.int32)  # (B, S*k, E)
+    ranks = jnp.cumsum(onehot, axis=1) - onehot  # rank of each assignment
+    rank = jnp.take_along_axis(
+        ranks, flat_ids[..., None], axis=-1)[..., 0]  # (B, S*k)
+    keep = rank < cap
+    # Dropped assignments go to per-assignment trash slots so that every
+    # scatter index is UNIQUE -- this lets XLA use the direct scatter
+    # lowering; a shared overflow slot makes indices non-unique and the
+    # SPMD scatter expander falls back to a sort/permute path with
+    # TB-scale collectives (EXPERIMENTS.md Sec. Perf iteration 2).
+    trash = e * cap + jnp.arange(s * k)
+    slot = jnp.where(keep, flat_ids * cap + rank, trash)
+
+    xk = jnp.repeat(x, k, axis=1)  # (B, S*k, d) token per assignment
+    buf = jnp.zeros((b, e * cap + s * k, d), x.dtype)
+    buf = jax.vmap(
+        lambda row, sl, val: row.at[sl].set(
+            val, unique_indices=True, mode="promise_in_bounds")
+    )(buf, slot, xk)
+    buf = buf[:, : e * cap].reshape(b, e, cap, d)
+    ep = _use_ep(cfg)
+    # EP: the token scatter/gather stays tp-replicated (sharding the buffer
+    # on E makes XLA reshard the scatter -- measured 8x worse, see
+    # EXPERIMENTS.md Sec. Perf iteration 1); only the expert COMPUTE is
+    # E-sharded, with one explicit all-gather of the expert outputs.
+    buf = constrain(buf, rules, "dp", None, None, None)
+
+    cd = cfg.cdtype
+    g = jnp.einsum("becd,edf->becf", buf, params["w_gate"].astype(cd))
+    u = jnp.einsum("becd,edf->becf", buf, params["w_up"].astype(cd))
+    h = jax.nn.silu(g) * u
+    h = constrain(h, rules, "dp", "ep" if ep else None, None,
+                  None if ep else "tp")
+    out = jnp.einsum("becf,efd->becd", h, params["w_down"].astype(cd))
+    # (EP: `out` stays E-sharded; the slot gather below partitions into a
+    # local masked gather + one (B, S*k, d) all-reduce -- 15x less traffic
+    # than all-gathering the (B, E, cap, d) buffer.  Perf iteration 4.)
+
+    # Gather back and combine with routing weights (dropped tokens -> 0;
+    # trash-slot reads are masked by `keep`).
+    out_flat = out.reshape(b, e * cap, d)
+    safe_slot = jnp.minimum(slot, e * cap - 1)
+    y = jax.vmap(
+        lambda rows, sl: rows.at[sl].get(mode="promise_in_bounds")
+    )(out_flat, safe_slot)  # (B, S*k, d)
+    y = y * (w.reshape(b, s * k, 1) * keep[..., None]).astype(y.dtype)
+    return y.reshape(b, s, k, d).sum(axis=2)
+
+
+def _moe_gather(params, x, w, ids, cfg, rules):
+    """Per-token expert gather (decode shapes)."""
+    b, s, d = x.shape
+    cd = cfg.cdtype
+    xt = x.reshape(b * s, d)
+    idt = ids.reshape(b * s, -1)  # (T, k)
+    wt = w.reshape(b * s, -1)
+
+    wg = jnp.take(params["w_gate"], idt, axis=0).astype(cd)  # (T, k, d, f)
+    wu = jnp.take(params["w_up"], idt, axis=0).astype(cd)
+    wd = jnp.take(params["w_down"], idt, axis=0).astype(cd)  # (T, k, f, d)
+    g = jnp.einsum("td,tkdf->tkf", xt, wg)
+    u = jnp.einsum("td,tkdf->tkf", xt, wu)
+    h = jax.nn.silu(g) * u
+    h = constrain(h, rules, "dp", None, "tp")
+    out = jnp.einsum("tkf,tkfd->tkd", h, wd)
+    y = (out * wt[..., None].astype(out.dtype)).sum(axis=1)
+    return y.reshape(b, s, d)
+
+
+def moe_ffn(
+    params: dict,
+    x: Array,
+    cfg: ModelConfig,
+    rules: ShardingRules,
+    *,
+    dispatch: str | None = None,  # None => by shape (S==1 -> gather)
+) -> tuple[Array, Array]:
+    """Returns (y, aux_loss)."""
+    if dispatch is None:
+        dispatch = "gather" if x.shape[1] == 1 else "grouped"
+    w, ids, aux = _route(params, x, cfg)
+    if dispatch == "grouped":
+        y = _moe_grouped(params, x, w, ids, cfg, rules)
+    else:
+        y = _moe_gather(params, x, w, ids, cfg, rules)
+    if cfg.moe.num_shared:
+        y = y + mlp(params["shared"], x, cfg, rules)
+    return y, aux

@@ -1,0 +1,130 @@
+"""Spec-first parameter system.
+
+Model definitions build pytrees of :class:`ParamSpec` (shape + dtype +
+initializer + PartitionSpec).  From that single source of truth we derive
+
+* ``shape_tree``     -- ShapeDtypeStructs for ``jit(...).lower()`` dry-runs
+                        (no allocation; the 512-device path),
+* ``sharding_tree``  -- NamedShardings for a concrete mesh,
+* ``materialize``    -- real arrays for smoke tests / examples / training.
+
+Sharding vocabulary (see ``repro.distributed.sharding``): specs are written
+with *logical* axis names ("tp", "fsdp", "sp") that are resolved to mesh
+axes per run -- e.g. tp -> "model", fsdp -> ("pod", "data") -- so the same
+model definition serves the single-pod, multi-pod and single-device cases.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """One parameter: shape/dtype/init plus logical sharding axes.
+
+    ``axes`` has one entry per dim: None (replicated), or a logical axis
+    name string.  ``scale`` feeds the initializer (truncated normal).
+    """
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"  # "normal" | "zeros" | "ones" | "embed"
+    scale: float | None = None  # None => fan-in 1/sqrt(shape[-2] or [0])
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+    def initializer(self, key: Array) -> Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        scale = self.scale
+        if scale is None:
+            fan_in = self.shape[-2] if len(self.shape) >= 2 else self.shape[0]
+            scale = 1.0 / np.sqrt(fan_in)
+        return (
+            jax.random.truncated_normal(key, -2.0, 2.0, self.shape, jnp.float32)
+            * scale
+        ).astype(self.dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _map(fn: Callable[[ParamSpec], Any], tree: PyTree) -> PyTree:
+    return jax.tree.map(fn, tree, is_leaf=is_spec)
+
+
+def shape_tree(tree: PyTree) -> PyTree:
+    """ShapeDtypeStruct stand-ins (dry-run: no device allocation)."""
+    return _map(lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), tree)
+
+
+def spec_tree(tree: PyTree, resolve: Callable[[str | None], Any]) -> PyTree:
+    """PartitionSpec tree; ``resolve`` maps logical axis -> mesh axes."""
+    from jax.sharding import PartitionSpec as P
+
+    return _map(lambda p: P(*(resolve(a) for a in p.axes)), tree)
+
+
+def sharding_tree(tree: PyTree, mesh, resolve) -> PyTree:
+    """NamedShardings with divisibility guards: a dim whose size does not
+    divide by its mesh-axis extent falls back to replicated (e.g. the
+    global_batch=1 long-context cell cannot shard its batch dim)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def mesh_extent(axes) -> int:
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            return mesh.shape[axes]
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        return n
+
+    def one(p: ParamSpec) -> NamedSharding:
+        resolved = []
+        for size, logical in zip(p.shape, p.axes):
+            axes = resolve(logical)
+            if axes is not None and size % mesh_extent(axes) != 0:
+                axes = None
+            resolved.append(axes)
+        return NamedSharding(mesh, P(*resolved))
+
+    return _map(one, tree)
+
+
+def materialize(tree: PyTree, key: Array) -> PyTree:
+    """Instantiate real parameters (smoke tests, examples, real training)."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    arrs = [p.initializer(k) for p, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def count_params(tree: PyTree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=is_spec)
+    return sum(int(np.prod(p.shape)) for p in leaves)
+
+
+def stack_specs(spec_fn: Callable[[], PyTree], n: int) -> PyTree:
+    """Stack one layer's spec tree to (n, ...) for scan-over-layers."""
+
+    def stack(p: ParamSpec) -> ParamSpec:
+        return dataclasses.replace(
+            p, shape=(n, *p.shape), axes=(None, *p.axes)
+        )
+
+    return _map(stack, spec_fn())

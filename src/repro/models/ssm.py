@@ -1,0 +1,248 @@
+"""Mamba-2 SSD mixer (state-space duality, arXiv:2405.21060).
+
+Training/prefill uses the chunked SSD algorithm: intra-chunk attention-like
+scores + inter-chunk linear recurrence, scanned over chunks so only one
+chunk's (B, G, cl, cl) score block is live at a time.  Decode carries a
+constant-size (B, H, N, P) state + a (d_conv-1)-deep conv state -- the
+long_500k shape's whole point: context length never appears in decode
+compute or memory.
+
+TP sharding: the inner width (z/x projections, heads) shards over "tp";
+B/C/dt projections are small and stay replicated.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ShardingRules, constrain
+from repro.models.layers import axis_if, rmsnorm, tp_ok
+from repro.models.params import ParamSpec
+
+Array = jax.Array
+
+
+class SSMState(NamedTuple):
+    conv: Array  # (B, d_conv - 1, conv_dim)
+    ssm: Array  # (B, H, N, P)
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    heads = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return d_in, heads, conv_dim
+
+
+def ssm_specs(cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, heads, _ = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    in_tp = axis_if(tp_ok(d_in), "tp")
+    return {
+        "w_z": ParamSpec((d, d_in), ("fsdp", in_tp), dtype=cfg.pdtype),
+        "w_x": ParamSpec((d, d_in), ("fsdp", in_tp), dtype=cfg.pdtype),
+        "w_b": ParamSpec((d, gn), ("fsdp", None), dtype=cfg.pdtype),
+        "w_c": ParamSpec((d, gn), ("fsdp", None), dtype=cfg.pdtype),
+        "w_dt": ParamSpec((d, heads), ("fsdp", None), dtype=cfg.pdtype),
+        "conv_x": ParamSpec((s.d_conv, d_in), (None, in_tp), dtype=cfg.pdtype,
+                            scale=0.5),
+        "conv_b": ParamSpec((s.d_conv, gn), (None, None), dtype=cfg.pdtype,
+                            scale=0.5),
+        "conv_c": ParamSpec((s.d_conv, gn), (None, None), dtype=cfg.pdtype,
+                            scale=0.5),
+        "a_log": ParamSpec((heads,), (None,), dtype=jnp.float32, init="zeros"),
+        "dt_bias": ParamSpec((heads,), (None,), dtype=jnp.float32,
+                             init="zeros"),
+        "d_skip": ParamSpec((heads,), (None,), dtype=jnp.float32, init="ones"),
+        "gate_norm": ParamSpec((d_in,), (None,), dtype=jnp.float32,
+                               init="ones"),
+        "out_proj": ParamSpec((d_in, d), (in_tp, "fsdp"), dtype=cfg.pdtype),
+    }
+
+
+def _causal_conv(x: Array, kernel: Array) -> Array:
+    """Depthwise causal 1-D conv.  x: (B, S, C), kernel: (K, C)."""
+    k = kernel.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):  # K is tiny (4); unrolled adds fuse well
+        out = out + xp[:, i : i + x.shape[1]] * kernel[i]
+    return out
+
+
+def _proj_inputs(params, h, cfg):
+    s = cfg.ssm
+    cd = cfg.cdtype
+    b, sl, _ = h.shape
+    d_in, heads, _ = _dims(cfg)
+    z = h @ params["w_z"].astype(cd)
+    x = h @ params["w_x"].astype(cd)
+    bb = h @ params["w_b"].astype(cd)
+    cc = h @ params["w_c"].astype(cd)
+    dt = (h @ params["w_dt"].astype(cd)).astype(jnp.float32)
+    return z, x, bb, cc, dt
+
+
+def ssd(
+    params: dict,
+    h: Array,  # (B, S, d)
+    cfg: ModelConfig,
+    rules: ShardingRules,
+    *,
+    initial_state: Array | None = None,
+    return_state: bool = False,
+):
+    """Chunked SSD forward.  Returns (B, S, d) (+ final (B,H,N,P) state)."""
+    s = cfg.ssm
+    cd = cfg.cdtype
+    b, sl, _ = h.shape
+    d_in, heads, _ = _dims(cfg)
+    g, n, p = s.n_groups, s.d_state, s.head_dim
+    hg = heads // g
+
+    z, x, bb, cc, dt = _proj_inputs(params, h, cfg)
+    x = jax.nn.silu(_causal_conv(x, params["conv_x"].astype(cd)))
+    bb = jax.nn.silu(_causal_conv(bb, params["conv_b"].astype(cd)))
+    cc = jax.nn.silu(_causal_conv(cc, params["conv_c"].astype(cd)))
+    x = constrain(x, rules, "dp", None, "tp")
+
+    cl = min(s.chunk, sl)
+    pad = (-sl) % cl
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        bb = jnp.pad(bb, ((0, 0), (0, pad), (0, 0)))
+        cc = jnp.pad(cc, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // cl
+
+    xh = x.reshape(b, nc, cl, heads, p)
+    bh = bb.reshape(b, nc, cl, g, n)
+    ch = cc.reshape(b, nc, cl, g, n)
+    dt = jax.nn.softplus(dt + params["dt_bias"]).reshape(b, nc, cl, heads)
+    a = -jnp.exp(params["a_log"])  # (H,) negative
+    da = dt * a  # (B, nc, cl, H) log-decay per step
+
+    def chunk_step(state, inp):
+        xc, bc, cc_, dac, dtc = inp  # (B,cl,H,P) (B,cl,G,N) x2, (B,cl,H) x2
+        cum = jnp.cumsum(dac, axis=1)  # (B, cl, H)
+        total = cum[:, -1]  # (B, H)
+        xdt = xc * dtc[..., None]  # discretized input
+
+        # Intra-chunk (the "dual" quadratic form), f32 accumulators.
+        scores = jnp.einsum("bign,bjgn->bgij", cc_.astype(jnp.float32),
+                            bc.astype(jnp.float32))  # (B,G,cl,cl)
+        decay = cum[:, :, None, :] - cum[:, None, :, :]  # (B, i, j, H)
+        ii = jnp.arange(cl)
+        causal = ii[:, None] >= ii[None, :]
+        l_mat = jnp.where(causal[None, :, :, None], jnp.exp(decay), 0.0)
+        l_mat = l_mat.reshape(b, cl, cl, g, hg)
+        y_intra = jnp.einsum(
+            "bgij,bijgh,bjghp->bighp",
+            scores, l_mat.transpose(0, 1, 2, 3, 4),
+            xdt.astype(jnp.float32).reshape(b, cl, g, hg, p),
+        )
+
+        # Inter-chunk: contribution of the carried state.
+        c_dec = cc_.astype(jnp.float32)[:, :, :, None, :] * jnp.exp(
+            cum
+        ).reshape(b, cl, g, hg, 1)  # (B,cl,G,hg,N)
+        y_inter = jnp.einsum(
+            "bighn,bghnp->bighp", c_dec,
+            state.reshape(b, g, hg, n, p),
+        )
+
+        # State update for the next chunk.
+        b_dec = bc.astype(jnp.float32)[:, :, :, None, :] * jnp.exp(
+            total[:, None, :] - cum
+        ).reshape(b, cl, g, hg, 1)  # decay-to-end
+        new_state = jnp.einsum(
+            "bighn,bighp->bghnp", b_dec,
+            xdt.astype(jnp.float32).reshape(b, cl, g, hg, p),
+        ).reshape(b, heads, n, p)
+        new_state = new_state + jnp.exp(total)[..., None, None] * state
+
+        y = (y_intra + y_inter).reshape(b, cl, heads, p)
+        return new_state, y.astype(cd)
+
+    state0 = (
+        initial_state
+        if initial_state is not None
+        else jnp.zeros((b, heads, n, p), jnp.float32)
+    )
+    xs = (
+        xh.swapaxes(0, 1), bh.swapaxes(0, 1), ch.swapaxes(0, 1),
+        da.swapaxes(0, 1), dt.swapaxes(0, 1),
+    )
+    final_state, ys = jax.lax.scan(chunk_step, state0, xs)
+    y = ys.swapaxes(0, 1).reshape(b, nc * cl, heads, p)[:, :sl]
+    y = y + (params["d_skip"].astype(cd)[:, None]
+             * x[:, :sl].reshape(b, sl, heads, p))
+
+    y = y.reshape(b, sl, d_in)
+    y = rmsnorm(params["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps, cfg.bf16_norm_grad)
+    out = y @ params["out_proj"].astype(cd)
+    out = constrain(out, rules, "dp", None, None)
+    if return_state:
+        return out, final_state
+    return out
+
+
+def ssd_init_state(cfg: ModelConfig, batch: int) -> SSMState:
+    s = cfg.ssm
+    d_in, heads, conv_dim = _dims(cfg)
+    return SSMState(
+        conv=jnp.zeros((batch, s.d_conv - 1, conv_dim), cfg.cdtype),
+        ssm=jnp.zeros((batch, heads, s.d_state, s.head_dim), jnp.float32),
+    )
+
+
+def ssd_decode(
+    params: dict,
+    h: Array,  # (B, 1, d)
+    state: SSMState,
+    cfg: ModelConfig,
+    rules: ShardingRules,
+):
+    """O(1)-state decode step."""
+    s = cfg.ssm
+    cd = cfg.cdtype
+    b = h.shape[0]
+    d_in, heads, conv_dim = _dims(cfg)
+    g, n, p = s.n_groups, s.d_state, s.head_dim
+    hg = heads // g
+
+    z, x, bb, cc, dt = _proj_inputs(params, h, cfg)
+    xbc = jnp.concatenate([x, bb, cc], axis=-1)  # (B, 1, conv_dim)
+    window = jnp.concatenate([state.conv, xbc], axis=1)  # (B, d_conv, C)
+    kernel = jnp.concatenate(
+        [params["conv_x"], params["conv_b"], params["conv_c"]], axis=1
+    ).astype(cd)
+    conv_out = jax.nn.silu((window * kernel[None]).sum(axis=1))  # (B, C)
+    x_t, b_t, c_t = jnp.split(conv_out, [d_in, d_in + g * n], axis=-1)
+    new_conv = window[:, 1:]
+
+    dt_t = jax.nn.softplus(dt[:, 0] + params["dt_bias"])  # (B, H)
+    a = -jnp.exp(params["a_log"])
+    da = jnp.exp(dt_t * a)  # (B, H)
+
+    x_t = x_t.reshape(b, heads, p).astype(jnp.float32)
+    b_t = b_t.reshape(b, g, 1, n, 1).astype(jnp.float32)
+    c_t = c_t.reshape(b, g, 1, n).astype(jnp.float32)
+    inc = (
+        b_t * (dt_t.reshape(b, g, hg, 1, 1) * x_t.reshape(b, g, hg, 1, p))
+    ).reshape(b, heads, n, p)
+    new_ssm = da[..., None, None] * state.ssm + inc
+    y = jnp.einsum(
+        "bgn,bghnp->bghp", c_t[:, :, 0], new_ssm.reshape(b, g, hg, n, p)
+    ).reshape(b, heads, p)
+    y = y + params["d_skip"][:, None] * x_t
+    y = y.reshape(b, 1, d_in).astype(cd)
+    y = rmsnorm(params["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps, cfg.bf16_norm_grad)
+    out = y @ params["out_proj"].astype(cd)
+    return out, SSMState(conv=new_conv, ssm=new_ssm)

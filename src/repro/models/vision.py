@@ -1,0 +1,117 @@
+"""Llama-3.2-Vision-style VLM backbone: a decoder LM with gated
+cross-attention layers every ``cross.every_k_layers``-th layer.
+
+The vision tower is a stub per the assignment: ``batch["ctx"]`` carries
+precomputed patch embeddings (B, n_context_tokens, d_model).  Layers are
+scanned per *group* (k-1 self layers + 1 cross layer), so depth stays O(1)
+in the HLO.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ShardingRules
+from repro.models import blocks
+from repro.models.layers import (
+    chunked_cross_entropy,
+    embed,
+    embed_specs,
+    rmsnorm,
+    rmsnorm_spec,
+    unembed_matrix,
+)
+from repro.models.lm import _mixer_cache_spec, _stack_cache
+from repro.models.params import stack_specs
+
+Array = jax.Array
+
+
+def _group_shape(cfg: ModelConfig) -> tuple[int, int]:
+    k = cfg.cross.every_k_layers
+    assert cfg.n_layers % k == 0, "n_layers must divide into cross groups"
+    return cfg.n_layers // k, k - 1  # (n_groups, self layers per group)
+
+
+def vlm_specs(cfg: ModelConfig) -> dict:
+    n_groups, n_self = _group_shape(cfg)
+    group = {
+        "self": stack_specs(
+            lambda: blocks.layer_specs(cfg, mixer="attn", ffn="mlp"), n_self),
+        "cross": blocks.layer_specs(cfg, mixer="cross", ffn="mlp"),
+    }
+    return {
+        "embed": embed_specs(cfg),
+        "groups": stack_specs(lambda: group, n_groups),
+        "ln_f": rmsnorm_spec(cfg.d_model),
+    }
+
+
+def vlm_cache_specs(cfg: ModelConfig, batch: int, s_max: int) -> dict:
+    n_groups, n_self = _group_shape(cfg)
+    group = {
+        "self": _stack_cache(
+            {"mixer": _mixer_cache_spec(cfg, "attn", batch, s_max)}, n_self),
+        "cross": {"mixer": _mixer_cache_spec(cfg, "cross", batch, s_max)},
+    }
+    return _stack_cache(group, n_groups)
+
+
+def _run_groups(params, x, ctx, cfg, rules, *, mode, positions=None,
+                pos=None, caches=None):
+    def group_fn(gp, xx, gc):
+        def self_fn(p, h, c):
+            return blocks.layer_apply(
+                p, h, cfg=cfg, rules=rules, mixer="attn", ffn="mlp",
+                mode=mode, positions=positions, pos=pos, cache=c)
+
+        xx, aux, nc_self = blocks.scan_stack(
+            self_fn, gp["self"], xx, cfg,
+            cache=gc["self"] if gc is not None else None)
+        xx, aux2, nc_cross = blocks.layer_apply(
+            gp["cross"], xx, cfg=cfg, rules=rules, mixer="cross", ffn="mlp",
+            mode=mode, positions=positions, pos=pos,
+            cache=gc["cross"] if gc is not None else None, ctx=ctx)
+        nc = None
+        if nc_self is not None or nc_cross is not None:
+            nc = {"self": nc_self, "cross": nc_cross}
+        return xx, aux + aux2, nc
+
+    return blocks.scan_stack(group_fn, params["groups"], x, cfg, cache=caches)
+
+
+def vlm_loss(params, batch: dict, cfg: ModelConfig,
+             rules: ShardingRules) -> tuple[Array, dict]:
+    tokens, labels, ctx = batch["tokens"], batch["labels"], batch["ctx"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = embed(params["embed"], tokens, cfg, rules)
+    x, aux, _ = _run_groups(params, x, ctx, cfg, rules, mode="train",
+                            positions=positions)
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps, cfg.bf16_norm_grad)
+    ce = chunked_cross_entropy(x, unembed_matrix(params["embed"]), labels,
+                               cfg, rules)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def vlm_prefill(params, batch: dict, cfg: ModelConfig, rules: ShardingRules):
+    tokens, ctx = batch["tokens"], batch["ctx"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = embed(params["embed"], tokens, cfg, rules)
+    x, _, caches = _run_groups(params, x, ctx, cfg, rules, mode="prefill",
+                               positions=positions)
+    x = rmsnorm(params["ln_f"], x[:, -1:], cfg.norm_eps)
+    logits = x @ unembed_matrix(params["embed"]).astype(x.dtype)
+    return logits[:, 0], caches
+
+
+def vlm_decode_step(params, tokens: Array, caches, pos: Array,
+                    cfg: ModelConfig, rules: ShardingRules):
+    x = embed(params["embed"], tokens, cfg, rules)
+    x, _, new_caches = _run_groups(params, x, None, cfg, rules,
+                                   mode="decode", pos=pos, caches=caches)
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps, cfg.bf16_norm_grad)
+    logits = x @ unembed_matrix(params["embed"]).astype(x.dtype)
+    return logits[:, 0], new_caches

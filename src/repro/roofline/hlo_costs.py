@@ -1,0 +1,322 @@
+"""Loop-aware cost extraction from optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, regardless
+of trip count (verified in EXPERIMENTS.md Sec. Dry-run).  Every stack in
+this framework is a ``lax.scan`` (layers, query chunks, SSD chunks, CE
+chunks, microbatches), so the built-in numbers undercount by ~the model
+depth.  This module parses the post-optimization HLO, recovers each while
+loop's trip count from its ``cond`` computation (scan lowers to a counted
+loop: ``compare(iv, constant(N)), direction=LT``), and accumulates
+
+    flops             2 * prod(result_dims) * contraction_size per dot
+                      (+1 flop/element for non-dot op results -- the
+                      elementwise/fusion approximation, minor next to dots)
+    bytes             operand + result bytes per op, fusion-boundary only
+                      (fusion internals stay in registers/VMEM)
+    collective bytes  result sizes of all-reduce / all-gather /
+                      reduce-scatter / all-to-all / collective-permute
+
+with while bodies multiplied by their trip counts, recursively.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "s4": 1, "s8": 1, "u2": 1, "u4": 1, "u8": 1,
+    "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_ARRAY_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# op line:  %name = TYPE opcode(operands...), attrs
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$"
+)
+# computation header: "[ENTRY] %name (params...) -> type {"  (params may
+# contain nested tuple parens, so just grab the leading name token).
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _array_shapes(type_str: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dtype, dims in _ARRAY_RE.findall(type_str):
+        if dtype in _DTYPE_BYTES:
+            out.append((dtype, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _array_shapes(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _type_elems(type_str: str) -> int:
+    total = 0
+    for _, dims in _array_shapes(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # operand list + attributes (raw text)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list[Op]
+
+
+def parse_computations(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        if stripped.endswith("{") and "->" in stripped and "=" not in stripped.split("(")[0]:
+            mc = _COMP_RE.match(stripped)
+            if mc:
+                cur = Computation(mc.group(1), [])
+                comps[cur.name] = cur
+                continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        mo = _OP_RE.match(line)
+        if mo:
+            name, type_str, opcode, rest = mo.groups()
+            cur.ops.append(Op(name, type_str, opcode, rest))
+    return comps
+
+
+def _dot_flops(op: Op, shapes: dict[str, str]) -> float:
+    """2 * result_elems * contraction_size for dot ops."""
+    result_elems = _type_elems(op.type_str)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    operands = re.findall(r"%?([\w.\-]+)", op.rest.split(")")[0])
+    lhs_type = shapes.get(operands[0], "") if operands else ""
+    contraction = 1
+    if m and lhs_type:
+        arrs = _array_shapes(lhs_type)
+        if arrs:
+            dims = arrs[0][1]
+            for idx in m.group(1).split(","):
+                if idx and int(idx) < len(dims):
+                    contraction *= dims[int(idx)]
+    return 2.0 * result_elems * contraction
+
+
+def _called_computations(op: Op) -> list[str]:
+    out = []
+    for attr in ("body", "condition", "to_apply", "called_computations",
+                 "fused_computation"):
+        for m in re.finditer(attr + r"=%?([\w.\-]+)", op.rest):
+            out.append(m.group(1))
+    m = re.search(r"calls=%?([\w.\-]+)", op.rest)
+    if m:
+        out.append(m.group(1))
+    return out
+
+
+def _trip_count(cond: Computation, shapes: dict[str, str]) -> int:
+    """Counted-loop bound: the constant in the cond's ROOT compare."""
+    const_vals: dict[str, int] = {}
+    for op in cond.ops:
+        if op.opcode == "constant":
+            m = re.search(r"constant\((-?\d+)\)", op.type_str + " " + op.rest)
+            m2 = re.match(r"\s*(-?\d+)", op.rest)
+            if m:
+                const_vals[op.name] = int(m.group(1))
+            elif m2:
+                const_vals[op.name] = int(m2.group(1))
+    for op in reversed(cond.ops):
+        if op.opcode == "compare":
+            operands = re.findall(r"%?([\w.\-]+)", op.rest.split(")")[0])
+            for o in operands:
+                if o in const_vals and const_vals[o] > 0:
+                    return const_vals[o]
+    return 1
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective: dict | None = None
+
+    def __post_init__(self):
+        if self.collective is None:
+            self.collective = defaultdict(float)
+
+
+def analyze_hlo(hlo: str, entry: str | None = None) -> Costs:
+    comps = parse_computations(hlo)
+    # Global symbol table name -> type (names are unique per module).
+    shapes: dict[str, str] = {}
+    for comp in comps.values():
+        for op in comp.ops:
+            shapes[op.name] = op.type_str
+
+    # Identify fusion-internal computations: ops inside fused computations
+    # don't touch HBM; count their dot flops but not their bytes.
+    fused: set[str] = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode == "fusion":
+                for c in _called_computations(op):
+                    fused.add(c)
+
+    def _root_opcode(comp_name: str) -> str:
+        comp = comps.get(comp_name)
+        return comp.ops[-1].opcode if comp and comp.ops else ""
+
+    def _io_bytes(op: Op) -> float:
+        """HBM bytes charged to an op under the *unique-bytes* convention:
+        every tensor is charged once where it is produced (result bytes);
+        program inputs are charged at the entry parameters.  This is the
+        perfect-reuse roofline convention -- operand re-reads are assumed
+        cached/fused (operand+result counting double-charges every
+        intermediate at CPU fusion granularity, 2-3x pessimistic vs a
+        TPU-fused module).  Slice semantics: dynamic-update-slice touches
+        only the update region (buffer aliased in place), dynamic-slice
+        reads only the slice."""
+        roots = {op.opcode}
+        if op.opcode == "fusion":
+            for c in _called_computations(op):
+                roots.add(_root_opcode(c))
+        res = _type_bytes(op.type_str)
+        if "dynamic-update-slice" in roots:
+            operands = re.findall(r"%?([\w.\-]+)", op.rest.split(")")[0])
+            op_bytes = [_type_bytes(shapes.get(o, ""))
+                        for o in operands if o in shapes]
+            # write update only (the buffer operand/result is aliased).
+            return sum(op_bytes) - (max(op_bytes) if op_bytes else 0)
+        return res
+
+    memo: dict[tuple[str, bool, int], Costs] = {}
+
+    def _stack_scale(op: Op, trips: int) -> float:
+        """Scan-stacked buffer rule: inside a body executing ``trips``
+        times, an op whose result leading dim == trips is carrying a
+        (trips, ...) stacked accumulator -- each iteration touches one
+        slice, so its per-trip bytes are 1/trips of the full buffer
+        (XLA:TPU aliases these in place; XLA:CPU's scan transpose
+        materializes full-buffer adds, which would otherwise inflate the
+        memory term by ~depth x)."""
+        if trips <= 1:
+            return 1.0
+        arrs = _array_shapes(op.type_str)
+        if arrs and arrs[0][1] and arrs[0][1][0] == trips:
+            return 1.0 / trips
+        return 1.0
+
+    def comp_cost(name: str, in_fusion: bool, trips: int = 1) -> Costs:
+        key = (name, in_fusion, trips)
+        if key in memo:
+            return memo[key]
+        comp = comps.get(name)
+        total = Costs()
+        if comp is None:
+            memo[key] = total
+            return total
+        for op in comp.ops:
+            if op.opcode == "while":
+                body = cond = None
+                m = re.search(r"body=%?([\w.\-]+)", op.rest)
+                if m:
+                    body = m.group(1)
+                m = re.search(r"condition=%?([\w.\-]+)", op.rest)
+                if m:
+                    cond = m.group(1)
+                mt = _TRIP_RE.search(op.rest)  # XLA annotates counted loops
+                if mt:
+                    sub_trips = int(mt.group(1))
+                else:
+                    sub_trips = (_trip_count(comps[cond], shapes)
+                                 if cond in comps else 1)
+                sub = (comp_cost(body, in_fusion, sub_trips)
+                       if body else Costs())
+                total.flops += sub_trips * sub.flops
+                total.bytes += sub_trips * sub.bytes
+                for k, v in sub.collective.items():
+                    total.collective[k] += sub_trips * v
+                continue
+
+            if op.opcode == "parameter":
+                # Program inputs are read once (entry computation only --
+                # body/cond parameters are loop plumbing).
+                if name == entry_name:
+                    total.bytes += _type_bytes(op.type_str)
+                continue
+            if op.opcode in ("constant", "get-tuple-element", "tuple",
+                             "bitcast", "after-all"):
+                continue
+
+            is_coll = None
+            for kind in _COLLECTIVES:
+                if op.opcode == kind or op.opcode == kind + "-start":
+                    is_coll = kind
+                    break
+            if is_coll:
+                cbytes = _type_bytes(op.type_str)
+                # XLA:CPU promotes bf16 all-reduce accumulation to f32
+                # (reducer named *_promoted); TPU reduces bf16 on-wire, so
+                # charge the pre-promotion width (EXPERIMENTS.md Sec. Perf).
+                if ("promoted" in op.rest
+                        and re.search(r"\bf32\[", op.type_str)):
+                    cbytes /= 2.0
+                total.collective[is_coll] += cbytes
+
+            if op.opcode in ("dot", "dot-general"):
+                total.flops += _dot_flops(op, shapes)
+            elif op.opcode not in ("fusion", "call", "custom-call",
+                                   "conditional"):
+                # Elementwise / reduce / copy etc: ~1 flop per output elem.
+                total.flops += _type_elems(op.type_str)
+
+            # Bytes: only at non-fusion-internal boundaries.
+            if not in_fusion and op.opcode != "fusion":
+                total.bytes += _io_bytes(op) * _stack_scale(op, trips)
+
+            # Recurse into called computations (fusions count flops only).
+            for c in _called_computations(op):
+                if c in comps and c != name:
+                    sub = comp_cost(c, in_fusion or c in fused
+                                    or op.opcode == "fusion", 1)
+                    total.flops += sub.flops
+                    total.bytes += sub.bytes
+                    for k, v in sub.collective.items():
+                        total.collective[k] += v
+            if op.opcode == "fusion" and not in_fusion:
+                total.bytes += _io_bytes(op) * _stack_scale(op, trips)
+        memo[key] = total
+        return total
+
+    if entry is None:
+        # ENTRY computation: the one named in "ENTRY %name" line.
+        m = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo)
+        entry = m.group(1) if m else next(iter(comps))
+    entry_name = entry
+    return comp_cost(entry, False)

@@ -1,0 +1,93 @@
+"""Batched serving engine: prefill once, then jit-compiled decode steps.
+
+Slot-based continuous batching lite: a fixed batch of request slots decodes
+in lock-step; finished slots are refilled by the caller between calls.
+Sampling: greedy or temperature.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import ShardingRules
+from repro.models import Model
+from repro.models import params as pm
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    max_new_tokens: int = 64
+    temperature: float = 0.0  # 0 => greedy
+    eos_id: int = -1  # -1 => never stop early
+
+
+def _sample(logits: Array, key: Array, temperature: float) -> Array:
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+
+
+def generate(
+    model: Model,
+    params,
+    prompt: Array,  # (B, S_prompt) int32
+    rules: ShardingRules,
+    scfg: ServeConfig = ServeConfig(),
+    key: Array | None = None,
+    s_max: int | None = None,
+) -> Array:
+    """Greedy/temperature decode.  Returns (B, max_new_tokens)."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    b, s_prompt = prompt.shape
+    s_max = s_max or (s_prompt + scfg.max_new_tokens)
+
+    # Prefill into caches sized for the full run: caches built at s_max and
+    # the prompt's cache entries written by a prefill sized to the prompt,
+    # then padded out (prefill caches are (B, S_prompt, ...)).
+    logits, caches = jax.jit(
+        lambda p, t: model.prefill(p, {"tokens": t}, rules)
+    )(params, prompt)
+    caches = _pad_caches(model, caches, b, s_prompt, s_max)
+
+    decode = jax.jit(
+        lambda p, t, c, pos: model.decode_step(p, t, c, pos, rules))
+
+    def body(carry, _):
+        tok, caches, pos, key = carry
+        key, sub = jax.random.split(key)
+        logits, caches = decode(params, tok, caches, pos)
+        nxt = _sample(logits, sub, scfg.temperature)[:, None]
+        return (nxt, caches, pos + 1, key), nxt[:, 0]
+
+    first = _sample(logits, key, scfg.temperature)[:, None]
+    carry = (first, caches, jnp.asarray(s_prompt, jnp.int32), key)
+    outs = [first[:, 0]]
+    for _ in range(scfg.max_new_tokens - 1):
+        carry, tok = body(carry, None)
+        outs.append(tok)
+    return jnp.stack(outs, axis=1)
+
+
+def _pad_caches(model: Model, caches, b: int, s_now: int, s_max: int):
+    """Grow prefill caches (B, s_now, ...) to decode capacity (B, s_max, ...).
+
+    Sequence-extent leaves are identified against the cache specs; SSM
+    states and cross-attention K/V pass through unchanged."""
+    spec_now = model.cache_specs(b, s_now)
+    spec_max = model.cache_specs(b, s_max)
+
+    def pad(leaf, sn, sm):
+        target = sm.shape
+        if leaf.shape == target:
+            return leaf
+        pads = [(0, t - c) for c, t in zip(leaf.shape, target)]
+        return jnp.pad(leaf, pads)
+
+    return jax.tree.map(pad, caches, pm.shape_tree(spec_now),
+                        pm.shape_tree(spec_max))

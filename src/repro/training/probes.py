@@ -1,0 +1,54 @@
+"""Activation-outlier RPCA probe (DESIGN.md Sec. 3, item 3).
+
+The classic deep-learning use of RPCA: a hidden-state matrix
+X (d_model x tokens) decomposes into low-rank structure (the features the
+layer actually uses) + sparse outliers (the heavy-hitter activations that
+break quantization).  The token dim is exactly the paper's column-sharded
+"n": on a mesh, each data shard is a client and the probe runs the real
+DCF-PCA consensus; on one device it uses the simulated engine.
+
+    stats = activation_probe(hidden, rank=8)
+    stats["outlier_fraction"], stats["energy_low_rank"], ...
+
+Used for monitoring (outlier channels drifting up is an early-warning
+signal for bf16/int8 serving quality).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dcf_pca
+from repro.core.factorized import DCFConfig
+
+Array = jax.Array
+
+
+def activation_probe(
+    hidden: Array,  # (..., tokens, d_model) -- leading dims flattened
+    rank: int = 8,
+    num_clients: int = 8,
+    outer_iters: int = 40,
+) -> dict[str, Array]:
+    """Split activations into low-rank + sparse and report summary stats."""
+    x = hidden.reshape(-1, hidden.shape[-1]).astype(jnp.float32).T
+    d, t = x.shape  # (d_model, tokens): paper layout, columns = tokens
+    t_trim = (t // num_clients) * num_clients
+    x = x[:, :t_trim]
+
+    cfg = DCFConfig.tuned(rank, outer_iters=outer_iters)
+    res = dcf_pca(x, cfg, num_clients=num_clients)
+
+    total = jnp.sum(x * x) + 1e-30
+    e_low = jnp.sum(res.l * res.l) / total
+    e_sparse = jnp.sum(res.s * res.s) / total
+    nnz = jnp.mean((jnp.abs(res.s) > 0).astype(jnp.float32))
+    # outlier channels: rows of S with outsized energy
+    row_energy = jnp.sum(res.s * res.s, axis=1)
+    return {
+        "energy_low_rank": e_low,
+        "energy_sparse": e_sparse,
+        "outlier_fraction": nnz,
+        "top_outlier_channels": jnp.argsort(-row_energy)[:8],
+        "residual": 1.0 - e_low - e_sparse,
+    }

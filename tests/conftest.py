@@ -1,0 +1,10 @@
+"""Shared fixtures.  NOTE: device count must stay 1 here (smoke tests and
+benches see a single CPU device); multi-device tests spawn subprocesses
+with their own XLA_FLAGS (see tests/test_multidevice.py)."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

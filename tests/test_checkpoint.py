@@ -1,0 +1,79 @@
+"""Fault-tolerance: checkpoint save/restore, crash safety, GC, elastic."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.training import checkpoint as ckpt
+
+
+def _tree(key, scale=1.0):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w": jax.random.normal(k1, (8, 16)) * scale,
+        "nested": {"b": jax.random.normal(k2, (4,)) * scale,
+                   "step": jnp.asarray(3, jnp.int32)},
+    }
+
+
+def test_roundtrip(tmp_path):
+    tree = _tree(jax.random.PRNGKey(0))
+    ckpt.save(str(tmp_path), 10, tree, mesh_shape=(2, 4))
+    restored, step = ckpt.restore(str(tmp_path), tree)
+    assert step == 10
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        tree, restored)
+
+
+def test_latest_and_gc(tmp_path):
+    tree = _tree(jax.random.PRNGKey(1))
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(str(tmp_path), s, tree, keep_last=2)
+    assert ckpt.latest_step(str(tmp_path)) == 5
+    dirs = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert dirs == ["step_00000004", "step_00000005"]
+
+
+def test_crash_safety(tmp_path):
+    """A half-written .tmp dir must never shadow the durable checkpoint."""
+    tree = _tree(jax.random.PRNGKey(2))
+    ckpt.save(str(tmp_path), 7, tree)
+    # Simulate a crash mid-save of step 8: orphaned tmp dir, no rename.
+    os.makedirs(tmp_path / "step_00000008.tmp")
+    (tmp_path / "step_00000008.tmp" / "garbage").write_text("x")
+    restored, step = ckpt.restore(str(tmp_path), tree)
+    assert step == 7
+    # Next successful save cleans the orphan.
+    ckpt.save(str(tmp_path), 9, tree)
+    assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+
+
+def test_restore_structure_mismatch(tmp_path):
+    tree = _tree(jax.random.PRNGKey(3))
+    ckpt.save(str(tmp_path), 1, tree)
+    bad = {"w": tree["w"]}
+    with pytest.raises(ValueError, match="leaves"):
+        ckpt.restore(str(tmp_path), bad)
+
+
+def test_elastic_restore_resharding(tmp_path):
+    """A checkpoint written under one sharding restores under another
+    (single device here: exercise the device_put path with explicit
+    shardings)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    tree = _tree(jax.random.PRNGKey(4))
+    ckpt.save(str(tmp_path), 2, tree, mesh_shape=(4, 2))
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    shardings = jax.tree.map(
+        lambda _: NamedSharding(mesh, P()), tree)
+    restored, _ = ckpt.restore(str(tmp_path), tree, shardings=shardings)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        tree, restored)

@@ -1,0 +1,67 @@
+"""Flash-attention Pallas kernel vs the naive softmax oracle: shape/dtype
+sweep in interpret mode (the assignment's per-kernel validation contract)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+
+
+def naive(q, k, v, causal, scale):
+    s = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqs,bshd->bqhd", p, v.astype(jnp.float32))
+
+
+CASES = [
+    # (b, sq, skv, h, d, causal, bq, bk)
+    (2, 128, 128, 4, 64, True, 64, 64),
+    (1, 100, 100, 2, 32, True, 64, 64),  # non-divisible -> padding path
+    (2, 64, 200, 2, 64, False, 32, 64),  # cross-attention, skv > sq
+    (1, 256, 256, 3, 128, True, 128, 64),  # asymmetric blocks
+    (1, 32, 96, 1, 16, False, 32, 32),
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_flash_matches_naive(case):
+    b, sq, skv, h, d, causal, bq, bk = case
+    key = jax.random.fold_in(jax.random.PRNGKey(0), sq * skv)
+    kq, kk, kv_ = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, sq, h, d))
+    k = jax.random.normal(kk, (b, skv, h, d))
+    v = jax.random.normal(kv_, (b, skv, h, d))
+    got = flash_attention(q, k, v, causal=causal, bq=bq, bk=bk)
+    want = naive(q, k, v, causal, d**-0.5)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_bf16():
+    key = jax.random.PRNGKey(3)
+    kq, kk, kv_ = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (2, 128, 2, 64), jnp.bfloat16)
+    k = jax.random.normal(kk, (2, 128, 2, 64), jnp.bfloat16)
+    v = jax.random.normal(kv_, (2, 128, 2, 64), jnp.bfloat16)
+    got = flash_attention(q, k, v, causal=True, bq=64, bk=64)
+    assert got.dtype == jnp.bfloat16
+    want = naive(q, k, v, True, 64**-0.5)
+    np.testing.assert_allclose(got.astype(np.float32), want,
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_flash_block_size_invariance():
+    key = jax.random.PRNGKey(4)
+    kq, kk, kv_ = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (1, 192, 2, 32))
+    k = jax.random.normal(kk, (1, 192, 2, 32))
+    v = jax.random.normal(kv_, (1, 192, 2, 32))
+    base = flash_attention(q, k, v, causal=True, bq=64, bk=64)
+    for bq, bk in [(32, 96), (96, 32), (192, 192)]:
+        other = flash_attention(q, k, v, causal=True, bq=bq, bk=bk)
+        np.testing.assert_allclose(base, other, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,73 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode on CPU) vs the
+pure-jnp oracles in repro.kernels.ref."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+SHAPES = [
+    (64, 48, 4),      # tiny, non-aligned r
+    (256, 256, 16),   # block-aligned
+    (300, 200, 17),   # nothing divides the block sizes
+    (512, 130, 32),   # n not lane-aligned
+    (128, 512, 128),  # full-lane r
+]
+DTYPES = [jnp.float32]
+
+
+def _problem(m, n, r, dtype, seed=0):
+    k = jax.random.PRNGKey(seed)
+    ku, kv, km = jax.random.split(k, 3)
+    u = jax.random.normal(ku, (m, r), dtype)
+    v = jax.random.normal(kv, (n, r), dtype)
+    mat = jax.random.normal(km, (m, n), dtype) * 4.0
+    return u, v, mat
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize(
+    "name", ["huber_contract_v", "huber_contract_u", "residual_shrink"]
+)
+def test_kernel_matches_oracle(shape, dtype, name):
+    m, n, r = shape
+    u, v, mat = _problem(m, n, r, dtype)
+    lam = 0.9
+    got = getattr(ops, name)(u, v, mat, lam, impl="pallas")
+    want = getattr(ref, name)(u, v, mat, lam)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("lam", [0.0, 0.3, 5.0])
+def test_shrink_psi_identity(lam):
+    """S + Psi must reconstruct the residual exactly (soft-threshold
+    complement identity, paper Eqs. 16/32)."""
+    u, v, mat = _problem(192, 160, 9, jnp.float32)
+    s, psi = ops.residual_shrink_psi(u, v, mat, lam, impl="pallas")
+    resid = mat - u @ v.T
+    np.testing.assert_allclose(np.asarray(s) + np.asarray(psi),
+                               np.asarray(resid), rtol=2e-5, atol=2e-5)
+    assert float(jnp.max(jnp.abs(psi))) <= lam + 1e-5
+
+
+def test_kernel_block_size_invariance():
+    """Result must not depend on the BlockSpec tiling."""
+    from repro.kernels import huber_contract as hc
+
+    u, v, mat = _problem(300, 260, 12, jnp.float32)
+    lam = 1.1
+    base = hc.huber_contract_v(u, v, mat, lam, bm=256, bn=256)
+    for bm, bn in [(128, 128), (256, 128), (128, 512)]:
+        other = hc.huber_contract_v(u, v, mat, lam, bm=bm, bn=bn)
+        np.testing.assert_allclose(base, other, rtol=1e-5, atol=1e-5)
+
+
+def test_ref_impl_dispatch():
+    u, v, mat = _problem(64, 64, 4, jnp.float32)
+    a = ops.huber_contract_u(u, v, mat, 0.5, impl="ref")
+    b = ops.huber_contract_u(u, v, mat, 0.5, impl="pallas")
+    np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+    with pytest.raises(ValueError):
+        ops.huber_contract_u(u, v, mat, 0.5, impl="bogus")

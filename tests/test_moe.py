@@ -1,0 +1,76 @@
+"""MoE dispatch correctness: grouped-capacity and gather paths vs a dense
+all-experts reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.distributed.sharding import SINGLE_DEVICE
+from repro.models import moe as M
+from repro.models import params as pm
+
+
+def dense_reference(params, x, cfg):
+    """Compute every expert densely, combine with the top-k weights."""
+    w, ids, _ = M._route(params, x, cfg)
+    cd = cfg.cdtype
+    g = jnp.einsum("bsd,edf->besf", x, params["w_gate"].astype(cd))
+    u = jnp.einsum("bsd,edf->besf", x, params["w_up"].astype(cd))
+    h = jax.nn.silu(g) * u
+    out = jnp.einsum("besf,efd->besd", h, params["w_down"].astype(cd))
+    onehot = jax.nn.one_hot(ids, cfg.moe.num_experts, dtype=out.dtype)
+    comb = jnp.einsum("bske,e...->bske", onehot,
+                      jnp.ones((cfg.moe.num_experts,), out.dtype))
+    y = jnp.einsum("besd,bske,bsk->bsd", out, onehot, w.astype(out.dtype))
+    return y
+
+
+def _setup(capacity_factor=8.0):
+    cfg = get_smoke_config("qwen2-moe-a2.7b")
+    # Huge capacity so nothing drops -> exact equivalence.
+    moe_cfg = cfg.moe.__class__(
+        num_experts=cfg.moe.num_experts, top_k=cfg.moe.top_k,
+        d_ff_expert=cfg.moe.d_ff_expert, num_shared=0, d_ff_shared=0,
+        capacity_factor=capacity_factor)
+    cfg = cfg.replace(moe=moe_cfg, compute_dtype="float32",
+                      param_dtype="float32")
+    specs = M.moe_specs(cfg)
+    params = pm.materialize(specs, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 40, cfg.d_model))
+    return cfg, params, x
+
+
+def test_grouped_matches_dense():
+    cfg, params, x = _setup()
+    y, aux = M.moe_ffn(params, x, cfg, SINGLE_DEVICE, dispatch="grouped")
+    want = dense_reference(params, x, cfg)
+    np.testing.assert_allclose(y, want, rtol=2e-4, atol=2e-4)
+    assert jnp.isfinite(aux)
+
+
+def test_gather_matches_dense():
+    cfg, params, x = _setup()
+    y, _ = M.moe_ffn(params, x, cfg, SINGLE_DEVICE, dispatch="gather")
+    want = dense_reference(params, x, cfg)
+    np.testing.assert_allclose(y, want, rtol=2e-4, atol=2e-4)
+
+
+def test_grouped_matches_gather_decode_shape():
+    cfg, params, _ = _setup()
+    x = jax.random.normal(jax.random.PRNGKey(2), (8, 1, cfg.d_model))
+    y_gather, _ = M.moe_ffn(params, x, cfg, SINGLE_DEVICE)  # auto->gather
+    y_group, _ = M.moe_ffn(params, x, cfg, SINGLE_DEVICE,
+                           dispatch="grouped")
+    np.testing.assert_allclose(y_gather, y_group, rtol=2e-4, atol=2e-4)
+
+
+def test_capacity_dropping_bounded():
+    """With tight capacity some tokens drop; output stays finite and the
+    kept fraction dominates."""
+    cfg, params, x = _setup(capacity_factor=1.0)
+    y, _ = M.moe_ffn(params, x, cfg, SINGLE_DEVICE, dispatch="grouped")
+    want = dense_reference(params, x, cfg)
+    assert jnp.all(jnp.isfinite(y))
+    # Most tokens unaffected by dropping at cf=1 with near-uniform routing.
+    close = jnp.mean(jnp.abs(y - want) < 1e-3 * (1 + jnp.abs(want)))
+    assert float(close) > 0.5

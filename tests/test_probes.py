@@ -1,0 +1,22 @@
+"""Activation-outlier RPCA probe: recovers planted structure."""
+import jax
+import jax.numpy as jnp
+
+from repro.training.probes import activation_probe
+
+
+def test_probe_recovers_planted_structure():
+    key = jax.random.PRNGKey(0)
+    h = jax.random.normal(key, (4, 64, 32))
+    u = jax.random.normal(jax.random.PRNGKey(1), (32, 3))
+    planted_frac = 0.01
+    outliers = jnp.where(
+        jax.random.uniform(jax.random.PRNGKey(2), h.shape) < planted_frac,
+        50.0, 0.0)
+    h = (h @ u @ u.T) + outliers
+
+    stats = activation_probe(h, rank=4, num_clients=4, outer_iters=30)
+    assert float(stats["energy_low_rank"]) > 0.7
+    assert abs(float(stats["outlier_fraction"]) - planted_frac) < 0.01
+    assert float(stats["residual"]) < 0.1
+    assert stats["top_outlier_channels"].shape == (8,)

@@ -1,0 +1,111 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from hypothesis.extra.numpy import arrays
+
+from repro.core import ops as cops
+from repro.core import problems as prob
+
+FLOATS = st.floats(-50.0, 50.0, allow_nan=False, width=32)
+
+
+def small_mats(max_side=12):
+    return arrays(
+        np.float32,
+        st.tuples(st.integers(1, max_side), st.integers(1, max_side)),
+        elements=FLOATS,
+    )
+
+
+@settings(max_examples=40, deadline=None)
+@given(small_mats(), st.floats(0.0, 10.0, allow_nan=False))
+def test_soft_threshold_properties(x, lam):
+    """prox of lam||.||_1: shrinks toward 0, never overshoots, thresholds."""
+    s = np.asarray(cops.soft_threshold(jnp.asarray(x), lam))
+    assert np.all(np.abs(s) <= np.abs(x) + 1e-6)
+    assert np.all(np.abs(s) <= np.maximum(np.abs(x) - lam, 0) + 1e-4)
+    assert np.all((np.abs(x) <= lam) <= (np.abs(s) <= 1e-6))
+    # complement identity: x - prox = clip(x, +-lam)
+    np.testing.assert_allclose(
+        x - s, np.asarray(cops.huber_clip(jnp.asarray(x), lam)),
+        rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(small_mats(), st.floats(0.01, 10.0, allow_nan=False))
+def test_huber_loss_bounds(x, lam):
+    """0 <= H_lam(x) <= 1/2 x^2 elementwise-summed; quadratic near 0."""
+    h = float(cops.huber_loss(jnp.asarray(x), lam))
+    quad = 0.5 * float(np.sum(x.astype(np.float64) ** 2))
+    assert -1e-4 <= h <= quad + max(1e-4, 1e-6 * quad)
+
+
+@settings(max_examples=30, deadline=None)
+@given(small_mats(10), st.floats(0.0, 20.0, allow_nan=False))
+def test_svt_shrinks_nuclear_norm(x, tau):
+    if min(x.shape) < 1:
+        return
+    out, sv = cops.svt(jnp.asarray(x), tau)
+    sv_in = np.linalg.svd(x, compute_uv=False)
+    assert float(np.sum(np.asarray(sv))) <= float(np.sum(sv_in)) + 1e-3
+    # SVT never increases any singular value.
+    sv_out = np.linalg.svd(np.asarray(out), compute_uv=False)
+    k = min(len(sv_out), len(sv_in))
+    assert np.all(sv_out[:k] <= sv_in[:k] + 1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 8), st.integers(1, 5))
+def test_split_merge_roundtrip(m, ni, e):
+    n = ni * e
+    x = np.arange(m * n, dtype=np.float32).reshape(m, n)
+    blocks = prob.split_columns(jnp.asarray(x), e)
+    assert blocks.shape == (e, m, ni)
+    np.testing.assert_array_equal(np.asarray(prob.merge_columns(blocks)), x)
+    # block i must equal the i-th column slice
+    np.testing.assert_array_equal(
+        np.asarray(blocks[0]), x[:, :ni])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_rope_preserves_norm(seed):
+    """Rotations preserve per-head vector norms."""
+    from repro.models.layers import apply_rope
+
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (2, 5, 3, 8))
+    pos = jnp.broadcast_to(jnp.arange(5), (2, 5))
+    y = apply_rope(x, pos, 1e4)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 64), st.integers(1, 16),
+       st.floats(0.1, 5.0))
+def test_inner_ridge_optimality(m, n, r, lam):
+    """altmin's V-update solves Eq. (15) exactly: residual of the normal
+    equations is ~0 at the returned V."""
+    if r > min(m, n):
+        return
+    key = jax.random.PRNGKey(m * 1000 + n * 10 + r)
+    ku, kv, km = jax.random.split(key, 3)
+    u = jax.random.normal(ku, (m, r))
+    v0 = jax.random.normal(kv, (n, r))
+    mat = jax.random.normal(km, (m, n)) * 3
+    rho = 0.1
+    from repro.core.factorized import inner_solve_altmin
+    from repro.kernels import ref
+
+    v1 = inner_solve_altmin(u, v0, mat, rho, lam, sweeps=1, impl="ref")
+    # At v1 (given S(v0) eliminated): (U^T U + rho I) V^T = U^T (M - S(v0))
+    s0 = ref.residual_shrink(u, v0, mat, lam)
+    lhs = (u.T @ u + rho * jnp.eye(r)) @ v1.T
+    rhs = u.T @ (mat - s0)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=2e-3, atol=2e-3)

