@@ -21,6 +21,7 @@ from benchmarks import (  # noqa: E402
     grad_compress_bench,
     kernel_micro,
     roofline_summary,
+    solver_runtime_bench,
     table1_upper_rank,
 )
 
@@ -32,6 +33,7 @@ BENCHES = {
     "kernel": kernel_micro,
     "grad_compress": grad_compress_bench,
     "roofline": roofline_summary,
+    "runtime": solver_runtime_bench,
 }
 
 

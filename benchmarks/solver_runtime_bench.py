@@ -1,0 +1,133 @@
+"""Unified solver runtime benchmark (framework bench, beyond-paper).
+
+Measures the three capabilities the runtime adds over the fixed-length
+hand-rolled loops:
+
+  (a) convergence-controlled early stopping: rounds + wall time to reach
+      seed-level recovery error vs the fixed ``T`` budget;
+  (b) batched multi-tenant throughput: ``solve_batch`` over B concurrent
+      problems vs B serial solves (plus the max result deviation);
+  (c) warm-started refresh solves: rounds to re-converge after a small
+      data update, cold vs warm ``(U, V)``.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    DCFConfig, RunConfig, dcf_pca, dcf_pca_batch, generate_problem,
+    relative_error,
+)
+
+
+def _timed(fn, *args, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out.l)
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    jax.block_until_ready(out.l)
+    return out, time.perf_counter() - t0
+
+
+def run(n=160, rank=8, clients=8, batch=8, seed=0):
+    rows = []
+    cfg = DCFConfig.tuned(rank)
+    p = generate_problem(jax.random.PRNGKey(seed), n, n, rank, 0.05)
+
+    # (a) fixed-length vs convergence-controlled early exit.
+    fixed, t_fixed = _timed(dcf_pca, p.m_obs, cfg, clients)
+    early, t_early = _timed(
+        dcf_pca, p.m_obs, cfg, clients,
+        run=RunConfig(mode="chunk", tol=5e-4, chunk_size=10),
+    )
+    err_fixed = float(relative_error(fixed.l, fixed.s, p.l0, p.s0))
+    err_early = float(relative_error(early.l, early.s, p.l0, p.s0))
+    rows.append({
+        "bench": "runtime", "case": "fixed", "n": n,
+        "rounds": int(fixed.stats.rounds), "seconds": round(t_fixed, 4),
+        "err": err_fixed,
+    })
+    rows.append({
+        "bench": "runtime", "case": "early_stop", "n": n,
+        "rounds": int(early.stats.rounds), "seconds": round(t_early, 4),
+        "err": err_early,
+        "speedup": round(t_fixed / max(t_early, 1e-9), 2),
+    })
+
+    # (b) batched multi-tenant throughput vs serial solves.
+    probs = [
+        generate_problem(jax.random.PRNGKey(seed + 1 + i), n, n, rank, 0.05)
+        for i in range(batch)
+    ]
+    m_batch = jnp.stack([q.m_obs for q in probs])
+    keys = jax.random.split(jax.random.PRNGKey(seed + 100), batch)
+
+    rb, t_batch = _timed(dcf_pca_batch, m_batch, cfg, clients, keys)
+    serial = []
+    t0 = time.perf_counter()
+    for i in range(batch):
+        r = dcf_pca(probs[i].m_obs, cfg, clients, key=keys[i])
+        jax.block_until_ready(r.l)
+        serial.append(r)
+    t_serial = time.perf_counter() - t0
+    max_dev = max(
+        float(jnp.max(jnp.abs(rb.l[i] - serial[i].l))) for i in range(batch)
+    )
+    errs = [
+        float(relative_error(rb.l[i], rb.s[i], probs[i].l0, probs[i].s0))
+        for i in range(batch)
+    ]
+    rows.append({
+        "bench": "runtime", "case": f"serial_x{batch}", "n": n,
+        "seconds": round(t_serial, 4),
+        "problems_per_s": round(batch / t_serial, 2),
+    })
+    rows.append({
+        "bench": "runtime", "case": f"solve_batch_x{batch}", "n": n,
+        "seconds": round(t_batch, 4),
+        "problems_per_s": round(batch / t_batch, 2),
+        "speedup": round(t_serial / max(t_batch, 1e-9), 2),
+        "max_dev_vs_serial": max_dev,
+        "worst_err": max(errs),
+    })
+
+    # (c) warm-started refresh after a small data update.
+    run_cfg = RunConfig(mode="while", tol=5e-4)
+    cold = dcf_pca(p.m_obs, cfg, clients, run=run_cfg)
+    pert = p.m_obs + 0.01 * jax.random.normal(
+        jax.random.PRNGKey(seed + 999), p.m_obs.shape
+    )
+    recold, t_recold = _timed(dcf_pca, pert, cfg, clients, run=run_cfg)
+    rewarm, t_rewarm = _timed(
+        dcf_pca, pert, cfg, clients, run=run_cfg, warm=(cold.u, cold.v)
+    )
+    rows.append({
+        "bench": "runtime", "case": "refresh_cold", "n": n,
+        "rounds": int(recold.stats.rounds), "seconds": round(t_recold, 4),
+        "err": float(relative_error(recold.l, recold.s, p.l0, p.s0)),
+    })
+    rows.append({
+        "bench": "runtime", "case": "refresh_warm", "n": n,
+        "rounds": int(rewarm.stats.rounds), "seconds": round(t_rewarm, 4),
+        "err": float(relative_error(rewarm.l, rewarm.s, p.l0, p.s0)),
+        "rounds_saved": int(recold.stats.rounds) - int(rewarm.stats.rounds),
+    })
+    return rows
+
+
+def main(full=False):
+    rows = run(n=500 if full else 160, batch=16 if full else 8)
+    for r in rows:
+        derived = ",".join(
+            f"{k}={v}" for k, v in r.items()
+            if k not in ("bench", "case", "n", "seconds")
+        )
+        print(f"runtime/{r['case']}_n{r['n']},{r['seconds']*1e6:.0f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

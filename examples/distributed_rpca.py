@@ -13,6 +13,7 @@ over a "model" axis as well (the beyond-paper 2-D extension).
 import jax
 
 from repro.core import DCFConfig, dcf_pca_sharded, generate_problem, relative_error
+from repro.launch.mesh import make_compat_mesh
 
 
 def main():
@@ -22,15 +23,13 @@ def main():
                                sparsity=0.05)
     cfg = DCFConfig.tuned(rank=8)
 
-    mesh = jax.make_mesh((n_dev,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_compat_mesh((n_dev,), ("data",))
     r = dcf_pca_sharded(problem.m_obs, cfg, mesh, data_axes=("data",))
     err = relative_error(r.l, r.s, problem.l0, problem.s0)
     print(f"1-D column-sharded ({n_dev} clients): err={float(err):.2e}")
 
     if n_dev >= 4 and n_dev % 2 == 0:
-        mesh2 = jax.make_mesh((n_dev // 2, 2), ("data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh2 = make_compat_mesh((n_dev // 2, 2), ("data", "model"))
         r2 = dcf_pca_sharded(problem.m_obs, cfg, mesh2,
                              data_axes=("data",), model_axis="model")
         err2 = relative_error(r2.l, r2.s, problem.l0, problem.s0)

@@ -1,12 +1,15 @@
 """Quickstart: recover a low-rank + sparse decomposition with DCF-PCA.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Also demos the unified solver runtime: convergence-controlled early
+stopping (``run=RunConfig(...)``) and warm-started refresh solves.
 """
 import jax
 
 from repro.core import (
-    DCFConfig, dcf_pca, generate_problem, low_rank_relative_error,
-    relative_error,
+    DCFConfig, RunConfig, dcf_pca, generate_problem,
+    low_rank_relative_error, relative_error,
 )
 
 
@@ -25,6 +28,22 @@ def main():
     print(f"low-rank relative error: {float(lerr):.2e}")
     print(f"consensus factor U: {result.u.shape}, per-client V: {result.v.shape}")
     assert err < 1e-4
+
+    # Early stopping: stop when the consensus factor settles instead of
+    # always paying the full outer_iters budget.
+    early = dcf_pca(problem.m_obs, cfg, num_clients=10,
+                    run=RunConfig(mode="chunk", tol=5e-4, chunk_size=10))
+    e_err = relative_error(early.l, early.s, problem.l0, problem.s0)
+    print(f"early stop: {int(early.stats.rounds)}/{cfg.outer_iters} rounds, "
+          f"err {float(e_err):.2e}")
+
+    # Warm-started refresh: new data, prior factors => a handful of rounds.
+    refreshed_m = problem.m_obs + 0.01 * jax.random.normal(
+        jax.random.PRNGKey(1), problem.m_obs.shape)
+    warm = dcf_pca(refreshed_m, cfg, num_clients=10,
+                   run=RunConfig(mode="while", tol=5e-4),
+                   warm=(early.u, early.v))
+    print(f"warm refresh: {int(warm.stats.rounds)} rounds")
 
 
 if __name__ == "__main__":

@@ -29,6 +29,8 @@ from repro.models import get_model
 from repro.models import params as pm
 from repro.training import optimizer as opt
 from repro.training.data import SyntheticData
+from repro.compat import shard_map_compat
+from repro.launch.mesh import make_compat_mesh
 
 CORRUPT_WORKER = 3
 CORRUPT_DENSITY = 0.05
@@ -81,11 +83,11 @@ def make_step(model, mesh, mode, ocfg, rules):
         bspecs = jax.tree.map(
             lambda x: P(("data",), *(None,) * (x.ndim - 1)), batch)
         especs = jax.tree.map(lambda _: P("data"), err)
-        grads, err, loss = jax.shard_map(
-            per_worker, mesh=mesh,
-            in_specs=(pspecs, especs, bspecs, P()),
-            out_specs=(pspecs, especs, P()),
-            axis_names=frozenset({"data"}), check_vma=False,
+        grads, err, loss = shard_map_compat(
+            per_worker, mesh,
+            (pspecs, especs, bspecs, P()),
+            (pspecs, especs, P()),
+            manual_axes=("data",),
         )(params, err, batch, key)
         params, state, _ = opt.update(ocfg, grads, state, params)
         return params, err, state, loss
@@ -97,8 +99,7 @@ def run(mode: str, steps=25):
     cfg = get_smoke_config("tinyllama-1.1b")
     model = get_model(cfg)
     n = jax.device_count()
-    mesh = jax.make_mesh((n,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_compat_mesh((n,), ("data",))
     ocfg = opt.AdamWConfig(lr=2e-3, warmup_steps=2, total_steps=steps,
                            weight_decay=0.0)
     params = pm.materialize(model.specs(), jax.random.PRNGKey(0))

@@ -1,0 +1,56 @@
+"""Multi-tenant RPCA serving: the slot-based batched endpoint.
+
+    PYTHONPATH=src python examples/rpca_serving.py
+
+Ten tenants submit 200x200 decomposition jobs through a 4-slot service;
+the slots advance in lock-step through one vmapped jitted program
+(continuous-batching lite, exactly the LM engine's decode-slot lifecycle),
+converged tenants freeze, and freed slots are refilled from the queue.
+One tenant then streams an updated matrix and warm-starts from its prior
+factors, converging in a handful of rounds.
+"""
+import time
+
+import jax
+
+from repro.core import DCFConfig, generate_problem, relative_error
+from repro.serving.rpca_service import RPCAService, RPCAServiceConfig
+
+
+def main():
+    m = n = 200
+    rank = 10
+    tenants = [
+        generate_problem(jax.random.PRNGKey(i), m, n, rank, 0.05)
+        for i in range(10)
+    ]
+
+    svc = RPCAService(
+        m, n, DCFConfig.tuned(rank),
+        RPCAServiceConfig(slots=4, rounds_per_tick=10, max_rounds=150,
+                          tol=5e-4),
+    )
+
+    t0 = time.perf_counter()
+    resps = svc.solve_all([t.m_obs for t in tenants])
+    dt = time.perf_counter() - t0
+    for i, (ten, r) in enumerate(zip(tenants, resps)):
+        err = float(relative_error(r.l, r.s, ten.l0, ten.s0))
+        print(f"tenant {i}: {r.rounds:3d} rounds, err {err:.2e}")
+    print(f"10 tenants through 4 slots in {dt:.2f}s "
+          f"({len(tenants)/dt:.1f} problems/s, incl. compile)")
+
+    # Streaming refresh: tenant 0's data drifts; warm-start from its factors.
+    drifted = tenants[0].m_obs + 0.01 * jax.random.normal(
+        jax.random.PRNGKey(99), (m, n))
+    slot = svc.submit(drifted, warm=(resps[0].u, resps[0].v))
+    while svc.pending():
+        svc.tick()
+    refresh = svc.poll(slot)
+    svc.release(slot)
+    print(f"tenant 0 warm refresh: {refresh.rounds} rounds "
+          f"(cold took {resps[0].rounds})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""jax version-compatibility helpers shared across the package.
+
+``jax.shard_map`` (with ``axis_names=``/``check_vma=``) landed in the
+jax >= 0.5 era; older versions ship ``jax.experimental.shard_map`` where
+the manual axes are spelled as their complement (``auto=``) and replication
+checking is ``check_rep``.  Pallas-specific aliases live in
+``repro.kernels.compat``.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map_compat(fn, mesh, in_specs, out_specs, manual_axes=None):
+    """shard_map over ``mesh`` that is manual over ``manual_axes`` (all
+    mesh axes when None), on whichever API this jax ships."""
+    if hasattr(jax, "shard_map"):
+        kw = {} if manual_axes is None else {
+            "axis_names": frozenset(manual_axes)
+        }
+        return jax.shard_map(
+            fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False, **kw,
+        )
+    from jax.experimental.shard_map import shard_map
+
+    auto = (
+        frozenset()
+        if manual_axes is None
+        else frozenset(mesh.axis_names) - frozenset(manual_axes)
+    )
+    return shard_map(
+        fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=False, auto=auto,
+    )

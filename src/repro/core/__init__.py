@@ -1,10 +1,11 @@
 """Core RPCA algorithms: the paper's DCF-PCA plus every baseline it
-compares against (CF-PCA, APGM, IALM)."""
-from repro.core.apgm import APGMConfig, apgm
-from repro.core.cf_pca import CFResult, cf_pca
-from repro.core.dcf_pca import DCFResult, dcf_pca, dcf_pca_sharded
+compares against (CF-PCA, APGM, IALM), all running on the unified solver
+runtime (``repro.core.runtime``)."""
+from repro.core.apgm import APGMConfig, ConvexResult, apgm, apgm_batch
+from repro.core.cf_pca import CFResult, cf_pca, cf_pca_batch
+from repro.core.dcf_pca import DCFResult, dcf_pca, dcf_pca_batch, dcf_pca_sharded
 from repro.core.factorized import DCFConfig
-from repro.core.ialm import IALMConfig, ialm
+from repro.core.ialm import IALMConfig, ialm, ialm_batch
 from repro.core.metrics import (
     low_rank_relative_error,
     rank_gap,
@@ -12,18 +13,28 @@ from repro.core.metrics import (
     singular_value_error,
 )
 from repro.core.problems import RPCAProblem, generate_problem
+from repro.core.runtime import RunConfig, SolveStats, Solver, solve_batch
 
 __all__ = [
     "APGMConfig",
+    "ConvexResult",
     "apgm",
+    "apgm_batch",
     "CFResult",
     "cf_pca",
+    "cf_pca_batch",
     "DCFConfig",
     "DCFResult",
     "dcf_pca",
+    "dcf_pca_batch",
     "dcf_pca_sharded",
     "IALMConfig",
     "ialm",
+    "ialm_batch",
+    "RunConfig",
+    "SolveStats",
+    "Solver",
+    "solve_batch",
     "low_rank_relative_error",
     "rank_gap",
     "relative_error",

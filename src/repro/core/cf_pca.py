@@ -3,6 +3,11 @@
 Identical math to DCF-PCA with a single client (E=1): the consensus average
 is a no-op, so each "round" is just K iterations of {inner (V,S) solve,
 U gradient step} on the full matrix.
+
+Runs on the unified solver runtime: ``run=`` selects fixed-scan /
+early-exit / chunked execution, ``warm=(U, V)`` seeds the factors from a
+prior solve (streaming / refresh solves skip the early rounds), and
+``cf_pca_batch`` drives a stack of problems with per-problem convergence.
 """
 from __future__ import annotations
 
@@ -13,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import factorized as fz
+from repro.core import runtime as rt
 
 Array = jax.Array
 
@@ -22,34 +28,148 @@ class CFResult(NamedTuple):
     s: Array  # recovered sparse matrix (m, n)
     u: Array  # left factor (m, r)
     v: Array  # right factor (n, r)
-    history: Array  # (T,) eliminated objective per round (0 if not tracked)
+    stats: rt.SolveStats
+
+    @property
+    def history(self) -> Array:
+        """Back-compat view: per-round objective (0 if not tracked)."""
+        return self.stats.objective
 
 
-@partial(jax.jit, static_argnames=("cfg",))
-def cf_pca(m_obs: Array, cfg: fz.DCFConfig, key: Array | None = None) -> CFResult:
-    """Run centralized CF-PCA for ``cfg.outer_iters`` rounds."""
-    if key is None:
-        key = jax.random.PRNGKey(0)
-    m, n = m_obs.shape
-    lam = cfg.lam if cfg.lam is not None else fz.robust_lam(m_obs)
-    state = fz.init_state(key, m, n, cfg.rank, m_obs.dtype)
+class CFProblem(NamedTuple):
+    """Problem pytree: data, initial factors (cold = random, warm = prior
+    solution), and the resolved soft-threshold level."""
 
-    def round_(carry, t):
-        u, v = carry
+    m_obs: Array  # (m, n)
+    u_init: Array  # (m, r)
+    v_init: Array  # (n, r)
+    lam0: Array  # () resolved base threshold
+    t0: Array  # () int32 schedule offset (warm starts resume, not restart)
+
+
+class _Carry(NamedTuple):
+    u: Array
+    v: Array
+    diag: rt.Diag
+
+
+def make_solver(cfg: fz.DCFConfig, *, with_objective: bool = False) -> rt.Solver:
+    """Build the runtime Solver for centralized CF-PCA under ``cfg``.
+
+    ``with_objective`` forces the eliminated-objective diagnostic on even
+    when ``cfg.track_objective`` is off (the ``obj_plateau`` criterion
+    needs it); it costs one extra residual pass per round.
+    """
+    track = cfg.track_objective or with_objective
+
+    def init(p: CFProblem) -> _Carry:
+        inf = jnp.asarray(jnp.inf, jnp.float32)
+        return _Carry(u=p.u_init, v=p.v_init, diag=rt.Diag(inf, inf))
+
+    def step(p: CFProblem, c: _Carry, t: Array) -> _Carry:
+        t = t + p.t0
         eta = cfg.lr(t)
-        lam_t = cfg.lam_at(lam, t)
+        lam_t = cfg.lam_at(p.lam0, t)
         u, v = fz.local_round(
-            u, v, m_obs, cfg=cfg, lam=lam_t, n_frac=1.0, eta=eta
+            c.u, c.v, p.m_obs, cfg=cfg, lam=lam_t, n_frac=1.0, eta=eta
         )
         obj = (
-            fz.local_objective(u, v, m_obs, cfg.rho, lam_t, 1.0)
-            if cfg.track_objective
-            else jnp.zeros((), m_obs.dtype)
+            fz.local_objective(u, v, p.m_obs, cfg.rho, lam_t, 1.0)
+            if track
+            else jnp.zeros((), p.m_obs.dtype)
         )
-        return (u, v), obj
+        resid = jnp.linalg.norm(u - c.u) / (jnp.linalg.norm(c.u) + 1e-30)
+        return _Carry(u=u, v=v, diag=rt.Diag(obj, resid))
 
-    (u, v), history = jax.lax.scan(
-        round_, (state.u, state.v), jnp.arange(cfg.outer_iters)
+    def diagnostics(p: CFProblem, c: _Carry) -> rt.Diag:
+        return c.diag
+
+    def finalize(p: CFProblem, c: _Carry):
+        l, s = fz.finalize(c.u, c.v, p.m_obs, cfg.final_lam(p.lam0), cfg.impl)
+        return l, s, c.u, c.v
+
+    return rt.Solver(init, step, diagnostics, finalize)
+
+
+def make_problem(
+    m_obs: Array,
+    cfg: fz.DCFConfig,
+    key: Array,
+    warm: tuple[Array, Array] | None = None,
+    t0: int | Array | None = None,
+) -> CFProblem:
+    """Assemble the problem pytree (random cold start or warm factors).
+
+    ``t0`` offsets the lr / threshold-annealing schedules.  A warm start
+    defaults to ``cfg.outer_iters`` -- the re-solve *continues* the
+    schedule (fully annealed lam, settled lr) instead of replaying the
+    aggressive early phase, which would blow away the prior factors.
+    """
+    m, n = m_obs.shape
+    lam0 = (
+        jnp.asarray(cfg.lam, jnp.float32)
+        if cfg.lam is not None
+        else fz.robust_lam(m_obs)
     )
-    l, s = fz.finalize(u, v, m_obs, cfg.final_lam(lam), cfg.impl)
-    return CFResult(l=l, s=s, u=u, v=v, history=history)
+    if warm is None:
+        state = fz.init_state(key, m, n, cfg.rank, m_obs.dtype)
+        u0, v0 = state.u, state.v
+    else:
+        u0, v0 = warm
+        if u0.shape[-1] != cfg.rank or v0.shape[-1] != cfg.rank:
+            raise ValueError(
+                f"warm factors have rank {u0.shape[-1]}/{v0.shape[-1]}, "
+                f"config says rank {cfg.rank}"
+            )
+    if t0 is None:
+        t0 = 0 if warm is None else cfg.outer_iters
+    return CFProblem(
+        m_obs=m_obs, u_init=u0, v_init=v0, lam0=lam0,
+        t0=jnp.asarray(t0, jnp.int32),
+    )
+
+
+@partial(jax.jit, static_argnames=("cfg", "run"))
+def cf_pca(
+    m_obs: Array,
+    cfg: fz.DCFConfig,
+    key: Array | None = None,
+    *,
+    run: rt.RunConfig | None = None,
+    warm: tuple[Array, Array] | None = None,
+) -> CFResult:
+    """Run centralized CF-PCA for up to ``cfg.outer_iters`` rounds."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    run_cfg = run or rt.FIXED
+    solver = make_solver(cfg, with_objective=run_cfg.needs_objective)
+    problem = make_problem(m_obs, cfg, key, warm)
+    carry, stats = rt.run(solver, problem, cfg.outer_iters, run_cfg)
+    l, s, u, v = solver.finalize(problem, carry)
+    return CFResult(l=l, s=s, u=u, v=v, stats=stats)
+
+
+@partial(jax.jit, static_argnames=("cfg", "run"))
+def cf_pca_batch(
+    m_batch: Array,  # (B, m, n)
+    cfg: fz.DCFConfig,
+    keys: Array | None = None,  # (B, 2) PRNG keys, default fold_in(0..B)
+    *,
+    run: rt.RunConfig | None = None,
+    warm: tuple[Array, Array] | None = None,  # ((B,m,r), (B,n,r))
+) -> CFResult:
+    """Solve a stack of problems concurrently; finished problems freeze."""
+    if keys is None:
+        keys = jax.random.split(jax.random.PRNGKey(0), m_batch.shape[0])
+    run_cfg = run or rt.FIXED
+    problems = jax.vmap(
+        lambda mo, k, w: make_problem(mo, cfg, k, w),
+        in_axes=(0, 0, None if warm is None else 0),
+    )(m_batch, keys, warm)
+    (l, s, u, v), _, stats = rt.solve_batch(
+        make_solver(cfg, with_objective=run_cfg.needs_objective),
+        problems,
+        cfg.outer_iters,
+        run_cfg,
+    )
+    return CFResult(l=l, s=s, u=u, v=v, stats=stats)

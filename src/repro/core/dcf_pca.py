@@ -15,6 +15,14 @@ Two execution engines with identical math:
                      round -- the paper's 2 E m r communication bound, run
                      as a bandwidth-optimal ICI all-reduce.  V_i and S_i
                      never leave their shard (the privacy property).
+
+Both engines run on the unified solver runtime (DESIGN.md Sec. 4): pass
+``run=`` for convergence-controlled or chunked execution and
+``warm=(U, V)`` to seed the factors from a prior solve.  In the sharded
+engine the convergence residual is computed on the *consensus* U (with a
+model-axis psum of the norms when rows are sharded), so the
+``lax.while_loop`` predicate is identical on every shard and the collec-
+tives stay lock-step.
 """
 from __future__ import annotations
 
@@ -25,8 +33,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map_compat
 from repro.core import factorized as fz
 from repro.core import problems as prob
+from repro.core import runtime as rt
 
 Array = jax.Array
 
@@ -36,66 +46,171 @@ class DCFResult(NamedTuple):
     s: Array  # recovered sparse matrix, same layout
     u: Array  # consensus left factor (m, r)
     v: Array  # right factors (E, n_i, r) or (n, r)
-    history: Array  # (T,) global objective per round (0 if not tracked)
+    stats: rt.SolveStats
+
+    @property
+    def history(self) -> Array:
+        """Back-compat view: per-round global objective (0 if not tracked)."""
+        return self.stats.objective
+
+
+class DCFProblem(NamedTuple):
+    """Simulated-engine problem pytree: client blocks + initial factors."""
+
+    blocks: Array  # (E, m, n_i) column blocks, one per client
+    u_init: Array  # (m, r) server broadcast
+    v_init: Array  # (E, n_i, r) per-client factors
+    lam0: Array  # () resolved base threshold
+    t0: Array  # () int32 schedule offset (warm starts resume, not restart)
+
+
+class _Carry(NamedTuple):
+    u: Array
+    v: Array
+    diag: rt.Diag
 
 
 # ---------------------------------------------------------------------------
 # Engine 1: simulated clients (paper Sec. 4.1 "Implementation")
 # ---------------------------------------------------------------------------
-@partial(jax.jit, static_argnames=("cfg", "num_clients"))
+def make_solver(cfg: fz.DCFConfig, *, with_objective: bool = False) -> rt.Solver:
+    """Runtime Solver for the simulated-client engine."""
+    track = cfg.track_objective or with_objective
+
+    def init(p: DCFProblem) -> _Carry:
+        inf = jnp.asarray(jnp.inf, jnp.float32)
+        return _Carry(u=p.u_init, v=p.v_init, diag=rt.Diag(inf, inf))
+
+    def step(p: DCFProblem, c: _Carry, t: Array) -> _Carry:
+        e = p.blocks.shape[0]
+        n_frac = 1.0 / e  # equal column blocks: each client holds n/E cols
+        t = t + p.t0
+        eta = cfg.lr(t)
+        lam_t = cfg.lam_at(p.lam0, t)
+        local = partial(fz.local_round, cfg=cfg, lam=lam_t, n_frac=n_frac)
+        # Server broadcasts U; clients run K local iterations concurrently.
+        u_i, v = jax.vmap(lambda vb, mb: local(c.u, vb, mb, eta=eta))(
+            c.v, p.blocks
+        )
+        u = jnp.mean(u_i, axis=0)  # Eq. (9): FedAvg consensus
+        obj = (
+            jax.vmap(
+                lambda vb, mb: fz.local_objective(
+                    u, vb, mb, cfg.rho, lam_t, n_frac
+                )
+            )(v, p.blocks).sum()
+            if track
+            else jnp.zeros((), p.blocks.dtype)
+        )
+        resid = jnp.linalg.norm(u - c.u) / (jnp.linalg.norm(c.u) + 1e-30)
+        return _Carry(u=u, v=v, diag=rt.Diag(obj, resid))
+
+    def diagnostics(p: DCFProblem, c: _Carry) -> rt.Diag:
+        return c.diag
+
+    def finalize(p: DCFProblem, c: _Carry):
+        l_blocks, s_blocks = jax.vmap(
+            lambda vb, mb: fz.finalize(
+                c.u, vb, mb, cfg.final_lam(p.lam0), cfg.impl
+            )
+        )(c.v, p.blocks)
+        return (
+            prob.merge_columns(l_blocks),
+            prob.merge_columns(s_blocks),
+            c.u,
+            c.v,
+        )
+
+    return rt.Solver(init, step, diagnostics, finalize)
+
+
+def make_problem(
+    m_obs: Array,
+    cfg: fz.DCFConfig,
+    num_clients: int,
+    key: Array,
+    warm: tuple[Array, Array] | None = None,
+    t0: int | Array | None = None,
+) -> DCFProblem:
+    """Assemble the simulated-engine problem pytree.  See
+    ``cf_pca.make_problem`` for the warm-start ``t0`` schedule-resume
+    convention."""
+    m, n = m_obs.shape
+    lam0 = (
+        jnp.asarray(cfg.lam, jnp.float32)
+        if cfg.lam is not None
+        else fz.robust_lam(m_obs)
+    )
+    blocks = prob.split_columns(m_obs, num_clients)  # (E, m, n_i)
+    n_i = blocks.shape[-1]
+    if warm is None:
+        k_u, k_v = jax.random.split(key)
+        u0 = fz.init_state(k_u, m, n_i, cfg.rank, m_obs.dtype).u
+        # Independent V_i inits per client ("randomly initializes V_i").
+        v0 = jax.vmap(
+            lambda k: fz.init_state(k, 1, n_i, cfg.rank, m_obs.dtype).v
+        )(jax.random.split(k_v, num_clients))
+    else:
+        u0, v0 = warm
+        if u0.shape[-1] != cfg.rank or v0.shape[-1] != cfg.rank:
+            raise ValueError(
+                f"warm factors have rank {u0.shape[-1]}/{v0.shape[-1]}, "
+                f"config says rank {cfg.rank}"
+            )
+    if t0 is None:
+        t0 = 0 if warm is None else cfg.outer_iters
+    return DCFProblem(
+        blocks=blocks, u_init=u0, v_init=v0, lam0=lam0,
+        t0=jnp.asarray(t0, jnp.int32),
+    )
+
+
+@partial(jax.jit, static_argnames=("cfg", "num_clients", "run"))
 def dcf_pca(
     m_obs: Array,
     cfg: fz.DCFConfig,
     num_clients: int,
     key: Array | None = None,
+    *,
+    run: rt.RunConfig | None = None,
+    warm: tuple[Array, Array] | None = None,
 ) -> DCFResult:
     """Run DCF-PCA with ``num_clients`` simulated clients on one device."""
     if key is None:
         key = jax.random.PRNGKey(0)
-    m, n = m_obs.shape
-    lam = cfg.lam if cfg.lam is not None else fz.robust_lam(m_obs)
-    blocks = prob.split_columns(m_obs, num_clients)  # (E, m, n_i)
-    n_i = blocks.shape[-1]
-    n_frac = n_i / n
+    run_cfg = run or rt.FIXED
+    solver = make_solver(cfg, with_objective=run_cfg.needs_objective)
+    problem = make_problem(m_obs, cfg, num_clients, key, warm)
+    carry, stats = rt.run(solver, problem, cfg.outer_iters, run_cfg)
+    l, s, u, v = solver.finalize(problem, carry)
+    return DCFResult(l=l, s=s, u=u, v=v, stats=stats)
 
-    k_u, k_v = jax.random.split(key)
-    state0 = fz.init_state(k_u, m, n_i, cfg.rank, m_obs.dtype)
-    u0 = state0.u
-    # Independent V_i inits per client (paper: "randomly initializes V_i").
-    v0 = jax.vmap(
-        lambda k: fz.init_state(k, 1, n_i, cfg.rank, m_obs.dtype).v
-    )(jax.random.split(k_v, num_clients))
 
-    def round_(carry, t):
-        u, v = carry
-        eta = cfg.lr(t)
-        lam_t = cfg.lam_at(lam, t)
-        local = partial(fz.local_round, cfg=cfg, lam=lam_t, n_frac=n_frac)
-        # Server broadcasts U; clients run K local iterations concurrently.
-        u_i, v = jax.vmap(lambda vb, mb: local(u, vb, mb, eta=eta))(v, blocks)
-        u = jnp.mean(u_i, axis=0)  # Eq. (9): FedAvg consensus
-        obj = (
-            jax.vmap(
-                lambda vb, mb: fz.local_objective(u, vb, mb, cfg.rho, lam_t, n_frac)
-            )(v, blocks).sum()
-            if cfg.track_objective
-            else jnp.zeros((), m_obs.dtype)
-        )
-        return (u, v), obj
-
-    (u, v), history = jax.lax.scan(
-        round_, (u0, v0), jnp.arange(cfg.outer_iters)
+@partial(jax.jit, static_argnames=("cfg", "num_clients", "run"))
+def dcf_pca_batch(
+    m_batch: Array,  # (B, m, n)
+    cfg: fz.DCFConfig,
+    num_clients: int,
+    keys: Array | None = None,  # (B, 2) PRNG keys
+    *,
+    run: rt.RunConfig | None = None,
+    warm: tuple[Array, Array] | None = None,  # ((B,m,r), (B,E,n_i,r))
+) -> DCFResult:
+    """Solve a stack of problems concurrently; finished problems freeze."""
+    if keys is None:
+        keys = jax.random.split(jax.random.PRNGKey(0), m_batch.shape[0])
+    run_cfg = run or rt.FIXED
+    problems = jax.vmap(
+        lambda mo, k, w: make_problem(mo, cfg, num_clients, k, w),
+        in_axes=(0, 0, None if warm is None else 0),
+    )(m_batch, keys, warm)
+    (l, s, u, v), _, stats = rt.solve_batch(
+        make_solver(cfg, with_objective=run_cfg.needs_objective),
+        problems,
+        cfg.outer_iters,
+        run_cfg,
     )
-    l_blocks, s_blocks = jax.vmap(
-        lambda vb, mb: fz.finalize(u, vb, mb, cfg.final_lam(lam), cfg.impl)
-    )(v, blocks)
-    return DCFResult(
-        l=prob.merge_columns(l_blocks),
-        s=prob.merge_columns(s_blocks),
-        u=u,
-        v=v,
-        history=history,
-    )
+    return DCFResult(l=l, s=s, u=u, v=v, stats=stats)
 
 
 # ---------------------------------------------------------------------------
@@ -109,8 +224,15 @@ def dcf_pca_sharded(
     data_axes: tuple[str, ...] = ("data",),
     model_axis: str | None = None,
     key: Array | None = None,
+    run: rt.RunConfig | None = None,
+    warm: tuple[Array, Array] | None = None,
 ) -> DCFResult:
     """DCF-PCA where each shard along ``data_axes`` is one paper "client".
+
+    ``warm=(U, V)`` takes a replicated ``(m, r)`` consensus factor and a
+    *global* ``(n, r)`` right factor (the sharded engine's own ``DCFResult``
+    layout); the solve resumes the schedules at ``t0 = outer_iters`` like
+    the simulated engine.
 
     * ``M`` sharded: rows over ``model_axis`` (optional), cols over
       ``data_axes`` -- P(model, data).
@@ -123,6 +245,8 @@ def dcf_pca_sharded(
     """
     if key is None:
         key = jax.random.PRNGKey(0)
+    run_cfg = run or rt.FIXED
+    track = cfg.track_objective or run_cfg.needs_objective
     m, n = m_obs.shape
     lam = cfg.lam if cfg.lam is not None else fz.robust_lam(m_obs)
     num_clients = 1
@@ -133,7 +257,6 @@ def dcf_pca_sharded(
     row_spec = model_axis  # None => replicated rows
     m_sharding = NamedSharding(mesh, P(row_spec, data_axes))
     u_sharding = NamedSharding(mesh, P(row_spec, None))
-    v_sharding = NamedSharding(mesh, P(data_axes, None))
 
     reduce_m = (
         (lambda x: jax.lax.psum(x, model_axis))
@@ -146,55 +269,100 @@ def dcf_pca_sharded(
     scale = 1.0 / float(jnp.sqrt(float(cfg.rank)))
     # U init is identical across clients (the server broadcast); sharded
     # over rows only.  V_i inits are per-client (folded client index).
-    u0 = jax.random.normal(k_u, (m, cfg.rank), m_obs.dtype) * scale
+    if warm is None:
+        t0 = 0
+        u0 = jax.random.normal(k_u, (m, cfg.rank), m_obs.dtype) * scale
+    else:
+        u0, v_warm = warm
+        if u0.shape[-1] != cfg.rank or v_warm.shape[-1] != cfg.rank:
+            raise ValueError(
+                f"warm factors have rank {u0.shape[-1]}/{v_warm.shape[-1]}, "
+                f"config says rank {cfg.rank}"
+            )
+        t0 = cfg.outer_iters  # resume, don't restart, the schedules
 
-    def solve(m_local_full, u):
-        """shard_map body: this shard's (m_loc, n_i) block + its U rows."""
-        m_loc, n_i = m_local_full.shape
-        idx = jax.lax.axis_index(data_axes)
-        kv_local = jax.random.fold_in(k_v, idx)
-        v = jax.random.normal(kv_local, (n_i, cfg.rank), m_local_full.dtype) * scale
+    def solve_body(m_local_full, u, v):
+        """shard_map body: this shard's (m_loc, n_i) block + its factors."""
 
-        def round_(carry, t):
-            u, v = carry
+        def init(p):
+            inf = jnp.asarray(jnp.inf, jnp.float32)
+            return _Carry(u=p[0], v=p[1], diag=rt.Diag(inf, inf))
+
+        def step(p, c, t):
+            t = t + t0
             eta = cfg.lr(t)
             lam_t = cfg.lam_at(lam, t)
-            u_i, v = fz.local_round(
-                u, v, m_local_full, cfg=cfg, lam=lam_t, n_frac=n_frac,
+            u_i, v_new = fz.local_round(
+                c.u, c.v, m_local_full, cfg=cfg, lam=lam_t, n_frac=n_frac,
                 eta=eta, reduce_m=reduce_m,
             )
-            u = jax.lax.pmean(u_i, data_axes)  # Eq. (9) consensus all-reduce
+            u_new = jax.lax.pmean(u_i, data_axes)  # Eq. (9) consensus
             obj = (
                 jax.lax.psum(
-                    fz.local_objective(u, v, m_local_full, cfg.rho, lam_t, n_frac),
+                    fz.local_objective(
+                        u_new, v_new, m_local_full, cfg.rho, lam_t, n_frac
+                    ),
                     all_axes,
                 )
-                if cfg.track_objective
+                if track
                 else jnp.zeros((), m_local_full.dtype)
             )
-            return (u, v), obj
+            # Residual on the consensus U: psum the squared norms over the
+            # model axis so every shard sees the same scalar and the
+            # while_loop predicate (and hence the collectives) stay
+            # lock-step across the mesh.
+            du2 = reduce_m(jnp.sum((u_new - c.u) ** 2))
+            u2 = reduce_m(jnp.sum(c.u**2))
+            resid = jnp.sqrt(du2) / (jnp.sqrt(u2) + 1e-30)
+            return _Carry(u=u_new, v=v_new, diag=rt.Diag(obj, resid))
 
-        (u, v), history = jax.lax.scan(
-            round_, (u, v), jnp.arange(cfg.outer_iters)
+        solver = rt.Solver(init, step, lambda p, c: c.diag, lambda p, c: None)
+        carry, stats = rt.run(solver, (u, v), cfg.outer_iters, run_cfg)
+        l_blk, s_blk = fz.finalize(
+            carry.u, carry.v, m_local_full, cfg.final_lam(lam), cfg.impl
         )
-        l_blk, s_blk = fz.finalize(u, v, m_local_full, cfg.final_lam(lam), cfg.impl)
-        return l_blk, s_blk, u, v, history
+        return l_blk, s_blk, carry.u, carry.v, stats
 
     specs_out = (
         P(row_spec, data_axes),  # L
         P(row_spec, data_axes),  # S
         P(row_spec, None),  # U
         P(data_axes, None),  # V
-        P(None),  # history (replicated)
-    )
-    fn = jax.shard_map(
-        solve,
-        mesh=mesh,
-        in_specs=(P(row_spec, data_axes), P(row_spec, None)),
-        out_specs=specs_out,
-        check_vma=False,
+        rt.SolveStats(  # replicated telemetry
+            objective=P(None), residual=P(None), rounds=P(), converged=P()
+        ),
     )
     m_placed = jax.device_put(m_obs, m_sharding)
     u_placed = jax.device_put(u0, u_sharding)
-    l, s, u, v, history = jax.jit(fn)(m_placed, u_placed)
-    return DCFResult(l=l, s=s, u=u, v=v, history=history)
+    if warm is None:
+
+        def solve(m_local_full, u):
+            # Cold start: per-client V_i from a client-folded key.
+            n_i = m_local_full.shape[1]
+            idx = jax.lax.axis_index(data_axes)
+            kv_local = jax.random.fold_in(k_v, idx)
+            v = (
+                jax.random.normal(kv_local, (n_i, cfg.rank),
+                                  m_local_full.dtype) * scale
+            )
+            return solve_body(m_local_full, u, v)
+
+        fn = shard_map_compat(
+            solve,
+            mesh,
+            (P(row_spec, data_axes), P(row_spec, None)),
+            specs_out,
+        )
+        l, s, u, v, stats = jax.jit(fn)(m_placed, u_placed)
+    else:
+        fn = shard_map_compat(
+            solve_body,
+            mesh,
+            (P(row_spec, data_axes), P(row_spec, None), P(data_axes, None)),
+            specs_out,
+        )
+        v_placed = jax.device_put(
+            v_warm, NamedSharding(mesh, P(data_axes, None))
+        )
+        l, s, u, v, stats = jax.jit(fn)(m_placed, u_placed, v_placed)
+    return DCFResult(l=l, s=s, u=u, v=v, stats=stats)

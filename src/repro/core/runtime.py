@@ -1,0 +1,357 @@
+"""Unified solver runtime: one driver for every RPCA solver (DESIGN.md Sec. 4).
+
+Every iterative solver in the stack (``apgm``, ``ialm``, ``cf_pca``, both
+``dcf_pca`` engines) is expressed as a :class:`Solver` -- four pure
+functions over an explicit ``problem`` pytree:
+
+    init(problem)              -> carry          (cold or warm start)
+    step(problem, carry, t)    -> carry          (one iteration / round)
+    diagnostics(problem, carry)-> Diag           (objective + residual)
+    finalize(problem, carry)   -> solver output  (e.g. (L, S) or (L, S, U, V))
+
+and a single driver executes it under one of three modes
+(:class:`RunConfig.mode`):
+
+``scan``   Fixed-length ``lax.scan`` over ``max_iters`` -- the
+           paper-faithful schedule, bit-identical to the pre-runtime
+           hand-rolled loops.
+
+``while``  Convergence-controlled ``lax.while_loop``: stop as soon as the
+           criterion (relative residual or objective plateau) is met.
+           Minimum dispatch per iteration; best for interactive /
+           latency-sensitive solves.
+
+``chunk``  ``lax.while_loop`` whose body is a ``chunk_size``-step
+           ``lax.scan``: the jit-friendly serving mode.  Convergence is
+           checked once per chunk, so the compiled program is a short
+           static-shape loop body re-entered a dynamic number of times
+           (exactly the decode-step pattern of ``serving/engine.py``).
+
+Batching rides on the same protocol: :func:`solve_batch` vmaps a solver
+over a leading problem axis and drives all problems in lock-step with a
+per-problem convergence mask -- finished problems *freeze* (their carry
+stops updating) while the rest keep iterating, and the loop exits when
+every problem is done.  Warm-starting is a property of the ``problem``
+pytree (it carries the initial factors), so a re-solve seeded with a prior
+solution's ``(U, V)`` flows through every mode and through ``solve_batch``
+unchanged.
+
+All drivers return a structured :class:`SolveStats` instead of the old
+ad-hoc scalar ``history`` arrays.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Literal, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class Diag(NamedTuple):
+    """Per-iteration diagnostics emitted by a solver.
+
+    ``objective``  the solver's tracked objective value (0 when the solver
+                   was built without objective tracking);
+    ``residual``   the scalar convergence measure -- by convention a
+                   *relative* quantity (factor change, constraint residual)
+                   so a single tolerance is meaningful across solvers.
+    """
+
+    objective: Array
+    residual: Array
+
+
+class SolveStats(NamedTuple):
+    """Structured solve telemetry (replaces the ad-hoc ``history`` array).
+
+    ``objective``/``residual`` are ``(max_iters,)`` traces, zero-padded past
+    ``rounds`` in the early-exit modes.  Under :func:`solve_batch` every
+    field gains a leading batch axis.
+    """
+
+    objective: Array  # (T,) tracked objective per iteration
+    residual: Array  # (T,) convergence residual per iteration
+    rounds: Array  # () int32 -- iterations actually executed
+    converged: Array  # () bool -- criterion met within the budget
+
+
+class Solver(NamedTuple):
+    """The solver protocol consumed by :func:`run` / :func:`solve_batch`.
+
+    All four members are pure jit-traceable functions; ``problem`` is a
+    pytree of arrays (the observed data plus initial factors), so the whole
+    solver can be vmapped over a leading problem axis.
+    """
+
+    init: Callable[[Any], Any]
+    step: Callable[[Any, Any, Array], Any]
+    diagnostics: Callable[[Any, Any], Diag]
+    finalize: Callable[[Any, Any], Any]
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    """Execution-mode knobs for the shared driver (static under jit).
+
+    ``tol`` applies to ``criterion``: ``rel_residual`` stops when the
+    solver's residual drops below ``tol``; ``obj_plateau`` stops when the
+    objective changes by less than ``tol * max(1, |obj|)`` between checks
+    (requires the solver to be built with objective tracking).
+    ``min_iters`` suppresses spurious exits before the diagnostics settle.
+    """
+
+    mode: Literal["scan", "while", "chunk"] = "scan"
+    tol: float = 1e-6
+    criterion: Literal["rel_residual", "obj_plateau"] = "rel_residual"
+    chunk_size: int = 8
+    min_iters: int = 2
+
+    @property
+    def needs_objective(self) -> bool:
+        return self.criterion == "obj_plateau"
+
+
+#: Paper-faithful default: fixed-length scan, no early exit.
+FIXED = RunConfig(mode="scan")
+
+
+def _bcast(pred: Array, leaf: Array) -> Array:
+    """Broadcast a ()- or (B,)-shaped predicate against a carry leaf."""
+    extra = leaf.ndim - pred.ndim
+    return jax.lax.reshape(pred, pred.shape + (1,) * extra) if extra else pred
+
+
+def tree_where(pred: Array, new: Any, old: Any) -> Any:
+    """``where(pred, new, old)`` over matching pytrees; ``pred`` is a scalar
+    or a leading-axis mask (the batched freeze mask)."""
+    return jax.tree.map(
+        lambda a, b: jnp.where(_bcast(pred, a), a, b), new, old
+    )
+
+
+def _converged(run: RunConfig, diag: Diag, prev_obj: Array) -> Array:
+    if run.criterion == "rel_residual":
+        return diag.residual <= run.tol
+    return jnp.abs(prev_obj - diag.objective) <= run.tol * jnp.maximum(
+        jnp.abs(prev_obj), 1.0
+    )
+
+
+def _f32(x) -> Array:
+    return jnp.asarray(x, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Single-problem driver
+# ---------------------------------------------------------------------------
+def run(
+    solver: Solver,
+    problem: Any,
+    max_iters: int,
+    run_cfg: RunConfig = FIXED,
+) -> tuple[Any, SolveStats]:
+    """Drive ``solver`` on one problem; returns ``(final_carry, stats)``.
+
+    Callers apply ``solver.finalize`` themselves (wrappers often need the
+    raw carry, e.g. to hand factors back for warm-starting).
+    """
+    carry0 = solver.init(problem)
+    if run_cfg.mode == "scan":
+        return _run_scan(solver, problem, carry0, max_iters, run_cfg)
+    if run_cfg.mode == "while":
+        return _run_while(solver, problem, carry0, max_iters, run_cfg)
+    if run_cfg.mode == "chunk":
+        return _run_chunk(solver, problem, carry0, max_iters, run_cfg)
+    raise ValueError(f"unknown mode {run_cfg.mode!r}")
+
+
+def _run_scan(solver, problem, carry0, max_iters, run_cfg):
+    def body(c, t):
+        c = solver.step(problem, c, t)
+        return c, solver.diagnostics(problem, c)
+
+    carry, diags = jax.lax.scan(body, carry0, jnp.arange(max_iters))
+    last = Diag(diags.objective[-1], diags.residual[-1])
+    prev_obj = diags.objective[-2] if max_iters > 1 else _f32(jnp.inf)
+    stats = SolveStats(
+        objective=diags.objective,
+        residual=diags.residual,
+        rounds=jnp.asarray(max_iters, jnp.int32),
+        converged=_converged(run_cfg, last, prev_obj),
+    )
+    return carry, stats
+
+
+def _run_while(solver, problem, carry0, max_iters, run_cfg):
+    buf = jnp.zeros((max_iters,), jnp.float32)
+    init = (
+        carry0,
+        jnp.zeros((), jnp.int32),
+        Diag(_f32(jnp.inf), _f32(jnp.inf)),
+        _f32(jnp.inf),
+        buf,
+        buf,
+    )
+
+    def cond(st):
+        _, t, last, prev_obj, _, _ = st
+        done = _converged(run_cfg, last, prev_obj) & (t >= run_cfg.min_iters)
+        return (t < max_iters) & ~done
+
+    def body(st):
+        c, t, last, prev_obj, obuf, rbuf = st
+        c = solver.step(problem, c, t)
+        d = solver.diagnostics(problem, c)
+        obuf = obuf.at[t].set(_f32(d.objective))
+        rbuf = rbuf.at[t].set(_f32(d.residual))
+        return c, t + 1, d, last.objective, obuf, rbuf
+
+    carry, t, last, prev_obj, obuf, rbuf = jax.lax.while_loop(cond, body, init)
+    stats = SolveStats(
+        objective=obuf,
+        residual=rbuf,
+        rounds=t,
+        converged=_converged(run_cfg, last, prev_obj),
+    )
+    return carry, stats
+
+
+def _run_chunk(solver, problem, carry0, max_iters, run_cfg):
+    chunk = max(1, run_cfg.chunk_size)
+    n_chunks = -(-max_iters // chunk)
+    padded = n_chunks * chunk
+    buf = jnp.zeros((padded,), jnp.float32)
+    init = (
+        carry0,
+        jnp.zeros((), jnp.int32),
+        Diag(_f32(jnp.inf), _f32(jnp.inf)),
+        _f32(jnp.inf),
+        buf,
+        buf,
+    )
+
+    def cond(st):
+        _, t, last, prev_obj, _, _ = st
+        done = _converged(run_cfg, last, prev_obj) & (t >= run_cfg.min_iters)
+        return (t < max_iters) & ~done
+
+    def body(st):
+        c, t, last, prev_obj, obuf, rbuf = st
+
+        def inner(cc, i):
+            g = t + i
+            c_new = solver.step(problem, cc, g)
+            # Freeze the tail of the last (ragged) chunk past max_iters.
+            cc = tree_where(g < max_iters, c_new, cc)
+            return cc, solver.diagnostics(problem, cc)
+
+        c, diags = jax.lax.scan(inner, c, jnp.arange(chunk))
+        obuf = jax.lax.dynamic_update_slice(obuf, _f32(diags.objective), (t,))
+        rbuf = jax.lax.dynamic_update_slice(rbuf, _f32(diags.residual), (t,))
+        d = Diag(diags.objective[-1], diags.residual[-1])
+        return c, t + chunk, d, last.objective, obuf, rbuf
+
+    carry, t, last, prev_obj, obuf, rbuf = jax.lax.while_loop(cond, body, init)
+    stats = SolveStats(
+        objective=obuf[:max_iters],
+        residual=rbuf[:max_iters],
+        rounds=jnp.minimum(t, max_iters),
+        converged=_converged(run_cfg, last, prev_obj),
+    )
+    return carry, stats
+
+
+# ---------------------------------------------------------------------------
+# Batched driver: lock-step rounds with per-problem freeze masks
+# ---------------------------------------------------------------------------
+def solve_batch(
+    solver: Solver,
+    problems: Any,
+    max_iters: int,
+    run_cfg: RunConfig = FIXED,
+) -> tuple[Any, Any, SolveStats]:
+    """Solve a batch of problems concurrently with one vmapped program.
+
+    ``problems`` is the solver's problem pytree with a leading batch axis
+    on every leaf.  All problems advance in lock-step; under the early-exit
+    criteria each problem that converges is *frozen* (its carry and
+    diagnostics stop changing, its ``rounds`` counter stops) while the
+    stragglers keep iterating, and the loop exits once all are done (or at
+    ``max_iters``).  ``mode='scan'`` runs the full fixed budget with no
+    convergence checks -- batched results are then the vmapped image of the
+    serial solves.
+
+    Returns ``(results, final_carry, stats)`` where ``results`` is the
+    vmapped ``solver.finalize`` output and every ``stats`` field has a
+    leading batch axis.
+    """
+    leaves = jax.tree.leaves(problems)
+    if not leaves:
+        raise ValueError("solve_batch needs a non-empty problem pytree")
+    batch = leaves[0].shape[0]
+
+    init_b = jax.vmap(solver.init)
+    step_b = jax.vmap(solver.step, in_axes=(0, 0, None))
+    diag_b = jax.vmap(solver.diagnostics)
+    fin_b = jax.vmap(solver.finalize)
+
+    check = run_cfg.mode != "scan"
+    carry0 = init_b(problems)
+    obuf = jnp.zeros((batch, max_iters), jnp.float32)
+    init = (
+        carry0,
+        jnp.zeros((), jnp.int32),  # global lock-step round counter
+        jnp.zeros((batch,), bool),  # per-problem done mask
+        jnp.zeros((batch,), jnp.int32),  # per-problem executed rounds
+        Diag(jnp.full((batch,), jnp.inf, jnp.float32),
+             jnp.full((batch,), jnp.inf, jnp.float32)),
+        jnp.full((batch,), jnp.inf, jnp.float32),  # prev objective
+        obuf,
+        obuf,
+    )
+
+    def cond(st):
+        _, t, done, *_ = st
+        return (t < max_iters) & ~jnp.all(done)
+
+    def body(st):
+        c, t, done, rounds, last, prev_obj, obuf, rbuf = st
+        c_new = step_b(problems, c, t)
+        c = tree_where(~done, c_new, c)  # finished problems freeze
+        d_new = diag_b(problems, c)
+        d = Diag(
+            jnp.where(done, last.objective, _f32(d_new.objective)),
+            jnp.where(done, last.residual, _f32(d_new.residual)),
+        )
+        active = ~done
+        obuf = obuf.at[:, t].set(jnp.where(active, d.objective, 0.0))
+        rbuf = rbuf.at[:, t].set(jnp.where(active, d.residual, 0.0))
+        rounds = rounds + active.astype(jnp.int32)
+        if check:
+            hit = _converged(run_cfg, d, prev_obj) & (
+                rounds >= run_cfg.min_iters
+            )
+            done = done | (active & hit)
+        prev_obj = jnp.where(active, d.objective, prev_obj)
+        return c, t + 1, done, rounds, d, prev_obj, obuf, rbuf
+
+    carry, _, done, rounds, *_, obuf, rbuf = jax.lax.while_loop(
+        cond, body, init
+    )
+    if not check:
+        # Fixed scan: mirror the serial driver and evaluate the criterion
+        # on the final diagnostics instead of reporting all-False.
+        last = Diag(obuf[:, -1], rbuf[:, -1])
+        prev_obj = (
+            obuf[:, -2]
+            if max_iters > 1
+            else jnp.full((batch,), jnp.inf, jnp.float32)
+        )
+        done = _converged(run_cfg, last, prev_obj)
+    stats = SolveStats(
+        objective=obuf, residual=rbuf, rounds=rounds, converged=done
+    )
+    return fin_b(problems, carry), carry, stats

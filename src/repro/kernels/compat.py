@@ -1,0 +1,9 @@
+"""Pallas-TPU version-compatibility aliases.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``
+(jax >= 0.5-era); resolve whichever this jax ships so the kernels run
+under both (interpret mode on CPU included).
+"""
+from jax.experimental.pallas import tpu as _pltpu
+
+CompilerParams = getattr(_pltpu, "CompilerParams", None) or _pltpu.TPUCompilerParams

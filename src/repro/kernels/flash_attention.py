@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
+
 Array = jax.Array
 
 DEFAULT_BQ = 256
@@ -139,7 +141,7 @@ def flash_attention(
             pltpu.VMEM((bq_, 1), jnp.float32),
             pltpu.VMEM((bq_, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qb, kb, vb)

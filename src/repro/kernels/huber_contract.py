@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
+
 Array = jax.Array
 
 # MXU/VREG-aligned defaults.  The second-minor dim of every block is a
@@ -122,7 +124,7 @@ def huber_contract_v(
         ],
         out_specs=pl.BlockSpec((bn, r_pad), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((v_p.shape[0], r_pad), jnp.float32),
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel", "arbitrary")),
+        compiler_params=compat.CompilerParams(dimension_semantics=("parallel", "arbitrary")),
         interpret=_should_interpret(interpret),
     )(u_p, v_p, m_p, lam_arr)
     return out[:n, :r]
@@ -161,7 +163,7 @@ def huber_contract_u(
         ],
         out_specs=pl.BlockSpec((bm, r_pad), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((u_p.shape[0], r_pad), jnp.float32),
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel", "arbitrary")),
+        compiler_params=compat.CompilerParams(dimension_semantics=("parallel", "arbitrary")),
         interpret=_should_interpret(interpret),
     )(u_p, v_p, m_p, lam_arr)
     return out[:mm, :r]

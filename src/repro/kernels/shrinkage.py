@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
+
 from repro.kernels.huber_contract import (
     DEFAULT_BM,
     DEFAULT_BN,
@@ -80,7 +82,7 @@ def residual_shrink(
         in_specs=_specs(bm, bn, r_pad),
         out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct(m_p.shape, jnp.float32),
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel", "parallel")),
+        compiler_params=compat.CompilerParams(dimension_semantics=("parallel", "parallel")),
         interpret=_should_interpret(interpret),
     )(u_p, v_p, m_p, lam_arr)
     return s[:mm, :n]
@@ -118,7 +120,7 @@ def residual_shrink_psi(
             jax.ShapeDtypeStruct(m_p.shape, jnp.float32),
             jax.ShapeDtypeStruct(m_p.shape, jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel", "parallel")),
+        compiler_params=compat.CompilerParams(dimension_semantics=("parallel", "parallel")),
         interpret=_should_interpret(interpret),
     )(u_p, v_p, m_p, lam_arr)
     return s[:mm, :n], psi[:mm, :n]

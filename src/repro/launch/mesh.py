@@ -7,7 +7,19 @@ module never touches jax device state -- the dry-run must set
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_compat_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
+    """``jax.make_mesh`` with explicit-auto axes on jax >= 0.5; plain Mesh
+    construction (all axes auto by default) on older jax."""
+    try:
+        kinds = (jax.sharding.AxisType.Auto,) * len(axes)
+        return jax.make_mesh(shape, axes, axis_types=kinds)
+    except AttributeError:
+        n = int(np.prod(shape))
+        return Mesh(np.array(jax.devices()[:n]).reshape(shape), axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -19,16 +31,11 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return make_compat_mesh(shape, axes)
 
 
 def make_host_mesh(model: int = 1, data: int | None = None) -> Mesh:
     """Small mesh over whatever local devices exist (tests/examples)."""
     n = jax.device_count()
     data = data or (n // model)
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(AxisType.Auto, AxisType.Auto),
-    )
+    return make_compat_mesh((data, model), ("data", "model"))

@@ -55,23 +55,27 @@ def generate(
     )(params, prompt)
     caches = _pad_caches(model, caches, b, s_prompt, s_max)
 
-    decode = jax.jit(
-        lambda p, t, c, pos: model.decode_step(p, t, c, pos, rules))
+    # The whole decode loop is one jitted lax.scan over the step count:
+    # a single dispatch for the full generation instead of one Python
+    # round-trip per token (the decode step itself stays the jitted
+    # model.decode_step path, now inlined into the scanned body).
+    @jax.jit
+    def decode_loop(params, first, caches, key):
+        def body(carry, _):
+            tok, caches, pos, key = carry
+            key, sub = jax.random.split(key)
+            logits, caches = model.decode_step(params, tok, caches, pos, rules)
+            nxt = _sample(logits, sub, scfg.temperature)[:, None]
+            return (nxt, caches, pos + 1, key), nxt[:, 0]
 
-    def body(carry, _):
-        tok, caches, pos, key = carry
-        key, sub = jax.random.split(key)
-        logits, caches = decode(params, tok, caches, pos)
-        nxt = _sample(logits, sub, scfg.temperature)[:, None]
-        return (nxt, caches, pos + 1, key), nxt[:, 0]
+        carry = (first, caches, jnp.asarray(s_prompt, jnp.int32), key)
+        _, toks = jax.lax.scan(body, carry, None,
+                               length=scfg.max_new_tokens - 1)
+        return toks  # (max_new_tokens - 1, B)
 
     first = _sample(logits, key, scfg.temperature)[:, None]
-    carry = (first, caches, jnp.asarray(s_prompt, jnp.int32), key)
-    outs = [first[:, 0]]
-    for _ in range(scfg.max_new_tokens - 1):
-        carry, tok = body(carry, None)
-        outs.append(tok)
-    return jnp.stack(outs, axis=1)
+    toks = decode_loop(params, first, caches, key)
+    return jnp.concatenate([first, toks.T], axis=1)
 
 
 def _pad_caches(model: Model, caches, b: int, s_now: int, s_max: int):

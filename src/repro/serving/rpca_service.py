@@ -1,0 +1,218 @@
+"""Slot-based batched RPCA serving endpoint (DESIGN.md Sec. 7).
+
+Continuous-batching lite, mirroring ``serving/engine.py``'s design: a fixed
+batch of request *slots* advances in lock-step through one vmapped,
+jit-compiled solver program; each tick runs ``rounds_per_tick`` consensus
+rounds for every in-flight problem.  Per-slot convergence masks freeze
+finished problems (their carry stops updating) so one slow tenant never
+burns compute for the rest, and the caller refills freed slots between
+ticks -- exactly the decode-slot lifecycle of the LM engine.
+
+Built on the unified solver runtime (``repro.core.runtime``) over the
+centralized CF-PCA solver: each slot holds one full (m, n) problem.
+Warm-starting is first-class: ``submit(m_obs, warm=(U, V))`` seeds a slot
+from a prior solution and resumes the annealing schedule, so streaming
+refresh solves (same tenant, slightly changed data) converge in a handful
+of rounds instead of the full budget.
+
+    svc = RPCAService(m, n, DCFConfig.tuned(rank=8))
+    slot = svc.submit(m_obs)
+    while svc.pending():
+        svc.tick()
+    resp = svc.poll(slot)          # RPCAResponse(l, s, u, v, rounds)
+    svc.release(slot)
+    # streaming refresh: warm-start from the previous factors
+    slot = svc.submit(m_obs_new, warm=(resp.u, resp.v))
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import runtime as rt
+from repro.core.cf_pca import CFProblem, make_problem, make_solver
+from repro.core.factorized import DCFConfig
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class RPCAServiceConfig:
+    """Service knobs (static: changing them recompiles the tick)."""
+
+    slots: int = 8  # concurrent in-flight problems
+    rounds_per_tick: int = 8  # consensus rounds per jitted tick
+    max_rounds: int = 200  # per-problem round budget
+    tol: float = 5e-4  # rel-residual convergence tolerance
+    min_rounds: int = 2  # suppress spurious first-round exits
+
+
+class RPCAResponse(NamedTuple):
+    l: Array  # recovered low-rank matrix (m, n)
+    s: Array  # recovered sparse matrix (m, n)
+    u: Array  # left factor (m, r) -- reuse as warm start
+    v: Array  # right factor (n, r)
+    rounds: int  # consensus rounds actually spent
+    converged: bool  # met the tolerance (False => ran out of max_rounds)
+
+
+class RPCAService:
+    """Batched multi-tenant RPCA solves over ``scfg.slots`` request slots."""
+
+    def __init__(
+        self,
+        m: int,
+        n: int,
+        cfg: DCFConfig,
+        scfg: RPCAServiceConfig = RPCAServiceConfig(),
+        key: Array | None = None,
+    ):
+        self.cfg = cfg
+        self.scfg = scfg
+        self._solver = make_solver(cfg)
+        self._key = key if key is not None else jax.random.PRNGKey(0)
+        self._n_submitted = 0
+
+        b, r = scfg.slots, cfg.rank
+        zeros = jnp.zeros
+        self._problems = CFProblem(
+            m_obs=zeros((b, m, n)),
+            u_init=zeros((b, m, r)),
+            v_init=zeros((b, n, r)),
+            lam0=zeros((b,)),
+            t0=zeros((b,), jnp.int32),
+        )
+        self._carry = jax.vmap(self._solver.init)(self._problems)
+        self._t = zeros((b,), jnp.int32)  # per-slot schedule position
+        self._rounds = zeros((b,), jnp.int32)
+        self._done = zeros((b,), bool)
+        self._hit = zeros((b,), bool)  # met the tolerance (vs budget-out)
+        self._active = np.zeros((b,), bool)  # host-side slot occupancy
+
+        step_b = jax.vmap(self._solver.step, in_axes=(0, 0, 0))
+        diag_b = jax.vmap(self._solver.diagnostics)
+
+        def tick(problems, carry, t, done, rounds, hit, active):
+            """rounds_per_tick lock-step rounds with per-slot freeze."""
+
+            def body(st, _):
+                carry, t, done, rounds, hit = st
+                adv = active & ~done
+                carry = rt.tree_where(adv, step_b(problems, carry, t), carry)
+                d = diag_b(problems, carry)
+                t = t + adv.astype(jnp.int32)
+                rounds = rounds + adv.astype(jnp.int32)
+                hit_now = (d.residual <= scfg.tol) & (
+                    rounds >= scfg.min_rounds
+                )
+                hit = hit | (adv & hit_now)
+                done = done | (adv & (hit_now | (rounds >= scfg.max_rounds)))
+                return (carry, t, done, rounds, hit), None
+
+            (carry, t, done, rounds, hit), _ = jax.lax.scan(
+                body, (carry, t, done, rounds, hit), None,
+                length=scfg.rounds_per_tick,
+            )
+            return carry, t, done, rounds, hit
+
+        self._tick = jax.jit(tick)
+        self._write_slot = jax.jit(
+            lambda batched, single, i: jax.tree.map(
+                lambda b_, x: b_.at[i].set(x), batched, single
+            )
+        )
+        self._finalize_one = jax.jit(self._solver.finalize)
+
+    # -- request lifecycle --------------------------------------------------
+    def submit(
+        self,
+        m_obs: Array,
+        warm: tuple[Array, Array] | None = None,
+    ) -> int | None:
+        """Place a problem into a free slot; returns the slot id or ``None``
+        when the batch is full (caller retries after a tick + poll cycle)."""
+        free = np.flatnonzero(~self._active)
+        if free.size == 0:
+            return None
+        slot = int(free[0])
+        key = jax.random.fold_in(self._key, self._n_submitted)
+        self._n_submitted += 1
+        problem = make_problem(m_obs, self.cfg, key, warm)
+        idx = jnp.asarray(slot)
+        self._problems = self._write_slot(self._problems, problem, idx)
+        self._carry = self._write_slot(
+            self._carry, self._solver.init(problem), idx
+        )
+        self._t = self._t.at[slot].set(0)
+        self._rounds = self._rounds.at[slot].set(0)
+        self._done = self._done.at[slot].set(False)
+        self._hit = self._hit.at[slot].set(False)
+        self._active[slot] = True
+        return slot
+
+    def tick(self) -> None:
+        """Advance every in-flight problem by ``rounds_per_tick`` rounds."""
+        (self._carry, self._t, self._done, self._rounds,
+         self._hit) = self._tick(
+            self._problems, self._carry, self._t, self._done, self._rounds,
+            self._hit, jnp.asarray(self._active),
+        )
+
+    def poll(self, slot: int) -> RPCAResponse | None:
+        """Result for ``slot`` if it finished, else ``None``.  The slot stays
+        occupied until :meth:`release` (its factors remain pollable)."""
+        if not (0 <= slot < self.scfg.slots) or not self._active[slot]:
+            raise ValueError(f"slot {slot} is not occupied")
+        done = np.asarray(self._done)
+        rounds = np.asarray(self._rounds)
+        if not done[slot]:
+            return None
+        take = lambda tree: jax.tree.map(lambda a: a[slot], tree)
+        l, s, u, v = self._finalize_one(take(self._problems), take(self._carry))
+        return RPCAResponse(
+            l=l, s=s, u=u, v=v,
+            rounds=int(rounds[slot]),
+            converged=bool(np.asarray(self._hit)[slot]),
+        )
+
+    def release(self, slot: int) -> None:
+        self._active[slot] = False
+
+    def pending(self) -> int:
+        """Number of occupied slots still iterating."""
+        return int((self._active & ~np.asarray(self._done)).sum())
+
+    # -- convenience --------------------------------------------------------
+    def solve_all(
+        self,
+        matrices: list[Array],
+        warm: dict[int, tuple[Array, Array]] | None = None,
+    ) -> list[RPCAResponse]:
+        """Drain a queue of problems through the slots (continuous refill).
+
+        ``warm`` maps queue indices to prior factors.  Returns responses in
+        queue order.
+        """
+        warm = warm or {}
+        results: list[RPCAResponse | None] = [None] * len(matrices)
+        queue = list(enumerate(matrices))
+        in_flight: dict[int, int] = {}  # slot -> queue index
+        while queue or in_flight:
+            while queue:
+                qi, mat = queue[0]
+                slot = self.submit(mat, warm.get(qi))
+                if slot is None:
+                    break
+                queue.pop(0)
+                in_flight[slot] = qi
+            self.tick()
+            for slot in list(in_flight):
+                resp = self.poll(slot)
+                if resp is not None:
+                    results[in_flight.pop(slot)] = resp
+                    self.release(slot)
+        return results

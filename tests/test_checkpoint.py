@@ -66,10 +66,11 @@ def test_elastic_restore_resharding(tmp_path):
     shardings)."""
     from jax.sharding import NamedSharding, PartitionSpec as P
 
+    from repro.launch.mesh import make_compat_mesh
+
     tree = _tree(jax.random.PRNGKey(4))
     ckpt.save(str(tmp_path), 2, tree, mesh_shape=(4, 2))
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_compat_mesh((1,), ("data",))
     shardings = jax.tree.map(
         lambda _: NamedSharding(mesh, P()), tree)
     restored, _ = ckpt.restore(str(tmp_path), tree, shardings=shardings)

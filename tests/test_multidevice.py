@@ -10,13 +10,20 @@ import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+# Version-compat mesh constructor prepended to every subprocess snippet
+# (the snippets run with PYTHONPATH=src, so the repo's shared helper is
+# importable).
+COMPAT = """
+from repro.launch.mesh import make_compat_mesh as compat_mesh
+"""
+
 
 def run_py(code: str, timeout=900) -> str:
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = os.path.join(REPO, "src")
     out = subprocess.run(
-        [sys.executable, "-c", textwrap.dedent(code)],
+        [sys.executable, "-c", COMPAT + textwrap.dedent(code)],
         capture_output=True, text=True, timeout=timeout, env=env,
     )
     assert out.returncode == 0, f"stderr:\n{out.stderr}\nstdout:\n{out.stdout}"
@@ -32,8 +39,7 @@ def test_sharded_engine_matches_simulated():
         p = generate_problem(key, 128, 160, rank=6, sparsity=0.05)
         cfg = DCFConfig.tuned(6, outer_iters=60)
         r_sim = dcf_pca(p.m_obs, cfg, num_clients=8)
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat_mesh((8,), ("data",))
         r_sh = dcf_pca_sharded(p.m_obs, cfg, mesh, data_axes=("data",))
         e1 = float(relative_error(r_sim.l, r_sim.s, p.l0, p.s0))
         e2 = float(relative_error(r_sh.l, r_sh.s, p.l0, p.s0))
@@ -54,8 +60,7 @@ def test_sharded_engine_row_sharding():
         key = jax.random.PRNGKey(3)
         p = generate_problem(key, 128, 128, rank=5, sparsity=0.05)
         cfg = DCFConfig.tuned(5, outer_iters=60)
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = compat_mesh((4, 2), ("data", "model"))
         r = dcf_pca_sharded(p.m_obs, cfg, mesh, data_axes=("data",),
                             model_axis="model")
         e = float(relative_error(r.l, r.s, p.l0, p.s0))
@@ -74,8 +79,7 @@ def test_robust_grad_aggregation_byzantine():
         from jax.experimental.shard_map import shard_map
         from repro.distributed.grad_compress import (CompressConfig,
                                                      consensus_compress)
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat_mesh((8,), ("data",))
         key = jax.random.PRNGKey(0)
         m, k, r = 256, 128, 4
         u0 = jax.random.normal(jax.random.PRNGKey(1), (m, r))
@@ -126,8 +130,7 @@ def test_robust_train_step_runs():
 
         cfg = get_smoke_config("tinyllama-1.1b")
         model = get_model(cfg)
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat_mesh((8,), ("data",))
         rules = ShardingRules(dp=("data",))
         params = pm.materialize(model.specs(), jax.random.PRNGKey(0))
         state = opt.init(params)
@@ -154,8 +157,7 @@ def test_collective_bytes_counting():
         import jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.roofline.hlo_costs import analyze_hlo
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat_mesh((8,), ("data",))
         x = jax.ShapeDtypeStruct((1024, 512), jnp.float32,
                                  sharding=NamedSharding(mesh, P("data")))
         def f(x):

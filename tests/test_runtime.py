@@ -1,0 +1,214 @@
+"""Unified solver runtime: execution modes, batching, warm starts, service.
+
+The contracts under test:
+  * early-stopped solves (while / chunk modes) match the fixed-length scan
+    within tolerance, in strictly fewer rounds;
+  * ``solve_batch`` over a stack of problems matches the serial solves;
+  * warm-started re-solves converge in (far) fewer rounds;
+  * the slot-based service drains a queue through a smaller slot pool.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    APGMConfig, DCFConfig, IALMConfig, RunConfig, apgm, cf_pca, dcf_pca,
+    dcf_pca_batch, generate_problem, ialm, relative_error,
+)
+
+M = N = 96
+RANK = 5
+SPARSITY = 0.05
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return generate_problem(jax.random.PRNGKey(7), M, N, RANK, SPARSITY)
+
+
+def test_stats_replace_history(problem):
+    r = ialm(problem.m_obs, IALMConfig(iters=40))
+    assert r.stats.objective.shape == (40,)
+    assert r.stats.residual.shape == (40,)
+    assert int(r.stats.rounds) == 40
+    np.testing.assert_array_equal(
+        np.asarray(r.history), np.asarray(r.stats.objective)
+    )
+
+
+def test_ialm_while_matches_fixed(problem):
+    cfg = IALMConfig(iters=60)
+    fixed = ialm(problem.m_obs, cfg)
+    early = ialm(problem.m_obs, cfg, run=RunConfig(mode="while", tol=1e-7))
+    assert int(early.stats.rounds) < 60
+    assert bool(early.stats.converged)
+    # Same recovery up to the stopping tolerance.
+    e_fixed = float(relative_error(fixed.l, fixed.s, problem.l0, problem.s0))
+    e_early = float(relative_error(early.l, early.s, problem.l0, problem.s0))
+    assert e_early < 1e-10
+    assert abs(e_early - e_fixed) < 1e-10
+
+
+def test_apgm_chunk_matches_fixed(problem):
+    cfg = APGMConfig(iters=200)
+    fixed = apgm(problem.m_obs, cfg)
+    early = apgm(
+        problem.m_obs, cfg,
+        run=RunConfig(mode="chunk", tol=1e-7, chunk_size=16),
+    )
+    assert int(early.stats.rounds) < 200
+    e_early = float(relative_error(early.l, early.s, problem.l0, problem.s0))
+    assert e_early < 1e-8
+
+
+def test_apgm_full_relaxed_objective(problem):
+    """The tracked objective is mu ||L||_* + mu lam ||S||_1 + 1/2 coupling,
+    not just the quadratic term."""
+    cfg = APGMConfig(iters=200)
+    r = apgm(problem.m_obs, cfg)
+    mu0 = cfg.mu_scale * jnp.linalg.norm(problem.m_obs, ord=2)
+    mu_bar = cfg.mu_bar_scale * mu0  # continuation floor, reached long ago
+    lam = 1.0 / jnp.sqrt(float(max(M, N)))
+    sv = jnp.linalg.svd(r.l, compute_uv=False)
+    want = mu_bar * (jnp.sum(sv) + lam * jnp.sum(jnp.abs(r.s))) + 0.5 * jnp.sum(
+        (r.l + r.s - problem.m_obs) ** 2
+    )
+    np.testing.assert_allclose(
+        float(r.stats.objective[-1]), float(want), rtol=1e-4
+    )
+    # ... and it must actually decrease.
+    assert float(r.stats.objective[-1]) < float(r.stats.objective[0])
+
+
+def test_dcf_early_stop_reaches_seed_quality(problem):
+    cfg = DCFConfig.tuned(RANK)
+    early = dcf_pca(
+        problem.m_obs, cfg, num_clients=8,
+        run=RunConfig(mode="chunk", tol=5e-4, chunk_size=8),
+    )
+    assert int(early.stats.rounds) < cfg.outer_iters
+    # The seed-level acceptance threshold for this preset.
+    assert float(
+        relative_error(early.l, early.s, problem.l0, problem.s0)
+    ) < 1e-4
+
+
+def test_batch_matches_serial():
+    probs = [
+        generate_problem(jax.random.PRNGKey(i), M, N, RANK, SPARSITY)
+        for i in range(3)
+    ]
+    m_batch = jnp.stack([p.m_obs for p in probs])
+    keys = jax.random.split(jax.random.PRNGKey(3), 3)
+    cfg = DCFConfig.tuned(RANK, outer_iters=60)
+
+    rb = dcf_pca_batch(m_batch, cfg, num_clients=8, keys=keys)
+    assert rb.l.shape == (3, M, N)
+    assert rb.stats.rounds.shape == (3,)
+    for i, p in enumerate(probs):
+        rs = dcf_pca(p.m_obs, cfg, num_clients=8, key=keys[i])
+        # Identical up to float32 batched-matmul reassociation noise.
+        np.testing.assert_allclose(
+            np.asarray(rb.l[i]), np.asarray(rs.l), atol=1e-3, rtol=0
+        )
+        np.testing.assert_allclose(
+            np.asarray(rb.s[i]), np.asarray(rs.s), atol=1e-3, rtol=0
+        )
+
+
+def test_batch_per_problem_freeze():
+    """Problems of different difficulty stop at different rounds; frozen
+    problems stop writing diagnostics (zero-padded past their exit)."""
+    easy = generate_problem(jax.random.PRNGKey(0), M, N, 2, 0.02)
+    hard = generate_problem(jax.random.PRNGKey(1), M, N, 8, 0.10)
+    m_batch = jnp.stack([easy.m_obs, hard.m_obs])
+    cfg = DCFConfig.tuned(8)
+    rb = dcf_pca_batch(
+        m_batch, cfg, num_clients=8,
+        run=RunConfig(mode="while", tol=5e-4),
+    )
+    rounds = np.asarray(rb.stats.rounds)
+    assert bool(np.all(np.asarray(rb.stats.converged)))
+    assert rounds[0] != rounds[1]
+    res = np.asarray(rb.stats.residual)
+    for i in range(2):
+        assert np.all(res[i, rounds[i]:] == 0.0)
+        assert np.all(res[i, 1:rounds[i]] > 0.0)
+    errs = [
+        float(relative_error(rb.l[0], rb.s[0], easy.l0, easy.s0)),
+        float(relative_error(rb.l[1], rb.s[1], hard.l0, hard.s0)),
+    ]
+    assert max(errs) < 1e-3
+
+
+def test_warm_start_fewer_rounds(problem):
+    cfg = DCFConfig.tuned(RANK)
+    run = RunConfig(mode="while", tol=5e-4)
+    cold = cf_pca(problem.m_obs, cfg, run=run)
+    assert bool(cold.stats.converged)
+    # Streaming refresh: slightly perturbed data, warm factors.
+    pert = problem.m_obs + 0.01 * jax.random.normal(
+        jax.random.PRNGKey(9), problem.m_obs.shape
+    )
+    recold = cf_pca(pert, cfg, run=run)
+    rewarm = cf_pca(pert, cfg, run=run, warm=(cold.u, cold.v))
+    assert int(rewarm.stats.rounds) < int(recold.stats.rounds) // 2
+    # Warm solve is no worse on the stable ground truth.
+    e_warm = float(jnp.linalg.norm(rewarm.l - problem.l0))
+    e_cold = float(jnp.linalg.norm(recold.l - problem.l0))
+    assert e_warm <= e_cold * 1.5
+
+
+def test_dcf_warm_start(problem):
+    cfg = DCFConfig.tuned(RANK)
+    run = RunConfig(mode="while", tol=5e-4)
+    cold = dcf_pca(problem.m_obs, cfg, num_clients=8, run=run)
+    rewarm = dcf_pca(
+        problem.m_obs, cfg, num_clients=8, run=run, warm=(cold.u, cold.v)
+    )
+    assert int(rewarm.stats.rounds) <= 4
+    assert float(
+        relative_error(rewarm.l, rewarm.s, problem.l0, problem.s0)
+    ) < 1e-4
+
+
+def test_scan_mode_unchanged_vs_runtime(problem):
+    """The default fixed scan is insensitive to the runtime plumbing:
+    explicitly requesting scan mode equals the default call."""
+    cfg = DCFConfig.tuned(RANK, outer_iters=30)
+    a = dcf_pca(problem.m_obs, cfg, num_clients=8)
+    b = dcf_pca(problem.m_obs, cfg, num_clients=8, run=RunConfig(mode="scan"))
+    np.testing.assert_array_equal(np.asarray(a.l), np.asarray(b.l))
+    np.testing.assert_array_equal(np.asarray(a.s), np.asarray(b.s))
+
+
+def test_rpca_service_continuous_batching():
+    from repro.serving.rpca_service import RPCAService, RPCAServiceConfig
+
+    probs = [
+        generate_problem(jax.random.PRNGKey(i), M, N, RANK, SPARSITY)
+        for i in range(5)
+    ]
+    cfg = DCFConfig.tuned(RANK)
+    svc = RPCAService(
+        M, N, cfg,
+        RPCAServiceConfig(slots=3, rounds_per_tick=10, max_rounds=100,
+                          tol=5e-4),
+    )
+    resps = svc.solve_all([p.m_obs for p in probs])
+    assert all(r is not None and r.converged for r in resps)
+    for p, r in zip(probs, resps):
+        assert float(relative_error(r.l, r.s, p.l0, p.s0)) < 1e-4
+
+    # Streaming refresh: warm factors => a handful of rounds.
+    pert = probs[0].m_obs + 0.01 * jax.random.normal(
+        jax.random.PRNGKey(99), probs[0].m_obs.shape
+    )
+    slot = svc.submit(pert, warm=(resps[0].u, resps[0].v))
+    assert slot is not None
+    while svc.pending():
+        svc.tick()
+    refresh = svc.poll(slot)
+    svc.release(slot)
+    assert refresh.rounds < resps[0].rounds // 3
