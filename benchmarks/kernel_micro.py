@@ -4,7 +4,17 @@ that motivates the fusion (DESIGN.md Sec. 2).
 
 On CPU the interpret-mode wall time is NOT the TPU story; the derived
 column reports the modelled HBM bytes each implementation must move, which
-is what the fusion buys on hardware (3 m*n transfers -> 1)."""
+is what the fusion buys on hardware (3 m*n transfers -> 1).
+
+Masked (robust matrix completion) variants ride along: they move one extra
+m*n read (the Omega mask tile) in both the naive and fused models, so the
+fusion ratio drops from 3x to 2x -- still the difference between one and
+two full-matrix round-trips per sweep.
+
+Rows are emitted under stable keys (``kernel/<name>``) into
+``bench_results.json`` so successive ``BENCH_*.json`` snapshots can be
+diffed for the perf trajectory.
+"""
 from __future__ import annotations
 
 import time
@@ -25,22 +35,34 @@ def _timeit(fn, *args, iters=3):
 
 def run(m=1024, n=1024, r=32):
     key = jax.random.PRNGKey(0)
-    ku, kv, km = jax.random.split(key, 3)
+    ku, kv, km, kw = jax.random.split(key, 4)
     u = jax.random.normal(ku, (m, r))
     v = jax.random.normal(kv, (n, r))
     mat = jax.random.normal(km, (m, n)) * 4
+    w = (jax.random.uniform(kw, (m, n)) < 0.7).astype(jnp.float32)
     lam = 1.0
     f32 = 4
     rows = []
+    skinny = (m + n) * r * f32
     for name in ("huber_contract_v", "huber_contract_u", "residual_shrink"):
         t_ref = _timeit(lambda: getattr(ref, name)(u, v, mat, lam))
         # modelled HBM traffic per call (bytes)
-        naive = 3 * m * n * f32 + (m + n) * r * f32  # R, S/Psi materialized
-        fused = 1 * m * n * f32 + (m + n) * r * f32  # one M read
+        naive = 3 * m * n * f32 + skinny  # R, S/Psi materialized
+        fused = 1 * m * n * f32 + skinny  # one M read
         rows.append({"bench": "kernel", "name": name,
                      "ref_us": t_ref * 1e6,
                      "bytes_naive": naive, "bytes_fused": fused,
                      "traffic_ratio": naive / fused})
+        # masked variant: +1 m*n read (the mask) on both sides
+        t_ref_m = _timeit(
+            lambda: getattr(ref, name + "_masked")(u, v, mat, w, lam)
+        )
+        naive_m = 4 * m * n * f32 + skinny  # R, S/Psi, W materialized
+        fused_m = 2 * m * n * f32 + skinny  # M + W reads only
+        rows.append({"bench": "kernel", "name": name + "_masked",
+                     "ref_us": t_ref_m * 1e6,
+                     "bytes_naive": naive_m, "bytes_fused": fused_m,
+                     "traffic_ratio": naive_m / fused_m})
     return rows
 
 

@@ -20,6 +20,7 @@ from benchmarks import (  # noqa: E402
     fig4_local_iters,
     grad_compress_bench,
     kernel_micro,
+    masked_rpca_bench,
     roofline_summary,
     solver_runtime_bench,
     table1_upper_rank,
@@ -31,6 +32,7 @@ BENCHES = {
     "table1": table1_upper_rank,
     "fig4": fig4_local_iters,
     "kernel": kernel_micro,
+    "masked": masked_rpca_bench,
     "grad_compress": grad_compress_bench,
     "roofline": roofline_summary,
     "runtime": solver_runtime_bench,
@@ -43,12 +45,15 @@ def main() -> None:
                     help="paper-scale problem sizes (slow on CPU)")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench subset")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit nonzero if any bench raised (CI gate)")
     ap.add_argument("--json-out", default=os.path.join(HERE,
                                                        "bench_results.json"))
     args = ap.parse_args()
 
     names = list(BENCHES) if not args.only else args.only.split(",")
     all_rows = {}
+    failed = []
     for name in names:
         print(f"# === {name} ===", flush=True)
         try:
@@ -56,9 +61,12 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001
             print(f"{name}/ERROR,0,{e!r}")
             all_rows[name] = {"error": repr(e)}
+            failed.append(name)
     with open(args.json_out, "w") as f:
         json.dump(all_rows, f, indent=1, default=str)
     print(f"# wrote {args.json_out}")
+    if args.strict and failed:
+        sys.exit(f"benches raised: {', '.join(failed)}")
 
 
 if __name__ == "__main__":

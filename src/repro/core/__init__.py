@@ -7,12 +7,14 @@ from repro.core.dcf_pca import DCFResult, dcf_pca, dcf_pca_batch, dcf_pca_sharde
 from repro.core.factorized import DCFConfig
 from repro.core.ialm import IALMConfig, ialm, ialm_batch
 from repro.core.metrics import (
+    CompletionErrors,
+    completion_errors,
     low_rank_relative_error,
     rank_gap,
     relative_error,
     singular_value_error,
 )
-from repro.core.problems import RPCAProblem, generate_problem
+from repro.core.problems import RPCAProblem, generate_mask, generate_problem
 from repro.core.runtime import RunConfig, SolveStats, Solver, solve_batch
 
 __all__ = [
@@ -35,10 +37,13 @@ __all__ = [
     "SolveStats",
     "Solver",
     "solve_batch",
+    "CompletionErrors",
+    "completion_errors",
     "low_rank_relative_error",
     "rank_gap",
     "relative_error",
     "singular_value_error",
     "RPCAProblem",
+    "generate_mask",
     "generate_problem",
 ]

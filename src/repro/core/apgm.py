@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import runtime as rt
-from repro.core.ops import soft_threshold, svt
+from repro.core.ops import masked_soft_threshold, soft_threshold, svt
 
 Array = jax.Array
 
@@ -58,12 +58,16 @@ class APGMProblem(NamedTuple):
     """Problem pytree: observed matrix plus initial iterates.
 
     The cold start is ``L = S = 0``; a warm start simply ships nonzero
-    initial iterates, so both flow through the same init.
+    initial iterates, so both flow through the same init.  ``mask`` (0/1
+    Omega, ``None`` = fully observed) switches the coupling term to
+    ``1/2 ||P_Omega(L + S - M)||_F^2`` -- robust matrix completion; the
+    SVT prox then fills the hidden entries of L from the low-rank model.
     """
 
     m_obs: Array
     l_init: Array
     s_init: Array
+    mask: Array | None = None
 
 
 class _Carry(NamedTuple):
@@ -91,6 +95,8 @@ def make_solver(cfg: APGMConfig) -> rt.Solver:
             if cfg.lam is not None
             else 1.0 / jnp.sqrt(jnp.asarray(float(max(m, n)), p.m_obs.dtype))
         )
+        # _problem zero-fills hidden entries, so p.m_obs is already
+        # P_Omega(M) and every norm below is an observed-entry norm.
         norm2 = jnp.linalg.norm(p.m_obs, ord=2)
         mu0 = cfg.mu_scale * norm2
         one = jnp.ones(())
@@ -108,15 +114,26 @@ def make_solver(cfg: APGMConfig) -> rt.Solver:
         beta = (c.t_prev - 1.0) / c.t_nes
         yl = c.l + beta * (c.l - c.l_prev)
         ys = c.s + beta * (c.s - c.s_prev)
-        # Gradient of the coupling term 1/2||L + S - M||^2 (Lipschitz 2).
+        # Gradient of the coupling term 1/2||P_Omega(L + S - M)||^2
+        # (Lipschitz 2; masking only shrinks the constant).
         g = yl + ys - p.m_obs
+        if p.mask is not None:
+            g = p.mask * g
         l_new, sv = svt(yl - 0.5 * g, c.mu / 2.0)
-        s_new = soft_threshold(ys - 0.5 * g, c.lam * c.mu / 2.0)
+        if p.mask is None:
+            s_new = soft_threshold(ys - 0.5 * g, c.lam * c.mu / 2.0)
+        else:  # S lives on the observed support
+            s_new = masked_soft_threshold(
+                ys - 0.5 * g, c.lam * c.mu / 2.0, p.mask
+            )
         t_new = (1.0 + jnp.sqrt(1.0 + 4.0 * c.t_nes * c.t_nes)) / 2.0
         mu_new = jnp.maximum(cfg.eta * c.mu, c.mu_bar)
         # Full relaxed objective at the mu used this iteration; ||L||_* is
         # free -- svt already returns L_new's (thresholded) spectrum.
-        coupling = 0.5 * jnp.sum((l_new + s_new - p.m_obs) ** 2)
+        resid = l_new + s_new - p.m_obs
+        if p.mask is not None:
+            resid = p.mask * resid
+        coupling = 0.5 * jnp.sum(resid**2)
         obj = c.mu * (jnp.sum(sv) + c.lam * jnp.sum(jnp.abs(s_new))) + coupling
         # Relative primal change: the standard APGM stopping measure.
         resid = (
@@ -138,12 +155,18 @@ def make_solver(cfg: APGMConfig) -> rt.Solver:
     return rt.Solver(init, step, diagnostics, finalize)
 
 
-def _problem(m_obs: Array, warm) -> APGMProblem:
+def _problem(m_obs: Array, warm, mask=None) -> APGMProblem:
+    if mask is not None:
+        # Zero-fill hidden entries up front: the solution must not depend
+        # on whatever the caller stored there (sentinels, NaNs, stale
+        # data).  `+ 0.0` canonicalizes -0.0 -> +0.0 so even LAPACK's SVD
+        # (bit-sensitive to the sign of zero) sees one representation.
+        m_obs = mask * m_obs + 0.0
     if warm is None:
         z = jnp.zeros_like(m_obs)
-        return APGMProblem(m_obs=m_obs, l_init=z, s_init=z)
+        return APGMProblem(m_obs=m_obs, l_init=z, s_init=z, mask=mask)
     l0, s0 = warm
-    return APGMProblem(m_obs=m_obs, l_init=l0, s_init=s0)
+    return APGMProblem(m_obs=m_obs, l_init=l0, s_init=s0, mask=mask)
 
 
 @partial(jax.jit, static_argnames=("cfg", "run"))
@@ -153,10 +176,12 @@ def apgm(
     *,
     run: rt.RunConfig | None = None,
     warm: tuple[Array, Array] | None = None,
+    mask: Array | None = None,
 ) -> ConvexResult:
-    """Solve one problem.  ``run=None`` is the paper-faithful fixed scan."""
+    """Solve one problem.  ``run=None`` is the paper-faithful fixed scan.
+    ``mask`` (0/1 Omega) solves the robust matrix completion variant."""
     solver = make_solver(cfg)
-    problem = _problem(m_obs, warm)
+    problem = _problem(m_obs, warm, mask)
     carry, stats = rt.run(solver, problem, cfg.iters, run or rt.FIXED)
     l, s = solver.finalize(problem, carry)
     return ConvexResult(l=l, s=s, stats=stats)
@@ -169,11 +194,13 @@ def apgm_batch(
     *,
     run: rt.RunConfig | None = None,
     warm: tuple[Array, Array] | None = None,  # (B, m, n) each
+    mask: Array | None = None,  # (B, m, n) per-problem masks
 ) -> ConvexResult:
     """Solve a stack of problems concurrently (per-problem early exit)."""
-    problems = jax.vmap(_problem, in_axes=(0, None if warm is None else 0))(
-        m_batch, warm
-    )
+    problems = jax.vmap(
+        _problem,
+        in_axes=(0, None if warm is None else 0, None if mask is None else 0),
+    )(m_batch, warm, mask)
     (l, s), _, stats = rt.solve_batch(
         make_solver(cfg), problems, cfg.iters, run or rt.FIXED
     )

@@ -38,13 +38,19 @@ class CFResult(NamedTuple):
 
 class CFProblem(NamedTuple):
     """Problem pytree: data, initial factors (cold = random, warm = prior
-    solution), and the resolved soft-threshold level."""
+    solution), and the resolved soft-threshold level.
+
+    ``mask`` is the optional 0/1 observation matrix Omega (robust matrix
+    completion); ``None`` (an empty pytree leaf) keeps the fully-observed
+    code path bit-for-bit unchanged.
+    """
 
     m_obs: Array  # (m, n)
     u_init: Array  # (m, r)
     v_init: Array  # (n, r)
     lam0: Array  # () resolved base threshold
     t0: Array  # () int32 schedule offset (warm starts resume, not restart)
+    mask: Array | None = None  # (m, n) observation mask Omega
 
 
 class _Carry(NamedTuple):
@@ -71,10 +77,11 @@ def make_solver(cfg: fz.DCFConfig, *, with_objective: bool = False) -> rt.Solver
         eta = cfg.lr(t)
         lam_t = cfg.lam_at(p.lam0, t)
         u, v = fz.local_round(
-            c.u, c.v, p.m_obs, cfg=cfg, lam=lam_t, n_frac=1.0, eta=eta
+            c.u, c.v, p.m_obs, cfg=cfg, lam=lam_t, n_frac=1.0, eta=eta,
+            w=p.mask,
         )
         obj = (
-            fz.local_objective(u, v, p.m_obs, cfg.rho, lam_t, 1.0)
+            fz.local_objective(u, v, p.m_obs, cfg.rho, lam_t, 1.0, w=p.mask)
             if track
             else jnp.zeros((), p.m_obs.dtype)
         )
@@ -85,7 +92,8 @@ def make_solver(cfg: fz.DCFConfig, *, with_objective: bool = False) -> rt.Solver
         return c.diag
 
     def finalize(p: CFProblem, c: _Carry):
-        l, s = fz.finalize(c.u, c.v, p.m_obs, cfg.final_lam(p.lam0), cfg.impl)
+        l, s = fz.finalize(c.u, c.v, p.m_obs, cfg.final_lam(p.lam0), cfg.impl,
+                           w=p.mask)
         return l, s, c.u, c.v
 
     return rt.Solver(init, step, diagnostics, finalize)
@@ -97,6 +105,7 @@ def make_problem(
     key: Array,
     warm: tuple[Array, Array] | None = None,
     t0: int | Array | None = None,
+    mask: Array | None = None,
 ) -> CFProblem:
     """Assemble the problem pytree (random cold start or warm factors).
 
@@ -104,12 +113,18 @@ def make_problem(
     defaults to ``cfg.outer_iters`` -- the re-solve *continues* the
     schedule (fully annealed lam, settled lr) instead of replaying the
     aggressive early phase, which would blow away the prior factors.
+    ``mask`` attaches an observation mask (robust matrix completion); the
+    auto-calibrated threshold then uses the observed entries only and the
+    hidden entries of ``m_obs`` are zero-filled up front (the solve must
+    not depend on whatever the caller stored there).
     """
+    if mask is not None:
+        m_obs = mask * m_obs
     m, n = m_obs.shape
     lam0 = (
         jnp.asarray(cfg.lam, jnp.float32)
         if cfg.lam is not None
-        else fz.robust_lam(m_obs)
+        else fz.robust_lam(m_obs, mask=mask)
     )
     if warm is None:
         state = fz.init_state(key, m, n, cfg.rank, m_obs.dtype)
@@ -125,7 +140,7 @@ def make_problem(
         t0 = 0 if warm is None else cfg.outer_iters
     return CFProblem(
         m_obs=m_obs, u_init=u0, v_init=v0, lam0=lam0,
-        t0=jnp.asarray(t0, jnp.int32),
+        t0=jnp.asarray(t0, jnp.int32), mask=mask,
     )
 
 
@@ -137,13 +152,18 @@ def cf_pca(
     *,
     run: rt.RunConfig | None = None,
     warm: tuple[Array, Array] | None = None,
+    mask: Array | None = None,
 ) -> CFResult:
-    """Run centralized CF-PCA for up to ``cfg.outer_iters`` rounds."""
+    """Run centralized CF-PCA for up to ``cfg.outer_iters`` rounds.
+
+    ``mask`` (0/1, same shape as ``m_obs``) switches every residual pass to
+    observed entries only -- robust matrix completion.
+    """
     if key is None:
         key = jax.random.PRNGKey(0)
     run_cfg = run or rt.FIXED
     solver = make_solver(cfg, with_objective=run_cfg.needs_objective)
-    problem = make_problem(m_obs, cfg, key, warm)
+    problem = make_problem(m_obs, cfg, key, warm, mask=mask)
     carry, stats = rt.run(solver, problem, cfg.outer_iters, run_cfg)
     l, s, u, v = solver.finalize(problem, carry)
     return CFResult(l=l, s=s, u=u, v=v, stats=stats)
@@ -157,15 +177,21 @@ def cf_pca_batch(
     *,
     run: rt.RunConfig | None = None,
     warm: tuple[Array, Array] | None = None,  # ((B,m,r), (B,n,r))
+    mask: Array | None = None,  # (B, m, n) per-problem observation masks
 ) -> CFResult:
-    """Solve a stack of problems concurrently; finished problems freeze."""
+    """Solve a stack of problems concurrently; finished problems freeze.
+
+    ``mask`` carries heterogeneous per-problem observation masks (leading
+    batch axis, like ``m_batch``).
+    """
     if keys is None:
         keys = jax.random.split(jax.random.PRNGKey(0), m_batch.shape[0])
     run_cfg = run or rt.FIXED
     problems = jax.vmap(
-        lambda mo, k, w: make_problem(mo, cfg, k, w),
-        in_axes=(0, 0, None if warm is None else 0),
-    )(m_batch, keys, warm)
+        lambda mo, k, w, om: make_problem(mo, cfg, k, w, mask=om),
+        in_axes=(0, 0, None if warm is None else 0,
+                 None if mask is None else 0),
+    )(m_batch, keys, warm, mask)
     (l, s, u, v), _, stats = rt.solve_batch(
         make_solver(cfg, with_objective=run_cfg.needs_objective),
         problems,

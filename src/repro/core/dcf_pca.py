@@ -55,13 +55,19 @@ class DCFResult(NamedTuple):
 
 
 class DCFProblem(NamedTuple):
-    """Simulated-engine problem pytree: client blocks + initial factors."""
+    """Simulated-engine problem pytree: client blocks + initial factors.
+
+    ``mask`` carries the client-blocked observation mask (robust matrix
+    completion); ``None`` keeps the fully-observed path bit-for-bit
+    unchanged.
+    """
 
     blocks: Array  # (E, m, n_i) column blocks, one per client
     u_init: Array  # (m, r) server broadcast
     v_init: Array  # (E, n_i, r) per-client factors
     lam0: Array  # () resolved base threshold
     t0: Array  # () int32 schedule offset (warm starts resume, not restart)
+    mask: Array | None = None  # (E, m, n_i) blocked observation mask
 
 
 class _Carry(NamedTuple):
@@ -89,19 +95,30 @@ def make_solver(cfg: fz.DCFConfig, *, with_objective: bool = False) -> rt.Solver
         lam_t = cfg.lam_at(p.lam0, t)
         local = partial(fz.local_round, cfg=cfg, lam=lam_t, n_frac=n_frac)
         # Server broadcasts U; clients run K local iterations concurrently.
-        u_i, v = jax.vmap(lambda vb, mb: local(c.u, vb, mb, eta=eta))(
-            c.v, p.blocks
-        )
+        if p.mask is None:
+            u_i, v = jax.vmap(lambda vb, mb: local(c.u, vb, mb, eta=eta))(
+                c.v, p.blocks
+            )
+        else:
+            u_i, v = jax.vmap(
+                lambda vb, mb, wb: local(c.u, vb, mb, eta=eta, w=wb)
+            )(c.v, p.blocks, p.mask)
         u = jnp.mean(u_i, axis=0)  # Eq. (9): FedAvg consensus
-        obj = (
-            jax.vmap(
-                lambda vb, mb: fz.local_objective(
-                    u, vb, mb, cfg.rho, lam_t, n_frac
-                )
-            )(v, p.blocks).sum()
-            if track
-            else jnp.zeros((), p.blocks.dtype)
-        )
+        if track:
+            if p.mask is None:
+                obj = jax.vmap(
+                    lambda vb, mb: fz.local_objective(
+                        u, vb, mb, cfg.rho, lam_t, n_frac
+                    )
+                )(v, p.blocks).sum()
+            else:
+                obj = jax.vmap(
+                    lambda vb, mb, wb: fz.local_objective(
+                        u, vb, mb, cfg.rho, lam_t, n_frac, w=wb
+                    )
+                )(v, p.blocks, p.mask).sum()
+        else:
+            obj = jnp.zeros((), p.blocks.dtype)
         resid = jnp.linalg.norm(u - c.u) / (jnp.linalg.norm(c.u) + 1e-30)
         return _Carry(u=u, v=v, diag=rt.Diag(obj, resid))
 
@@ -109,11 +126,18 @@ def make_solver(cfg: fz.DCFConfig, *, with_objective: bool = False) -> rt.Solver
         return c.diag
 
     def finalize(p: DCFProblem, c: _Carry):
-        l_blocks, s_blocks = jax.vmap(
-            lambda vb, mb: fz.finalize(
-                c.u, vb, mb, cfg.final_lam(p.lam0), cfg.impl
-            )
-        )(c.v, p.blocks)
+        if p.mask is None:
+            l_blocks, s_blocks = jax.vmap(
+                lambda vb, mb: fz.finalize(
+                    c.u, vb, mb, cfg.final_lam(p.lam0), cfg.impl
+                )
+            )(c.v, p.blocks)
+        else:
+            l_blocks, s_blocks = jax.vmap(
+                lambda vb, mb, wb: fz.finalize(
+                    c.u, vb, mb, cfg.final_lam(p.lam0), cfg.impl, w=wb
+                )
+            )(c.v, p.blocks, p.mask)
         return (
             prob.merge_columns(l_blocks),
             prob.merge_columns(s_blocks),
@@ -131,17 +155,25 @@ def make_problem(
     key: Array,
     warm: tuple[Array, Array] | None = None,
     t0: int | Array | None = None,
+    mask: Array | None = None,
 ) -> DCFProblem:
     """Assemble the simulated-engine problem pytree.  See
     ``cf_pca.make_problem`` for the warm-start ``t0`` schedule-resume
-    convention."""
+    convention.  ``mask`` is the (m, n) observation mask; it is split into
+    the same column blocks as ``m_obs`` (each client sees its own slice of
+    Omega) and the hidden entries of ``m_obs`` are zero-filled up front."""
+    if mask is not None:
+        m_obs = mask * m_obs
     m, n = m_obs.shape
     lam0 = (
         jnp.asarray(cfg.lam, jnp.float32)
         if cfg.lam is not None
-        else fz.robust_lam(m_obs)
+        else fz.robust_lam(m_obs, mask=mask)
     )
     blocks = prob.split_columns(m_obs, num_clients)  # (E, m, n_i)
+    mask_blocks = (
+        None if mask is None else prob.split_columns(mask, num_clients)
+    )
     n_i = blocks.shape[-1]
     if warm is None:
         k_u, k_v = jax.random.split(key)
@@ -161,7 +193,7 @@ def make_problem(
         t0 = 0 if warm is None else cfg.outer_iters
     return DCFProblem(
         blocks=blocks, u_init=u0, v_init=v0, lam0=lam0,
-        t0=jnp.asarray(t0, jnp.int32),
+        t0=jnp.asarray(t0, jnp.int32), mask=mask_blocks,
     )
 
 
@@ -174,13 +206,18 @@ def dcf_pca(
     *,
     run: rt.RunConfig | None = None,
     warm: tuple[Array, Array] | None = None,
+    mask: Array | None = None,
 ) -> DCFResult:
-    """Run DCF-PCA with ``num_clients`` simulated clients on one device."""
+    """Run DCF-PCA with ``num_clients`` simulated clients on one device.
+
+    ``mask`` (0/1, same shape as ``m_obs``) restricts every client's
+    residual work to its observed entries (robust matrix completion).
+    """
     if key is None:
         key = jax.random.PRNGKey(0)
     run_cfg = run or rt.FIXED
     solver = make_solver(cfg, with_objective=run_cfg.needs_objective)
-    problem = make_problem(m_obs, cfg, num_clients, key, warm)
+    problem = make_problem(m_obs, cfg, num_clients, key, warm, mask=mask)
     carry, stats = rt.run(solver, problem, cfg.outer_iters, run_cfg)
     l, s, u, v = solver.finalize(problem, carry)
     return DCFResult(l=l, s=s, u=u, v=v, stats=stats)
@@ -195,15 +232,18 @@ def dcf_pca_batch(
     *,
     run: rt.RunConfig | None = None,
     warm: tuple[Array, Array] | None = None,  # ((B,m,r), (B,E,n_i,r))
+    mask: Array | None = None,  # (B, m, n) per-problem observation masks
 ) -> DCFResult:
     """Solve a stack of problems concurrently; finished problems freeze."""
     if keys is None:
         keys = jax.random.split(jax.random.PRNGKey(0), m_batch.shape[0])
     run_cfg = run or rt.FIXED
     problems = jax.vmap(
-        lambda mo, k, w: make_problem(mo, cfg, num_clients, k, w),
-        in_axes=(0, 0, None if warm is None else 0),
-    )(m_batch, keys, warm)
+        lambda mo, k, w, om: make_problem(mo, cfg, num_clients, k, w,
+                                          mask=om),
+        in_axes=(0, 0, None if warm is None else 0,
+                 None if mask is None else 0),
+    )(m_batch, keys, warm, mask)
     (l, s, u, v), _, stats = rt.solve_batch(
         make_solver(cfg, with_objective=run_cfg.needs_objective),
         problems,
@@ -226,6 +266,7 @@ def dcf_pca_sharded(
     key: Array | None = None,
     run: rt.RunConfig | None = None,
     warm: tuple[Array, Array] | None = None,
+    mask: Array | None = None,
 ) -> DCFResult:
     """DCF-PCA where each shard along ``data_axes`` is one paper "client".
 
@@ -242,13 +283,20 @@ def dcf_pca_sharded(
       (each model shard of a client needs full V_i rows).
     * When ``model_axis`` is set, the r x r Gram and the (n_i, r) inner
       contraction are psum-ed over it (DESIGN.md Sec. 8, item 3).
+    * ``mask`` (0/1, shape of ``m_obs``) is sharded exactly like ``M`` --
+      each client keeps its own slice of Omega and never communicates it;
+      all residual work then runs over observed entries only.
     """
     if key is None:
         key = jax.random.PRNGKey(0)
     run_cfg = run or rt.FIXED
     track = cfg.track_objective or run_cfg.needs_objective
+    if mask is not None:
+        m_obs = mask * m_obs  # hidden entries must not influence the solve
     m, n = m_obs.shape
-    lam = cfg.lam if cfg.lam is not None else fz.robust_lam(m_obs)
+    lam = (
+        cfg.lam if cfg.lam is not None else fz.robust_lam(m_obs, mask=mask)
+    )
     num_clients = 1
     for a in data_axes:
         num_clients *= mesh.shape[a]
@@ -281,8 +329,9 @@ def dcf_pca_sharded(
             )
         t0 = cfg.outer_iters  # resume, don't restart, the schedules
 
-    def solve_body(m_local_full, u, v):
-        """shard_map body: this shard's (m_loc, n_i) block + its factors."""
+    def solve_body(m_local_full, u, v, w_local):
+        """shard_map body: this shard's (m_loc, n_i) block + its factors.
+        ``w_local`` is this shard's mask slice (None when fully observed)."""
 
         def init(p):
             inf = jnp.asarray(jnp.inf, jnp.float32)
@@ -294,13 +343,14 @@ def dcf_pca_sharded(
             lam_t = cfg.lam_at(lam, t)
             u_i, v_new = fz.local_round(
                 c.u, c.v, m_local_full, cfg=cfg, lam=lam_t, n_frac=n_frac,
-                eta=eta, reduce_m=reduce_m,
+                eta=eta, reduce_m=reduce_m, w=w_local,
             )
             u_new = jax.lax.pmean(u_i, data_axes)  # Eq. (9) consensus
             obj = (
                 jax.lax.psum(
                     fz.local_objective(
-                        u_new, v_new, m_local_full, cfg.rho, lam_t, n_frac
+                        u_new, v_new, m_local_full, cfg.rho, lam_t, n_frac,
+                        w=w_local,
                     ),
                     all_axes,
                 )
@@ -319,7 +369,8 @@ def dcf_pca_sharded(
         solver = rt.Solver(init, step, lambda p, c: c.diag, lambda p, c: None)
         carry, stats = rt.run(solver, (u, v), cfg.outer_iters, run_cfg)
         l_blk, s_blk = fz.finalize(
-            carry.u, carry.v, m_local_full, cfg.final_lam(lam), cfg.impl
+            carry.u, carry.v, m_local_full, cfg.final_lam(lam), cfg.impl,
+            w=w_local,
         )
         return l_blk, s_blk, carry.u, carry.v, stats
 
@@ -332,11 +383,25 @@ def dcf_pca_sharded(
             objective=P(None), residual=P(None), rounds=P(), converged=P()
         ),
     )
-    m_placed = jax.device_put(m_obs, m_sharding)
-    u_placed = jax.device_put(u0, u_sharding)
-    if warm is None:
+    # Pack the (static-keyed) operand dict so the mask x warm combinations
+    # share one shard_map body; absent keys are simply not in the pytree.
+    args = {"m": jax.device_put(m_obs, m_sharding),
+            "u": jax.device_put(u0, u_sharding)}
+    specs = {"m": P(row_spec, data_axes), "u": P(row_spec, None)}
+    if mask is not None:
+        args["w"] = jax.device_put(mask, m_sharding)
+        specs["w"] = P(row_spec, data_axes)
+    if warm is not None:
+        args["v"] = jax.device_put(
+            v_warm, NamedSharding(mesh, P(data_axes, None))
+        )
+        specs["v"] = P(data_axes, None)
 
-        def solve(m_local_full, u):
+    def solve(packed):
+        m_local_full = packed["m"]
+        if "v" in packed:
+            v = packed["v"]
+        else:
             # Cold start: per-client V_i from a client-folded key.
             n_i = m_local_full.shape[1]
             idx = jax.lax.axis_index(data_axes)
@@ -345,24 +410,8 @@ def dcf_pca_sharded(
                 jax.random.normal(kv_local, (n_i, cfg.rank),
                                   m_local_full.dtype) * scale
             )
-            return solve_body(m_local_full, u, v)
+        return solve_body(m_local_full, packed["u"], v, packed.get("w"))
 
-        fn = shard_map_compat(
-            solve,
-            mesh,
-            (P(row_spec, data_axes), P(row_spec, None)),
-            specs_out,
-        )
-        l, s, u, v, stats = jax.jit(fn)(m_placed, u_placed)
-    else:
-        fn = shard_map_compat(
-            solve_body,
-            mesh,
-            (P(row_spec, data_axes), P(row_spec, None), P(data_axes, None)),
-            specs_out,
-        )
-        v_placed = jax.device_put(
-            v_warm, NamedSharding(mesh, P(data_axes, None))
-        )
-        l, s, u, v, stats = jax.jit(fn)(m_placed, u_placed, v_placed)
+    fn = shard_map_compat(solve, mesh, (specs,), specs_out)
+    l, s, u, v, stats = jax.jit(fn)(args)
     return DCFResult(l=l, s=s, u=u, v=v, stats=stats)

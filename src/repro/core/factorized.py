@@ -141,8 +141,36 @@ class DCFConfig:
         kw.update(overrides)
         return cls(**kw)
 
+    @classmethod
+    def masked(cls, rank: int, observed_frac: float = 0.7,
+               **overrides) -> "DCFConfig":
+        """Preset for partial observation (robust matrix completion).
 
-def robust_lam(m_obs: Array, mult: float = 2.0) -> Array:
+        Under a mask the clean-entry residual decays roughly
+        ``observed_frac`` times slower per round (each contraction only
+        sees that fraction of the entries), so the fast anneal of
+        :meth:`tuned` outruns the residual and freezes a biased threshold.
+        Use the slow anneal and stretch the budget by ``1/observed_frac``
+        (see benchmarks/masked_rpca_bench.py for the phase curve).
+        """
+        iters = int(round(300 / max(observed_frac, 0.3)))
+        kw = dict(rank=rank, outer_iters=iters, local_iters=2,
+                  inner_sweeps=3, rho=1e-2, eta0=0.5, lr_schedule="fixed",
+                  lam_decay=0.97, lam_min_frac=1e-3,
+                  precondition="lipschitz")
+        kw.update(overrides)
+        return cls(**kw)
+
+
+def _masked_median(x: Array, keep: Array, count: Array) -> Array:
+    """Median over ``keep``-flagged entries; interpolation arithmetic
+    matches ``jnp.median`` bit-for-bit when every entry is kept."""
+    xs = jnp.sort(jnp.where(keep, x, jnp.inf))
+    return 0.5 * (xs[(count - 1) // 2] + xs[count // 2])
+
+
+def robust_lam(m_obs: Array, mult: float = 2.0,
+               mask: Array | None = None) -> Array:
     """Data-driven soft-threshold level: ``mult * 1.4826 * MAD(M)``.
 
     The shrinkage threshold must sit between the clean-entry residual scale
@@ -152,9 +180,18 @@ def robust_lam(m_obs: Array, mult: float = 2.0) -> Array:
     shard computes its local MAD and the consensus uses their mean
     (medians commute with column partitioning only approximately; the
     threshold tolerates that slack).
+
+    ``mask`` restricts both medians to the observed entries -- the hidden
+    entries are stored as zeros and would otherwise drag the MAD toward 0.
     """
-    med = jnp.median(m_obs)
-    return mult * 1.4826 * jnp.median(jnp.abs(m_obs - med))
+    if mask is None:
+        med = jnp.median(m_obs)
+        return mult * 1.4826 * jnp.median(jnp.abs(m_obs - med))
+    keep = mask.ravel() > 0
+    x = m_obs.ravel()
+    count = jnp.maximum(jnp.sum(keep.astype(jnp.int32)), 1)
+    med = _masked_median(x, keep, count)
+    return mult * 1.4826 * _masked_median(jnp.abs(x - med), keep, count)
 
 
 @dataclass(frozen=True)
@@ -186,7 +223,7 @@ def _identity(x: Array) -> Array:
 
 def inner_solve_altmin(
     u: Array, v: Array, m_blk: Array, rho: float, lam: Array | float,
-    sweeps: int, impl: str, reduce_m=_identity,
+    sweeps: int, impl: str, reduce_m=_identity, w: Array | None = None,
 ) -> Array:
     """Block-coordinate descent on the jointly-convex (V, S) subproblem.
 
@@ -196,12 +233,21 @@ def inner_solve_altmin(
     ``reduce_m`` sums partial contractions over the row (m) dimension when U
     is row-sharded across the "model" mesh axis (psum of the r x r Gram and
     the (n_i, r) contraction; identity in the unsharded case).
+
+    Under an observation mask ``w`` the same identity holds for the
+    *imputed* data ``P_Omega(M) + P_Omega_perp(U V^T)`` (hidden entries
+    filled with the current model -- the EM / SoftImpute majorization):
+    ``U^T (M_fill - S) == G V^T + U^T Psi_W`` with
+    ``Psi_W = W * clip(M - U V^T, +-lam)``, so masking only changes the
+    fused contraction, not the sweep structure.
     """
     g = reduce_m(u.T @ u)  # (r, r)
     g_reg = g + rho * jnp.eye(g.shape[0], dtype=g.dtype)
 
     def sweep(v, _):
-        contr = reduce_m(kops.huber_contract_v(u, v, m_blk, lam, impl=impl))
+        contr = reduce_m(
+            kops.huber_contract_v(u, v, m_blk, lam, w=w, impl=impl)
+        )
         rhs = g @ v.T + contr.T
         v_new = jnp.linalg.solve(g_reg, rhs).T
         return v_new, None
@@ -212,15 +258,19 @@ def inner_solve_altmin(
 
 def inner_solve_huber_gd(
     u: Array, v: Array, m_blk: Array, rho: float, lam: Array | float,
-    sweeps: int, impl: str, reduce_m=_identity,
+    sweeps: int, impl: str, reduce_m=_identity, w: Array | None = None,
 ) -> Array:
-    """GD on ``h(V) = rho/2 ||V||^2 + H_lam(M - U V^T)`` (Lemma 1 step size)."""
+    """GD on ``h(V) = rho/2 ||V||^2 + H_lam(P_Omega(M - U V^T))`` (Lemma 1
+    step size; masking only shrinks the data-term Lipschitz constant, so
+    the unmasked 1/(rho + sigma_max(U)^2) step stays valid)."""
     g = reduce_m(u.T @ u)
     sigma2 = core_ops.spectral_norm_ub_gram(g)
     step = 1.0 / (rho + sigma2)
 
     def sweep(v, _):
-        contr = reduce_m(kops.huber_contract_v(u, v, m_blk, lam, impl=impl))
+        contr = reduce_m(
+            kops.huber_contract_v(u, v, m_blk, lam, w=w, impl=impl)
+        )
         grad = rho * v - contr
         return v - step * grad, None
 
@@ -238,13 +288,16 @@ def local_round(
     n_frac: Array | float,
     eta: Array,
     reduce_m=_identity,
+    w: Array | None = None,
 ) -> tuple[Array, Array]:
     """One client's work in one consensus round: K local iterations of
     {inner (V,S) solve; one gradient step on the local U copy} (Alg. 1).
 
     ``n_frac = n_i / n`` weights the client's share of the rho/2 ||U||^2
     regularizer (paper Eq. 11).  Returns (U_i, V_i) to be averaged /
-    kept local respectively.
+    kept local respectively.  ``w`` is this client's slice of the
+    observation mask: every residual contraction then runs over observed
+    entries only (Psi_W = W * clip, fused in the kernel epilogue).
     """
     inner = (
         inner_solve_altmin if cfg.inner == "altmin" else inner_solve_huber_gd
@@ -253,10 +306,11 @@ def local_round(
     def one_local_iter(carry, _):
         u_i, v_i = carry
         v_i = inner(u_i, v_i, m_blk, cfg.rho, lam, cfg.inner_sweeps,
-                    cfg.impl, reduce_m)
+                    cfg.impl, reduce_m, w)
         # grad_U L_i = (U V^T + S - M) V + (n_i/n) rho U = -Psi V + (n_i/n) rho U
         # (rows of grad_U stay local under row sharding -- no collective).
-        psi_v = kops.huber_contract_u(u_i, v_i, m_blk, lam, impl=cfg.impl)
+        psi_v = kops.huber_contract_u(u_i, v_i, m_blk, lam, w=w,
+                                      impl=cfg.impl)
         grad_u = -psi_v + n_frac * cfg.rho * u_i
         if cfg.precondition == "raw":
             upd = eta * grad_u
@@ -281,19 +335,27 @@ def local_round(
 
 
 def finalize(u: Array, v: Array, m_blk: Array, lam: Array | float,
-             impl: str) -> tuple[Array, Array]:
-    """Recovered ``(L_i, S_i)`` for output (Alg. 1 return)."""
+             impl: str, w: Array | None = None) -> tuple[Array, Array]:
+    """Recovered ``(L_i, S_i)`` for output (Alg. 1 return).
+
+    ``L = U V^T`` is dense (the completion estimate extends to hidden
+    entries); ``S`` is supported on the observed entries only.
+    """
     l_blk = u @ v.T
-    s_blk = kops.residual_shrink(u, v, m_blk, lam, impl=impl)
+    s_blk = kops.residual_shrink(u, v, m_blk, lam, w=w, impl=impl)
     return l_blk, s_blk
 
 
 def local_objective(u: Array, v: Array, m_blk: Array, rho: float,
-                    lam: Array | float, n_frac: Array | float) -> Array:
+                    lam: Array | float, n_frac: Array | float,
+                    w: Array | None = None) -> Array:
     """g_i(U) surrogate at the current (V): eliminated objective Eq. (17)
-    plus this client's share of the U regularizer."""
+    plus this client's share of the U regularizer.  Masked: the Huber term
+    sums over observed entries only (H_lam(0) == 0)."""
     resid = m_blk - u @ v.T
-    return (
+    data = (
         core_ops.huber_loss(resid, lam)
-        + 0.5 * rho * (jnp.sum(v * v) + n_frac * jnp.sum(u * u))
+        if w is None
+        else core_ops.masked_huber_loss(resid, lam, w)
     )
+    return data + 0.5 * rho * (jnp.sum(v * v) + n_frac * jnp.sum(u * u))

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 
 from repro.core import runtime as rt
 from repro.core.apgm import ConvexResult
-from repro.core.ops import soft_threshold, svt
+from repro.core.ops import masked_soft_threshold, soft_threshold, svt
 
 Array = jax.Array
 
@@ -39,9 +39,16 @@ class IALMConfig:
 
 
 class IALMProblem(NamedTuple):
+    """``mask`` (0/1 Omega, ``None`` = fully observed) solves the matrix-
+    completion variant: the constraint ``L + S = M`` is enforced on Omega
+    only -- off-mask, S absorbs the residual (the Lin et al. trick), so the
+    SVT step still sees a dense argument while the hidden entries of M
+    never influence the solution."""
+
     m_obs: Array
     l_init: Array
     s_init: Array
+    mask: Array | None = None
 
 
 class _Carry(NamedTuple):
@@ -65,6 +72,8 @@ def make_solver(cfg: IALMConfig) -> rt.Solver:
             if cfg.lam is not None
             else 1.0 / jnp.sqrt(jnp.asarray(float(max(m, n)), p.m_obs.dtype))
         )
+        # _problem zero-fills hidden entries, so p.m_obs is already
+        # P_Omega(M) and every norm below is an observed-entry norm.
         norm2 = jnp.linalg.norm(p.m_obs, ord=2)
         # Standard IALM initialization (Lin et al. 2010).
         j2 = jnp.maximum(norm2, jnp.max(jnp.abs(p.m_obs)) / lam)
@@ -79,12 +88,23 @@ def make_solver(cfg: IALMConfig) -> rt.Solver:
 
     def step(p: IALMProblem, c: _Carry, t: Array) -> _Carry:
         l_new, sv = svt(p.m_obs - c.s + c.y / c.mu, 1.0 / c.mu)
-        s_new = soft_threshold(p.m_obs - l_new + c.y / c.mu, c.lam / c.mu)
+        s_arg = p.m_obs - l_new + c.y / c.mu
+        if p.mask is None:
+            s_new = soft_threshold(s_arg, c.lam / c.mu)
+        else:
+            # Off-mask S is free: absorb the residual there so the L + S = M
+            # constraint (and the dual update) act on Omega only.
+            s_new = (
+                masked_soft_threshold(s_arg, c.lam / c.mu, p.mask)
+                + (1.0 - p.mask) * s_arg
+            )
         resid = p.m_obs - l_new - s_new
         y_new = c.y + c.mu * resid
         mu_new = jnp.minimum(cfg.rho * c.mu, c.mu_max)
-        obj = jnp.sum(sv) + c.lam * jnp.sum(jnp.abs(s_new))
-        rel = jnp.linalg.norm(resid) / c.m_fro
+        s_obs = s_new if p.mask is None else p.mask * s_new
+        obj = jnp.sum(sv) + c.lam * jnp.sum(jnp.abs(s_obs))
+        rel_resid = resid if p.mask is None else p.mask * resid
+        rel = jnp.linalg.norm(rel_resid) / c.m_fro
         return _Carry(
             l=l_new, s=s_new, y=y_new, mu=mu_new,
             lam=c.lam, mu_max=c.mu_max, m_fro=c.m_fro,
@@ -95,17 +115,25 @@ def make_solver(cfg: IALMConfig) -> rt.Solver:
         return c.diag
 
     def finalize(p: IALMProblem, c: _Carry):
-        return c.l, c.s
+        # Report S on the observed support only (off-mask it holds the
+        # constraint fill, not a sparse-corruption estimate).
+        return c.l, (c.s if p.mask is None else p.mask * c.s)
 
     return rt.Solver(init, step, diagnostics, finalize)
 
 
-def _problem(m_obs: Array, warm) -> IALMProblem:
+def _problem(m_obs: Array, warm, mask=None) -> IALMProblem:
+    if mask is not None:
+        # Zero-fill hidden entries up front: the solution must not depend
+        # on whatever the caller stored there (sentinels, NaNs, stale
+        # data).  `+ 0.0` canonicalizes -0.0 -> +0.0 so even LAPACK's SVD
+        # (bit-sensitive to the sign of zero) sees one representation.
+        m_obs = mask * m_obs + 0.0
     if warm is None:
         z = jnp.zeros_like(m_obs)
-        return IALMProblem(m_obs=m_obs, l_init=z, s_init=z)
+        return IALMProblem(m_obs=m_obs, l_init=z, s_init=z, mask=mask)
     l0, s0 = warm
-    return IALMProblem(m_obs=m_obs, l_init=l0, s_init=s0)
+    return IALMProblem(m_obs=m_obs, l_init=l0, s_init=s0, mask=mask)
 
 
 @partial(jax.jit, static_argnames=("cfg", "run"))
@@ -115,10 +143,12 @@ def ialm(
     *,
     run: rt.RunConfig | None = None,
     warm: tuple[Array, Array] | None = None,
+    mask: Array | None = None,
 ) -> ConvexResult:
-    """Solve one problem.  ``run=None`` is the paper-faithful fixed scan."""
+    """Solve one problem.  ``run=None`` is the paper-faithful fixed scan.
+    ``mask`` (0/1 Omega) solves the robust matrix completion variant."""
     solver = make_solver(cfg)
-    problem = _problem(m_obs, warm)
+    problem = _problem(m_obs, warm, mask)
     carry, stats = rt.run(solver, problem, cfg.iters, run or rt.FIXED)
     l, s = solver.finalize(problem, carry)
     return ConvexResult(l=l, s=s, stats=stats)
@@ -131,11 +161,13 @@ def ialm_batch(
     *,
     run: rt.RunConfig | None = None,
     warm: tuple[Array, Array] | None = None,
+    mask: Array | None = None,  # (B, m, n) per-problem masks
 ) -> ConvexResult:
     """Solve a stack of problems concurrently (per-problem early exit)."""
-    problems = jax.vmap(_problem, in_axes=(0, None if warm is None else 0))(
-        m_batch, warm
-    )
+    problems = jax.vmap(
+        _problem,
+        in_axes=(0, None if warm is None else 0, None if mask is None else 0),
+    )(m_batch, warm, mask)
     (l, s), _, stats = rt.solve_batch(
         make_solver(cfg), problems, cfg.iters, run or rt.FIXED
     )

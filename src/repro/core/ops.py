@@ -37,6 +37,21 @@ def huber_loss(x: Array, lam: Array | float) -> Array:
     return jnp.sum(jnp.where(a <= lam, quad, lin))
 
 
+def masked_soft_threshold(x: Array, lam: Array | float, w: Array) -> Array:
+    """``W * soft_threshold(x, lam)``: prox of ``lam ||P_Omega(.)||_1``
+    restricted to the observed support (S == 0 outside Omega)."""
+    return w * soft_threshold(x, lam)
+
+
+def masked_huber_loss(x: Array, lam: Array | float, w: Array) -> Array:
+    """Huber loss summed over *observed* entries only.
+
+    ``H_lam(0) == 0``, so masking the argument masks the contribution; an
+    all-ones ``w`` is bit-exact with :func:`huber_loss` (x * 1.0 == x).
+    """
+    return huber_loss(w * x, lam)
+
+
 def svt(x: Array, tau: Array | float, full_matrices: bool = False) -> tuple[Array, Array]:
     """Singular-value thresholding: prox of ``tau * ||.||_*``.
 
@@ -50,13 +65,20 @@ def svt(x: Array, tau: Array | float, full_matrices: bool = False) -> tuple[Arra
 
 
 def factored_objective(
-    u: Array, v: Array, s: Array, m: Array, rho: float, lam: float
+    u: Array, v: Array, s: Array, m: Array, rho: float, lam: float,
+    w: Array | None = None,
 ) -> Array:
     """The paper's nonconvex objective, Eq. (4):
 
     ``1/2 ||U V^T + S - M||_F^2 + rho/2 (||U||_F^2 + ||V||_F^2) + lam ||S||_1``
+
+    With an observation mask ``w`` the data-fit and l1 terms run over
+    observed entries only (robust matrix completion).
     """
     resid = u @ v.T + s - m
+    if w is not None:
+        resid = w * resid
+        s = w * s
     return (
         0.5 * jnp.sum(resid * resid)
         + 0.5 * rho * (jnp.sum(u * u) + jnp.sum(v * v))
@@ -64,13 +86,19 @@ def factored_objective(
     )
 
 
-def eliminated_objective(u: Array, v: Array, m: Array, rho: float, lam: float) -> Array:
+def eliminated_objective(
+    u: Array, v: Array, m: Array, rho: float, lam: float,
+    w: Array | None = None,
+) -> Array:
     """Objective with S eliminated by its closed form (paper Eq. 17):
 
     ``rho/2 ||V||_F^2 + H_lam(M - U V^T)``   (+ rho/2 ||U||_F^2, added here so
     the value is comparable with :func:`factored_objective` at the optimum).
+    With a mask ``w`` the Huber term runs over observed entries only.
     """
     resid = m - u @ v.T
+    if w is not None:
+        resid = w * resid
     return (
         huber_loss(resid, lam)
         + 0.5 * rho * (jnp.sum(v * v) + jnp.sum(u * u))

@@ -2,10 +2,18 @@
 
 ``L0 = U0 V0^T`` with standard-Gaussian factors, plus a sparse corruption
 ``S0`` with ``s*m*n`` nonzero entries drawn from ``{-sqrt(mn), +sqrt(mn)}``.
+
+Partial observation (robust matrix completion): :func:`generate_problem`
+optionally draws an observation mask ``Omega`` -- uniform Bernoulli or
+column-structured (per-column contiguous dropout bursts, the streaming-
+sensor pattern) -- and returns ``M = P_Omega(L0 + S0)`` with the mask
+attached.  ``observed_frac=1.0`` (the default) keeps the paper's fully-
+observed model: ``mask is None`` and every downstream path is unchanged.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Literal
 
 import jax
 import jax.numpy as jnp
@@ -15,13 +23,50 @@ Array = jax.Array
 
 @dataclass(frozen=True)
 class RPCAProblem:
-    """A generated RPCA instance and its ground truth."""
+    """A generated RPCA instance and its ground truth.
 
-    m_obs: Array  # observed matrix M = L0 + S0, (m, n)
+    ``mask`` is the 0/1 observation matrix ``Omega`` (``None`` = fully
+    observed).  ``m_obs`` and ``s0`` are zero outside ``Omega`` -- the
+    corruption on unobserved entries is unobservable, so the recoverable
+    ground truth for S is its observed restriction; ``l0`` stays dense
+    (recovering it *everywhere* is the matrix-completion part of the task).
+    """
+
+    m_obs: Array  # observed matrix M = P_Omega(L0 + S0), (m, n)
     l0: Array  # ground-truth low-rank component, (m, n)
-    s0: Array  # ground-truth sparse component, (m, n)
+    s0: Array  # ground-truth sparse component (observed support), (m, n)
     rank: int  # true rank r
     sparsity: float  # fraction of corrupted entries s
+    mask: Array | None = None  # 0/1 observation mask Omega, (m, n)
+
+
+def generate_mask(
+    key: Array,
+    m: int,
+    n: int,
+    observed_frac: float,
+    kind: Literal["uniform", "columns"] = "uniform",
+    dtype: jnp.dtype = jnp.float32,
+) -> Array:
+    """Draw a 0/1 observation mask with ``observed_frac`` of entries kept.
+
+    ``uniform``  iid Bernoulli(observed_frac) over entries -- the standard
+                 matrix-completion sampling model.
+    ``columns``  column-structured missingness: every column loses one
+                 contiguous run of ``round((1-p) m)`` rows starting at a
+                 random per-column offset (sensor-dropout bursts).  Each
+                 column keeps the same observed count, so no column is ever
+                 fully unobserved (V rows stay identifiable).
+    """
+    if kind == "uniform":
+        return (jax.random.uniform(key, (m, n)) < observed_frac).astype(dtype)
+    if kind == "columns":
+        miss = int(round((1.0 - observed_frac) * m))
+        starts = jax.random.randint(key, (n,), 0, m)  # burst start per col
+        rows = jnp.arange(m)[:, None]
+        offset = jnp.mod(rows - starts[None, :], m)
+        return (offset >= miss).astype(dtype)
+    raise ValueError(f"unknown mask kind {kind!r}")
 
 
 def generate_problem(
@@ -31,6 +76,8 @@ def generate_problem(
     rank: int,
     sparsity: float,
     dtype: jnp.dtype = jnp.float32,
+    observed_frac: float = 1.0,
+    mask_kind: Literal["uniform", "columns"] = "uniform",
 ) -> RPCAProblem:
     """Generate a synthetic problem per paper Sec. 4.1.
 
@@ -38,8 +85,14 @@ def generate_problem(
     * ``S0`` has ``round(s*m*n)`` nonzeros placed uniformly at random, each
       ``+-sqrt(m n)`` with equal probability (gross corruptions, much larger
       than the O(sqrt(r)) scale of L0's entries).
+    * ``observed_frac < 1`` additionally hides entries behind an observation
+      mask (see :func:`generate_mask`); the returned ``m_obs`` is zero on
+      the hidden entries and ``problem.mask`` records ``Omega``.
     """
+    # NOTE: keep the 4-way split of the fully-observed generator -- seed
+    # problems must stay bit-identical; the mask key is derived separately.
     k_u, k_v, k_mask, k_sign = jax.random.split(key, 4)
+    k_omega = jax.random.fold_in(key, 0x0E5)
     u0 = jax.random.normal(k_u, (m, rank), dtype)
     v0 = jax.random.normal(k_v, (n, rank), dtype)
     l0 = u0 @ v0.T
@@ -51,7 +104,14 @@ def generate_problem(
     mag = jnp.asarray(jnp.sqrt(float(m) * float(n)), dtype)
     s0 = jnp.zeros((m * n,), dtype).at[flat_idx].set(signs * mag).reshape(m, n)
 
-    return RPCAProblem(m_obs=l0 + s0, l0=l0, s0=s0, rank=rank, sparsity=sparsity)
+    if observed_frac >= 1.0:
+        return RPCAProblem(m_obs=l0 + s0, l0=l0, s0=s0, rank=rank,
+                           sparsity=sparsity)
+    omega = generate_mask(k_omega, m, n, observed_frac, mask_kind, dtype)
+    return RPCAProblem(
+        m_obs=omega * (l0 + s0), l0=l0, s0=omega * s0,
+        rank=rank, sparsity=sparsity, mask=omega,
+    )
 
 
 def split_columns(mat: Array, num_clients: int) -> Array:

@@ -36,6 +36,14 @@ pytree (it carries the initial factors), so a re-solve seeded with a prior
 solution's ``(U, V)`` flows through every mode and through ``solve_batch``
 unchanged.
 
+Partial observation follows the same contract: an observation mask is a
+``problem``-pytree leaf and every solver's ``diagnostics`` must be
+computed on *observed* entries only (masked residual norms and objectives,
+relative to ``||P_Omega(M)||``) -- the driver then needs no mask awareness
+at all, and early exit / plateau detection / per-problem freeze masks stay
+correct under masking, including heterogeneous per-problem masks in
+``solve_batch`` (see DESIGN.md Sec. 9).
+
 All drivers return a structured :class:`SolveStats` instead of the old
 ad-hoc scalar ``history`` arrays.
 """

@@ -17,6 +17,16 @@ Blocking: the full factor width ``r`` (padded to a lane multiple) is kept
 resident; tiles default to 256 x 256 so the working set is
 ``bm*bn + (bm+bn)*r_pad + bn*r_pad`` floats ~= 1.3 MB at r=128, far under
 the ~16 MB VMEM budget (see DESIGN.md Sec. 2).
+
+Masked (robust matrix completion) variants: ``*_masked`` take an extra 0/1
+observation mask ``W`` (same shape and tiling as ``M``) and compute
+
+    Psi = W * clip(M - U V^T, [-lam, lam])
+
+i.e. unobserved entries contribute exactly zero to both contractions.  The
+mask tile rides the same (bm, bn) block pipeline as the data tile, so the
+epilogue stays in VMEM and the only extra HBM traffic is the single read of
+W itself (see DESIGN.md Sec. 9 for the working-set math).
 """
 from __future__ import annotations
 
@@ -65,6 +75,24 @@ def _contract_v_kernel(u_ref, v_ref, m_ref, lam_ref, out_ref):
                             preferred_element_type=jnp.float32)
 
 
+def _contract_v_masked_kernel(u_ref, v_ref, m_ref, w_ref, lam_ref, out_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    u = u_ref[...]  # (bm, r)
+    v = v_ref[...]  # (bn, r)
+    mt = m_ref[...]  # (bm, bn)
+    w = w_ref[...]  # (bm, bn) observation mask tile
+    lam = lam_ref[0]
+    low = jnp.dot(u, v.T, preferred_element_type=jnp.float32)
+    psi = w.astype(jnp.float32) * jnp.clip(
+        mt.astype(jnp.float32) - low, -lam, lam
+    )
+    out_ref[...] += jnp.dot(psi.T, u.astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+
+
 # ---------------------------------------------------------------------------
 # out_u = Psi V  : grid (m/bm, n/bn), n is the reduction (last, "arbitrary")
 # ---------------------------------------------------------------------------
@@ -79,6 +107,24 @@ def _contract_u_kernel(u_ref, v_ref, m_ref, lam_ref, out_ref):
     lam = lam_ref[0]
     low = jnp.dot(u, v.T, preferred_element_type=jnp.float32)
     psi = jnp.clip(mt.astype(jnp.float32) - low, -lam, lam)
+    out_ref[...] += jnp.dot(psi, v.astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+
+
+def _contract_u_masked_kernel(u_ref, v_ref, m_ref, w_ref, lam_ref, out_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    u = u_ref[...]  # (bm, r)
+    v = v_ref[...]  # (bn, r)
+    mt = m_ref[...]  # (bm, bn)
+    w = w_ref[...]  # (bm, bn) observation mask tile
+    lam = lam_ref[0]
+    low = jnp.dot(u, v.T, preferred_element_type=jnp.float32)
+    psi = w.astype(jnp.float32) * jnp.clip(
+        mt.astype(jnp.float32) - low, -lam, lam
+    )
     out_ref[...] += jnp.dot(psi, v.astype(jnp.float32),
                             preferred_element_type=jnp.float32)
 
@@ -166,4 +212,93 @@ def huber_contract_u(
         compiler_params=compat.CompilerParams(dimension_semantics=("parallel", "arbitrary")),
         interpret=_should_interpret(interpret),
     )(u_p, v_p, m_p, lam_arr)
+    return out[:mm, :r]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "interpret")
+)
+def huber_contract_v_masked(
+    u: Array,
+    v: Array,
+    m: Array,
+    w: Array,
+    lam: float | Array,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    interpret: bool | None = None,
+) -> Array:
+    """Psi^T U, Psi = W * clip(M - U V^T, +-lam).  Returns (n, r) in f32.
+
+    ``W`` is the 0/1 observation mask, same shape as ``M``; zero-padding is
+    exact (padded mask entries are 0, so padded Psi == 0 twice over).
+    """
+    mm, r = u.shape
+    n = v.shape[0]
+    u_p = _pad_to(_pad_to(u, 0, bm), 1, LANE)
+    v_p = _pad_to(_pad_to(v, 0, bn), 1, LANE)
+    m_p = _pad_to(_pad_to(m, 0, bm), 1, bn)
+    w_p = _pad_to(_pad_to(w, 0, bm), 1, bn)
+    r_pad = u_p.shape[1]
+    lam_arr = jnp.asarray([lam], jnp.float32)
+
+    grid = (m_p.shape[1] // bn, m_p.shape[0] // bm)  # (n-blocks, m-blocks)
+    out = pl.pallas_call(
+        _contract_v_masked_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, r_pad), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, r_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, bn), lambda i, j: (j, i)),
+            pl.BlockSpec((bm, bn), lambda i, j: (j, i)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((bn, r_pad), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((v_p.shape[0], r_pad), jnp.float32),
+        compiler_params=compat.CompilerParams(dimension_semantics=("parallel", "arbitrary")),
+        interpret=_should_interpret(interpret),
+    )(u_p, v_p, m_p, w_p, lam_arr)
+    return out[:n, :r]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "interpret")
+)
+def huber_contract_u_masked(
+    u: Array,
+    v: Array,
+    m: Array,
+    w: Array,
+    lam: float | Array,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    interpret: bool | None = None,
+) -> Array:
+    """Psi V, Psi = W * clip(M - U V^T, +-lam).  Returns (m, r) in f32."""
+    mm, r = u.shape
+    u_p = _pad_to(_pad_to(u, 0, bm), 1, LANE)
+    v_p = _pad_to(_pad_to(v, 0, bn), 1, LANE)
+    m_p = _pad_to(_pad_to(m, 0, bm), 1, bn)
+    w_p = _pad_to(_pad_to(w, 0, bm), 1, bn)
+    r_pad = u_p.shape[1]
+    lam_arr = jnp.asarray([lam], jnp.float32)
+
+    grid = (m_p.shape[0] // bm, m_p.shape[1] // bn)  # (m-blocks, n-blocks)
+    out = pl.pallas_call(
+        _contract_u_masked_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, r_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, r_pad), lambda i, j: (j, 0)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((bm, r_pad), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((u_p.shape[0], r_pad), jnp.float32),
+        compiler_params=compat.CompilerParams(dimension_semantics=("parallel", "arbitrary")),
+        interpret=_should_interpret(interpret),
+    )(u_p, v_p, m_p, w_p, lam_arr)
     return out[:mm, :r]

@@ -27,31 +27,53 @@ def _resolve(impl: str) -> str:
     return impl
 
 
-def huber_contract_v(u, v, m, lam, *, impl: str = "auto") -> Array:
-    """(n, r) = Psi^T U,  Psi = clip(M - U V^T, +-lam)."""
+def huber_contract_v(u, v, m, lam, *, w=None, impl: str = "auto") -> Array:
+    """(n, r) = Psi^T U,  Psi = clip(M - U V^T, +-lam).
+
+    ``w`` (optional 0/1 observation mask, same shape as ``m``) switches to
+    the masked fused variant: Psi = W * clip(M - U V^T, +-lam).
+    """
     if _resolve(impl) == "pallas":
+        if w is not None:
+            return _hc.huber_contract_v_masked(u, v, m, w, lam)
         return _hc.huber_contract_v(u, v, m, lam)
+    if w is not None:
+        return _ref.huber_contract_v_masked(u, v, m, w, lam)
     return _ref.huber_contract_v(u, v, m, lam)
 
 
-def huber_contract_u(u, v, m, lam, *, impl: str = "auto") -> Array:
-    """(m, r) = Psi V,  Psi = clip(M - U V^T, +-lam)."""
+def huber_contract_u(u, v, m, lam, *, w=None, impl: str = "auto") -> Array:
+    """(m, r) = Psi V,  Psi = clip(M - U V^T, +-lam); masked when ``w``."""
     if _resolve(impl) == "pallas":
+        if w is not None:
+            return _hc.huber_contract_u_masked(u, v, m, w, lam)
         return _hc.huber_contract_u(u, v, m, lam)
+    if w is not None:
+        return _ref.huber_contract_u_masked(u, v, m, w, lam)
     return _ref.huber_contract_u(u, v, m, lam)
 
 
-def residual_shrink(u, v, m, lam, *, impl: str = "auto") -> Array:
-    """(m, n) = soft_threshold(M - U V^T, lam)."""
+def residual_shrink(u, v, m, lam, *, w=None, impl: str = "auto") -> Array:
+    """(m, n) = soft_threshold(M - U V^T, lam); masked when ``w``."""
     if _resolve(impl) == "pallas":
+        if w is not None:
+            return _sh.residual_shrink_masked(u, v, m, w, lam)
         return _sh.residual_shrink(u, v, m, lam)
+    if w is not None:
+        return _ref.residual_shrink_masked(u, v, m, w, lam)
     return _ref.residual_shrink(u, v, m, lam)
 
 
-def residual_shrink_psi(u, v, m, lam, *, impl: str = "auto"):
-    """((m,n) S, (m,n) Psi) in one pass."""
+def residual_shrink_psi(u, v, m, lam, *, w=None, impl: str = "auto"):
+    """((m,n) S, (m,n) Psi) in one pass; masked when ``w``."""
     if _resolve(impl) == "pallas":
+        if w is not None:
+            return _sh.residual_shrink_psi_masked(u, v, m, w, lam)
         return _sh.residual_shrink_psi(u, v, m, lam)
+    if w is not None:
+        s = _ref.residual_shrink_masked(u, v, m, w, lam)
+        psi = _ref.residual_clip_masked(u, v, m, w, lam)
+        return s, psi
     s = _ref.residual_shrink(u, v, m, lam)
     psi = _ref.residual_clip(u, v, m, lam)
     return s, psi

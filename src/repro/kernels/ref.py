@@ -59,3 +59,36 @@ def huber_contract_uv(
     """Both contractions from one Psi (single residual materialization)."""
     psi = residual_clip(u, v, m, lam)
     return (psi.T @ u).astype(u.dtype), (psi @ v).astype(u.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Masked (robust matrix completion) oracles:
+#     Psi_W = W * clip(M - U V^T, +-lam)     (zero outside Omega)
+#     S_W   = W * soft_threshold(M - U V^T, lam)
+# With an all-ones W every masked oracle is bit-exact equal to its unmasked
+# counterpart (multiplication by 1.0f is the identity in IEEE-754).
+# ---------------------------------------------------------------------------
+def residual_clip_masked(u: Array, v: Array, m: Array, w: Array,
+                         lam: float) -> Array:
+    """Psi_W = W * clip(M - U V^T, [-lam, lam])."""
+    return w * residual_clip(u, v, m, lam)
+
+
+def residual_shrink_masked(u: Array, v: Array, m: Array, w: Array,
+                           lam: float) -> Array:
+    """S_W = W * soft_threshold(M - U V^T, lam)."""
+    return w * residual_shrink(u, v, m, lam)
+
+
+def huber_contract_v_masked(u: Array, v: Array, m: Array, w: Array,
+                            lam: float) -> Array:
+    """Psi_W^T U: the masked (n, r) inner-solve contraction."""
+    psi = residual_clip_masked(u, v, m, w, lam)
+    return (psi.T @ u).astype(u.dtype)
+
+
+def huber_contract_u_masked(u: Array, v: Array, m: Array, w: Array,
+                            lam: float) -> Array:
+    """Psi_W V: the masked (m, r) outer-step contraction."""
+    psi = residual_clip_masked(u, v, m, w, lam)
+    return (psi @ v).astype(u.dtype)

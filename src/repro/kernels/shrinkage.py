@@ -47,10 +47,40 @@ def _shrink_psi_kernel(u_ref, v_ref, m_ref, lam_ref, s_ref, psi_ref):
     psi_ref[...] = r - s
 
 
+def _shrink_masked_kernel(u_ref, v_ref, m_ref, w_ref, lam_ref, s_ref):
+    lam = lam_ref[0]
+    low = jnp.dot(u_ref[...], v_ref[...].T, preferred_element_type=jnp.float32)
+    r = m_ref[...].astype(jnp.float32) - low
+    s_ref[...] = w_ref[...].astype(jnp.float32) * (
+        jnp.sign(r) * jnp.maximum(jnp.abs(r) - lam, 0.0)
+    )
+
+
+def _shrink_psi_masked_kernel(u_ref, v_ref, m_ref, w_ref, lam_ref, s_ref,
+                              psi_ref):
+    lam = lam_ref[0]
+    low = jnp.dot(u_ref[...], v_ref[...].T, preferred_element_type=jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    r = m_ref[...].astype(jnp.float32) - low
+    s = w * (jnp.sign(r) * jnp.maximum(jnp.abs(r) - lam, 0.0))
+    s_ref[...] = s
+    psi_ref[...] = w * r - s
+
+
 def _specs(bm: int, bn: int, r_pad: int):
     return [
         pl.BlockSpec((bm, r_pad), lambda i, j: (i, 0)),
         pl.BlockSpec((bn, r_pad), lambda i, j: (j, 0)),
+        pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        pl.BlockSpec(memory_space=pl.ANY),
+    ]
+
+
+def _specs_masked(bm: int, bn: int, r_pad: int):
+    return [
+        pl.BlockSpec((bm, r_pad), lambda i, j: (i, 0)),
+        pl.BlockSpec((bn, r_pad), lambda i, j: (j, 0)),
+        pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
         pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
         pl.BlockSpec(memory_space=pl.ANY),
     ]
@@ -123,4 +153,80 @@ def residual_shrink_psi(
         compiler_params=compat.CompilerParams(dimension_semantics=("parallel", "parallel")),
         interpret=_should_interpret(interpret),
     )(u_p, v_p, m_p, lam_arr)
+    return s[:mm, :n], psi[:mm, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def residual_shrink_masked(
+    u: Array,
+    v: Array,
+    m: Array,
+    w: Array,
+    lam: float | Array,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    interpret: bool | None = None,
+) -> Array:
+    """S = W * soft_threshold(M - U V^T, lam): sparse estimate on observed
+    entries only (S is identically 0 outside Omega)."""
+    mm, n = m.shape
+    u_p = _pad_to(_pad_to(u, 0, bm), 1, LANE)
+    v_p = _pad_to(_pad_to(v, 0, bn), 1, LANE)
+    m_p = _pad_to(_pad_to(m, 0, bm), 1, bn)
+    w_p = _pad_to(_pad_to(w, 0, bm), 1, bn)
+    r_pad = u_p.shape[1]
+    lam_arr = jnp.asarray([lam], jnp.float32)
+
+    grid = (m_p.shape[0] // bm, m_p.shape[1] // bn)
+    s = pl.pallas_call(
+        _shrink_masked_kernel,
+        grid=grid,
+        in_specs=_specs_masked(bm, bn, r_pad),
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(m_p.shape, jnp.float32),
+        compiler_params=compat.CompilerParams(dimension_semantics=("parallel", "parallel")),
+        interpret=_should_interpret(interpret),
+    )(u_p, v_p, m_p, w_p, lam_arr)
+    return s[:mm, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def residual_shrink_psi_masked(
+    u: Array,
+    v: Array,
+    m: Array,
+    w: Array,
+    lam: float | Array,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    interpret: bool | None = None,
+) -> tuple[Array, Array]:
+    """(S, Psi) masked: S = W * soft_threshold(M - U V^T, lam),
+    Psi = W * clip(M - U V^T, +-lam), both from one tile pass."""
+    mm, n = m.shape
+    u_p = _pad_to(_pad_to(u, 0, bm), 1, LANE)
+    v_p = _pad_to(_pad_to(v, 0, bn), 1, LANE)
+    m_p = _pad_to(_pad_to(m, 0, bm), 1, bn)
+    w_p = _pad_to(_pad_to(w, 0, bm), 1, bn)
+    r_pad = u_p.shape[1]
+    lam_arr = jnp.asarray([lam], jnp.float32)
+
+    grid = (m_p.shape[0] // bm, m_p.shape[1] // bn)
+    s, psi = pl.pallas_call(
+        _shrink_psi_masked_kernel,
+        grid=grid,
+        in_specs=_specs_masked(bm, bn, r_pad),
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(m_p.shape, jnp.float32),
+            jax.ShapeDtypeStruct(m_p.shape, jnp.float32),
+        ],
+        compiler_params=compat.CompilerParams(dimension_semantics=("parallel", "parallel")),
+        interpret=_should_interpret(interpret),
+    )(u_p, v_p, m_p, w_p, lam_arr)
     return s[:mm, :n], psi[:mm, :n]

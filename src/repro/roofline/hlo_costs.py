@@ -111,11 +111,25 @@ def parse_computations(hlo: str) -> dict[str, Computation]:
     return comps
 
 
+def _operand_names(op: Op, shapes: dict[str, str]) -> list[str]:
+    """Operand names from the raw ``opcode(...)`` text.
+
+    Modern HLO dumps type every operand (``f32[256,256]{1,0} %name``), so a
+    bare ``[\\w.\\-]+`` scan picks up dtype/dim tokens first -- require the
+    ``%`` sigil, and only fall back to symbol-table filtering for dumps that
+    print operands unprefixed."""
+    head = op.rest.split(")")[0]
+    names = re.findall(r"%([\w.\-]+)", head)
+    if names:
+        return names
+    return [t for t in re.findall(r"([\w.\-]+)", head) if t in shapes]
+
+
 def _dot_flops(op: Op, shapes: dict[str, str]) -> float:
     """2 * result_elems * contraction_size for dot ops."""
     result_elems = _type_elems(op.type_str)
     m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
-    operands = re.findall(r"%?([\w.\-]+)", op.rest.split(")")[0])
+    operands = _operand_names(op, shapes)
     lhs_type = shapes.get(operands[0], "") if operands else ""
     contraction = 1
     if m and lhs_type:
@@ -153,7 +167,7 @@ def _trip_count(cond: Computation, shapes: dict[str, str]) -> int:
                 const_vals[op.name] = int(m2.group(1))
     for op in reversed(cond.ops):
         if op.opcode == "compare":
-            operands = re.findall(r"%?([\w.\-]+)", op.rest.split(")")[0])
+            operands = _operand_names(op, shapes)
             for o in operands:
                 if o in const_vals and const_vals[o] > 0:
                     return const_vals[o]
@@ -208,7 +222,7 @@ def analyze_hlo(hlo: str, entry: str | None = None) -> Costs:
                 roots.add(_root_opcode(c))
         res = _type_bytes(op.type_str)
         if "dynamic-update-slice" in roots:
-            operands = re.findall(r"%?([\w.\-]+)", op.rest.split(")")[0])
+            operands = _operand_names(op, shapes)
             op_bytes = [_type_bytes(shapes.get(o, ""))
                         for o in operands if o in shapes]
             # write update only (the buffer operand/result is aliased).

@@ -15,14 +15,22 @@ from a prior solution and resumes the annealing schedule, so streaming
 refresh solves (same tenant, slightly changed data) converge in a handful
 of rounds instead of the full budget.
 
+Partial observation is per-slot: ``submit(m_obs, mask=omega)`` attaches a
+0/1 observation mask and the whole solve (contractions, objective,
+finalize) runs over observed entries only.  The mask is part of the slot's
+problem state, so a warm-started refresh may ship a *different* mask than
+the previous solve (streaming arrivals where new columns land with missing
+entries); maskless submissions get an all-ones mask, which is bit-exact
+with the unmasked solver path.
+
     svc = RPCAService(m, n, DCFConfig.tuned(rank=8))
-    slot = svc.submit(m_obs)
+    slot = svc.submit(m_obs, mask=omega)
     while svc.pending():
         svc.tick()
     resp = svc.poll(slot)          # RPCAResponse(l, s, u, v, rounds)
     svc.release(slot)
-    # streaming refresh: warm-start from the previous factors
-    slot = svc.submit(m_obs_new, warm=(resp.u, resp.v))
+    # streaming refresh: warm factors + the epoch's evolved mask
+    slot = svc.submit(m_obs_new, warm=(resp.u, resp.v), mask=omega_new)
 """
 from __future__ import annotations
 
@@ -79,12 +87,16 @@ class RPCAService:
 
         b, r = scfg.slots, cfg.rank
         zeros = jnp.zeros
+        # The batched problem pytree must be homogeneous across slots, so
+        # the service always carries a mask plane; all-ones (the maskless
+        # default) is bit-exact with the unmasked solver path.
         self._problems = CFProblem(
             m_obs=zeros((b, m, n)),
             u_init=zeros((b, m, r)),
             v_init=zeros((b, n, r)),
             lam0=zeros((b,)),
             t0=zeros((b,), jnp.int32),
+            mask=jnp.ones((b, m, n)),
         )
         self._carry = jax.vmap(self._solver.init)(self._problems)
         self._t = zeros((b,), jnp.int32)  # per-slot schedule position
@@ -132,16 +144,30 @@ class RPCAService:
         self,
         m_obs: Array,
         warm: tuple[Array, Array] | None = None,
+        mask: Array | None = None,
     ) -> int | None:
         """Place a problem into a free slot; returns the slot id or ``None``
-        when the batch is full (caller retries after a tick + poll cycle)."""
+        when the batch is full (caller retries after a tick + poll cycle).
+
+        ``mask`` is this request's observation mask (0/1, shape of
+        ``m_obs``); it may differ from the mask of the warm-start's prior
+        solve -- streaming refreshes re-solve under the current epoch's
+        observation pattern.
+        """
         free = np.flatnonzero(~self._active)
         if free.size == 0:
             return None
         slot = int(free[0])
         key = jax.random.fold_in(self._key, self._n_submitted)
         self._n_submitted += 1
-        problem = make_problem(m_obs, self.cfg, key, warm)
+        if mask is None:
+            # Maskless: calibrate lam on the unmasked fast path (plain
+            # medians, no masked sort), then attach the all-ones plane the
+            # homogeneous slot pytree needs -- numerically identical.
+            problem = make_problem(m_obs, self.cfg, key, warm)
+            problem = problem._replace(mask=jnp.ones_like(m_obs))
+        else:
+            problem = make_problem(m_obs, self.cfg, key, warm, mask=mask)
         idx = jnp.asarray(slot)
         self._problems = self._write_slot(self._problems, problem, idx)
         self._carry = self._write_slot(
@@ -191,20 +217,22 @@ class RPCAService:
         self,
         matrices: list[Array],
         warm: dict[int, tuple[Array, Array]] | None = None,
+        masks: dict[int, Array] | None = None,
     ) -> list[RPCAResponse]:
         """Drain a queue of problems through the slots (continuous refill).
 
-        ``warm`` maps queue indices to prior factors.  Returns responses in
-        queue order.
+        ``warm`` maps queue indices to prior factors, ``masks`` maps queue
+        indices to observation masks.  Returns responses in queue order.
         """
         warm = warm or {}
+        masks = masks or {}
         results: list[RPCAResponse | None] = [None] * len(matrices)
         queue = list(enumerate(matrices))
         in_flight: dict[int, int] = {}  # slot -> queue index
         while queue or in_flight:
             while queue:
                 qi, mat = queue[0]
-                slot = self.submit(mat, warm.get(qi))
+                slot = self.submit(mat, warm.get(qi), mask=masks.get(qi))
                 if slot is None:
                     break
                 queue.pop(0)
