@@ -15,6 +15,7 @@ HERE = os.path.dirname(os.path.abspath(__file__))
 sys.path.insert(0, os.path.dirname(HERE))
 
 from benchmarks import (  # noqa: E402
+    elastic_bench,
     fig1_convergence,
     fig2_phase,
     fig4_local_iters,
@@ -33,6 +34,7 @@ BENCHES = {
     "fig4": fig4_local_iters,
     "kernel": kernel_micro,
     "masked": masked_rpca_bench,
+    "elastic": elastic_bench,
     "grad_compress": grad_compress_bench,
     "roofline": roofline_summary,
     "runtime": solver_runtime_bench,

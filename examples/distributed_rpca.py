@@ -8,7 +8,9 @@ Run with several CPU devices to see the actual sharded execution:
 Each mesh shard along "data" is one of the paper's clients; the consensus
 average of U is a single all-reduce per round; V_i and S_i never leave
 their shard (the privacy property).  A second run row-shards the matrix
-over a "model" axis as well (the beyond-paper 2-D extension).
+over a "model" axis as well (the beyond-paper 2-D extension), and a third
+shows the elastic topology: a ragged column count that does not divide the
+client count plus 60% per-round client participation (DESIGN.md Sec. 10).
 """
 import jax
 
@@ -34,6 +36,16 @@ def main():
                              data_axes=("data",), model_axis="model")
         err2 = relative_error(r2.l, r2.s, problem.l0, problem.s0)
         print(f"2-D (rows x cols) sharded: err={float(err2):.2e}")
+
+    # Elastic: ragged shards (n % E != 0 zero-pads behind a mask plane)
+    # and Bernoulli(0.6) per-round participation with weighted consensus.
+    ragged = generate_problem(jax.random.PRNGKey(2), 256, 301, rank=8,
+                              sparsity=0.05)
+    cfg_e = DCFConfig.elastic(rank=8, participation=0.6)
+    r3 = dcf_pca_sharded(ragged.m_obs, cfg_e, mesh, participation=0.6)
+    err3 = relative_error(r3.l, r3.s, ragged.l0, ragged.s0)
+    print(f"elastic (n=301 over {n_dev} clients, 60% participation): "
+          f"err={float(err3):.2e}")
 
 
 if __name__ == "__main__":

@@ -14,7 +14,15 @@ from repro.core.metrics import (
     relative_error,
     singular_value_error,
 )
-from repro.core.problems import RPCAProblem, generate_mask, generate_problem
+from repro.core.problems import (
+    RPCAProblem,
+    client_column_counts,
+    generate_mask,
+    generate_problem,
+    merge_columns,
+    participation_schedule,
+    split_columns,
+)
 from repro.core.runtime import RunConfig, SolveStats, Solver, solve_batch
 
 __all__ = [
@@ -44,6 +52,10 @@ __all__ = [
     "relative_error",
     "singular_value_error",
     "RPCAProblem",
+    "client_column_counts",
     "generate_mask",
     "generate_problem",
+    "merge_columns",
+    "participation_schedule",
+    "split_columns",
 ]

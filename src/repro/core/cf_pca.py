@@ -130,11 +130,19 @@ def make_problem(
         state = fz.init_state(key, m, n, cfg.rank, m_obs.dtype)
         u0, v0 = state.u, state.v
     else:
+        # Validate the full factor shapes eagerly (a warm (U, V) from a
+        # solve with different dimensions used to pass the rank-only check
+        # and fail, or silently broadcast, inside the inner solvers).
         u0, v0 = warm
-        if u0.shape[-1] != cfg.rank or v0.shape[-1] != cfg.rank:
+        if u0.shape != (m, cfg.rank):
             raise ValueError(
-                f"warm factors have rank {u0.shape[-1]}/{v0.shape[-1]}, "
-                f"config says rank {cfg.rank}"
+                f"warm U has shape {u0.shape}, expected (m, rank) = "
+                f"{(m, cfg.rank)}"
+            )
+        if v0.shape != (n, cfg.rank):
+            raise ValueError(
+                f"warm V has shape {v0.shape}, expected (n, rank) = "
+                f"{(n, cfg.rank)}"
             )
     if t0 is None:
         t0 = 0 if warm is None else cfg.outer_iters

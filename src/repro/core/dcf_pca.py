@@ -18,7 +18,12 @@ Two execution engines with identical math:
 
 Both engines run on the unified solver runtime (DESIGN.md Sec. 4): pass
 ``run=`` for convergence-controlled or chunked execution and
-``warm=(U, V)`` to seed the factors from a prior solve.  In the sharded
+``warm=(U, V)`` to seed the factors from a prior solve.  Client topology
+is elastic (DESIGN.md Sec. 10): ``n % num_clients != 0`` zero-pads ragged
+columns behind a mask plane and weights the consensus by true per-client
+counts, and ``participation=`` (a (T, E) 0/1 schedule or Bernoulli rate)
+runs partial-participation rounds -- dropped clients freeze their ``V_i``
+and are excluded from that round's weighted average.  In the sharded
 engine the convergence residual is computed on the *consensus* U (with a
 model-axis psum of the norms when rows are sharded), so the
 ``lax.while_loop`` predicate is identical on every shard and the collec-
@@ -60,6 +65,15 @@ class DCFProblem(NamedTuple):
     ``mask`` carries the client-blocked observation mask (robust matrix
     completion); ``None`` keeps the fully-observed path bit-for-bit
     unchanged.
+
+    Elastic topology (ISSUE 3): ``n_cols`` is the (E,) vector of *true*
+    per-client column counts -- ``None`` means equal blocks (``n % E == 0``,
+    the legacy layout).  A ragged ``n`` is zero-padded into equal slots by
+    ``split_columns`` and the padding columns are excluded through a
+    mask-zero plane, so a ragged problem always carries ``mask``.
+    ``participation`` is a ``(T_sched, E)`` 0/1 round schedule (``None`` =
+    every client, every round); round ``t`` uses row ``t % T_sched``, so a
+    warm-started resume (``t0 = outer_iters``) wraps around the schedule.
     """
 
     blocks: Array  # (E, m, n_i) column blocks, one per client
@@ -68,6 +82,8 @@ class DCFProblem(NamedTuple):
     lam0: Array  # () resolved base threshold
     t0: Array  # () int32 schedule offset (warm starts resume, not restart)
     mask: Array | None = None  # (E, m, n_i) blocked observation mask
+    n_cols: Array | None = None  # (E,) true per-client column counts
+    participation: Array | None = None  # (T_sched, E) 0/1 round schedule
 
 
 class _Carry(NamedTuple):
@@ -89,37 +105,86 @@ def make_solver(cfg: fz.DCFConfig, *, with_objective: bool = False) -> rt.Solver
 
     def step(p: DCFProblem, c: _Carry, t: Array) -> _Carry:
         e = p.blocks.shape[0]
-        n_frac = 1.0 / e  # equal column blocks: each client holds n/E cols
         t = t + p.t0
         eta = cfg.lr(t)
         lam_t = cfg.lam_at(p.lam0, t)
-        local = partial(fz.local_round, cfg=cfg, lam=lam_t, n_frac=n_frac)
         # Server broadcasts U; clients run K local iterations concurrently.
-        if p.mask is None:
-            u_i, v = jax.vmap(lambda vb, mb: local(c.u, vb, mb, eta=eta))(
-                c.v, p.blocks
-            )
-        else:
-            u_i, v = jax.vmap(
-                lambda vb, mb, wb: local(c.u, vb, mb, eta=eta, w=wb)
-            )(c.v, p.blocks, p.mask)
-        u = jnp.mean(u_i, axis=0)  # Eq. (9): FedAvg consensus
-        if track:
+        if p.n_cols is None:
+            # Equal blocks: the compile-time 1/E constant keeps this path
+            # bit-exact with the pre-elastic engine.
+            n_frac = 1.0 / e
+            local = partial(fz.local_round, cfg=cfg, lam=lam_t,
+                            n_frac=n_frac)
             if p.mask is None:
-                obj = jax.vmap(
-                    lambda vb, mb: fz.local_objective(
-                        u, vb, mb, cfg.rho, lam_t, n_frac
-                    )
-                )(v, p.blocks).sum()
+                u_i, v_new = jax.vmap(
+                    lambda vb, mb: local(c.u, vb, mb, eta=eta)
+                )(c.v, p.blocks)
+            else:
+                u_i, v_new = jax.vmap(
+                    lambda vb, mb, wb: local(c.u, vb, mb, eta=eta, w=wb)
+                )(c.v, p.blocks, p.mask)
+        else:
+            # Ragged blocks always carry a mask (padding columns are
+            # mask-zero) and a per-client regularizer share n_i/n.
+            n_frac = p.n_cols / jnp.sum(p.n_cols)
+            local = partial(fz.local_round, cfg=cfg, lam=lam_t)
+            u_i, v_new = jax.vmap(
+                lambda vb, mb, wb, nf: local(c.u, vb, mb, eta=eta, w=wb,
+                                             n_frac=nf)
+            )(c.v, p.blocks, p.mask, n_frac)
+        wsum = None
+        if p.participation is None:
+            v = v_new
+            if p.n_cols is None:
+                u = jnp.mean(u_i, axis=0)  # Eq. (9): FedAvg consensus
+            else:
+                w, _ = fz.consensus_weights(p.n_cols, None, e)
+                u = jnp.sum(w[:, None, None] * u_i, axis=0)
+        else:
+            pt = p.participation[jnp.mod(t, p.participation.shape[0])]
+            # Dropped-out clients freeze their V_i (no decay toward zero)
+            # and are excluded from the round's consensus; their weight in
+            # later rounds is still the full p_i n_i.
+            v = jnp.where(pt[:, None, None] > 0, v_new, c.v)
+            w, wsum = fz.consensus_weights(p.n_cols, pt, e)
+            u_i = jnp.where(pt[:, None, None] > 0, u_i, c.u)
+            u = jnp.where(
+                wsum > 0, jnp.sum(w[:, None, None] * u_i, axis=0), c.u
+            )
+        if track:
+            if p.n_cols is None:
+                if p.mask is None:
+                    obj = jax.vmap(
+                        lambda vb, mb: fz.local_objective(
+                            u, vb, mb, cfg.rho, lam_t, n_frac
+                        )
+                    )(v, p.blocks).sum()
+                else:
+                    obj = jax.vmap(
+                        lambda vb, mb, wb: fz.local_objective(
+                            u, vb, mb, cfg.rho, lam_t, n_frac, w=wb
+                        )
+                    )(v, p.blocks, p.mask).sum()
             else:
                 obj = jax.vmap(
-                    lambda vb, mb, wb: fz.local_objective(
-                        u, vb, mb, cfg.rho, lam_t, n_frac, w=wb
+                    lambda vb, mb, wb, nf: fz.local_objective(
+                        u, vb, mb, cfg.rho, lam_t, nf, w=wb
                     )
-                )(v, p.blocks, p.mask).sum()
+                )(v, p.blocks, p.mask, n_frac).sum()
         else:
             obj = jnp.zeros((), p.blocks.dtype)
         resid = jnp.linalg.norm(u - c.u) / (jnp.linalg.norm(c.u) + 1e-30)
+        if wsum is not None:
+            # A user-supplied schedule may contain an all-dropout row
+            # (generated ones never do).  Such a round is a no-op: re-emit
+            # the previous residual -- a zero here would read as
+            # convergence to the rel_residual criterion -- and emit an
+            # *inf* objective ("not measured": the frozen state would
+            # trivially plateau), which suppresses the obj_plateau check
+            # for this round and the next.
+            resid = jnp.where(wsum > 0, resid, c.diag.residual)
+            if track:
+                obj = jnp.where(wsum > 0, obj, jnp.inf)
         return _Carry(u=u, v=v, diag=rt.Diag(obj, resid))
 
     def diagnostics(p: DCFProblem, c: _Carry) -> rt.Diag:
@@ -148,6 +213,35 @@ def make_solver(cfg: fz.DCFConfig, *, with_objective: bool = False) -> rt.Solver
     return rt.Solver(init, step, diagnostics, finalize)
 
 
+def _resolve_participation(
+    participation: Array | float | None,
+    rounds: int,
+    num_clients: int,
+    key: Array,
+) -> Array | None:
+    """Normalize the ``participation=`` argument into a (T, E) 0/1 schedule.
+
+    A scalar is a Bernoulli rate: a ``(cfg.outer_iters, E)`` schedule is
+    drawn from a key derived from the solve key (every round keeps at least
+    one participant -- see ``problems.participation_schedule``).  A 2-D
+    array is used as-is (static schedules; values outside {0, 1} are
+    treated as participation weights p_i).
+    """
+    if participation is None:
+        return None
+    part = jnp.asarray(participation)
+    if part.ndim == 0:
+        return prob.participation_schedule(
+            jax.random.fold_in(key, 0x9A7), rounds, num_clients, part
+        )
+    if part.ndim != 2 or part.shape[1] != num_clients:
+        raise ValueError(
+            f"participation schedule has shape {part.shape}, expected "
+            f"(rounds, num_clients={num_clients})"
+        )
+    return part.astype(jnp.float32)
+
+
 def make_problem(
     m_obs: Array,
     cfg: fz.DCFConfig,
@@ -156,25 +250,51 @@ def make_problem(
     warm: tuple[Array, Array] | None = None,
     t0: int | Array | None = None,
     mask: Array | None = None,
+    participation: Array | float | None = None,
 ) -> DCFProblem:
     """Assemble the simulated-engine problem pytree.  See
     ``cf_pca.make_problem`` for the warm-start ``t0`` schedule-resume
     convention.  ``mask`` is the (m, n) observation mask; it is split into
     the same column blocks as ``m_obs`` (each client sees its own slice of
-    Omega) and the hidden entries of ``m_obs`` are zero-filled up front."""
+    Omega) and the hidden entries of ``m_obs`` are zero-filled up front.
+
+    Ragged ``n % num_clients != 0`` works: columns are zero-padded into
+    equal slots and excluded via a mask-zero plane, and the per-client true
+    counts ride along in ``n_cols`` (consensus weights).  ``participation``
+    is a (T, E) 0/1 schedule or a Bernoulli rate (see
+    :func:`_resolve_participation`)."""
     if mask is not None:
+        if mask.shape != m_obs.shape:
+            raise ValueError(
+                f"mask shape {mask.shape} != data shape {m_obs.shape}"
+            )
         m_obs = mask * m_obs
     m, n = m_obs.shape
+    # lam calibrates on the unpadded data -- padding columns are not
+    # observations and must not drag the MAD toward zero.
     lam0 = (
         jnp.asarray(cfg.lam, jnp.float32)
         if cfg.lam is not None
         else fz.robust_lam(m_obs, mask=mask)
     )
-    blocks = prob.split_columns(m_obs, num_clients)  # (E, m, n_i)
-    mask_blocks = (
-        None if mask is None else prob.split_columns(mask, num_clients)
-    )
+    blocks = prob.split_columns(m_obs, num_clients)  # (E, m, n_i), padded
     n_i = blocks.shape[-1]
+    if n % num_clients:
+        # Ragged: exclude the zero-padded tail columns via the Omega
+        # plumbing (an all-ones base mask when the problem is unmasked).
+        base = mask if mask is not None else jnp.ones_like(m_obs)
+        mask_blocks = prob.split_columns(base, num_clients)
+        n_cols = jnp.asarray(
+            prob.client_column_counts(n, num_clients), jnp.float32
+        )
+    else:
+        mask_blocks = (
+            None if mask is None else prob.split_columns(mask, num_clients)
+        )
+        n_cols = None
+    sched = _resolve_participation(
+        participation, cfg.outer_iters, num_clients, key
+    )
     if warm is None:
         k_u, k_v = jax.random.split(key)
         u0 = fz.init_state(k_u, m, n_i, cfg.rank, m_obs.dtype).u
@@ -183,17 +303,28 @@ def make_problem(
             lambda k: fz.init_state(k, 1, n_i, cfg.rank, m_obs.dtype).v
         )(jax.random.split(k_v, num_clients))
     else:
+        # Validate the full factor shapes eagerly: a warm (U, V) from a
+        # solve with a different num_clients or n used to pass the old
+        # rank-only check and fail (or silently broadcast) deep inside the
+        # vmapped local round.
         u0, v0 = warm
-        if u0.shape[-1] != cfg.rank or v0.shape[-1] != cfg.rank:
+        if u0.shape != (m, cfg.rank):
             raise ValueError(
-                f"warm factors have rank {u0.shape[-1]}/{v0.shape[-1]}, "
-                f"config says rank {cfg.rank}"
+                f"warm U has shape {u0.shape}, expected (m, rank) = "
+                f"{(m, cfg.rank)}"
+            )
+        if v0.shape != (num_clients, n_i, cfg.rank):
+            raise ValueError(
+                f"warm V has shape {v0.shape}, expected (E, n_i, rank) = "
+                f"{(num_clients, n_i, cfg.rank)} for num_clients="
+                f"{num_clients}, n={n}"
             )
     if t0 is None:
         t0 = 0 if warm is None else cfg.outer_iters
     return DCFProblem(
         blocks=blocks, u_init=u0, v_init=v0, lam0=lam0,
         t0=jnp.asarray(t0, jnp.int32), mask=mask_blocks,
+        n_cols=n_cols, participation=sched,
     )
 
 
@@ -207,19 +338,29 @@ def dcf_pca(
     run: rt.RunConfig | None = None,
     warm: tuple[Array, Array] | None = None,
     mask: Array | None = None,
+    participation: Array | float | None = None,
 ) -> DCFResult:
     """Run DCF-PCA with ``num_clients`` simulated clients on one device.
 
     ``mask`` (0/1, same shape as ``m_obs``) restricts every client's
     residual work to its observed entries (robust matrix completion).
+    ``n % num_clients != 0`` is allowed: ragged columns are padded into
+    equal slots behind a mask-zero plane and the consensus average is
+    weighted by each client's true column count.  ``participation`` is a
+    (T, E) 0/1 round schedule or a Bernoulli rate; dropped-out clients
+    freeze their V_i and are excluded from that round's consensus.
     """
     if key is None:
         key = jax.random.PRNGKey(0)
     run_cfg = run or rt.FIXED
     solver = make_solver(cfg, with_objective=run_cfg.needs_objective)
-    problem = make_problem(m_obs, cfg, num_clients, key, warm, mask=mask)
+    problem = make_problem(m_obs, cfg, num_clients, key, warm, mask=mask,
+                           participation=participation)
     carry, stats = rt.run(solver, problem, cfg.outer_iters, run_cfg)
     l, s, u, v = solver.finalize(problem, carry)
+    n = m_obs.shape[1]
+    if l.shape[1] != n:  # ragged: trim the zero-padded tail columns
+        l, s = l[:, :n], s[:, :n]
     return DCFResult(l=l, s=s, u=u, v=v, stats=stats)
 
 
@@ -233,14 +374,21 @@ def dcf_pca_batch(
     run: rt.RunConfig | None = None,
     warm: tuple[Array, Array] | None = None,  # ((B,m,r), (B,E,n_i,r))
     mask: Array | None = None,  # (B, m, n) per-problem observation masks
+    participation: Array | float | None = None,  # shared (T, E) or rate
 ) -> DCFResult:
-    """Solve a stack of problems concurrently; finished problems freeze."""
+    """Solve a stack of problems concurrently; finished problems freeze.
+
+    ``participation`` is shared across the batch when it is a (T, E)
+    schedule; a scalar rate draws an independent Bernoulli schedule per
+    problem (from each problem's key).
+    """
     if keys is None:
         keys = jax.random.split(jax.random.PRNGKey(0), m_batch.shape[0])
     run_cfg = run or rt.FIXED
     problems = jax.vmap(
         lambda mo, k, w, om: make_problem(mo, cfg, num_clients, k, w,
-                                          mask=om),
+                                          mask=om,
+                                          participation=participation),
         in_axes=(0, 0, None if warm is None else 0,
                  None if mask is None else 0),
     )(m_batch, keys, warm, mask)
@@ -250,6 +398,9 @@ def dcf_pca_batch(
         cfg.outer_iters,
         run_cfg,
     )
+    n = m_batch.shape[2]
+    if l.shape[2] != n:  # ragged: trim the zero-padded tail columns
+        l, s = l[:, :, :n], s[:, :, :n]
     return DCFResult(l=l, s=s, u=u, v=v, stats=stats)
 
 
@@ -267,6 +418,7 @@ def dcf_pca_sharded(
     run: rt.RunConfig | None = None,
     warm: tuple[Array, Array] | None = None,
     mask: Array | None = None,
+    participation: Array | float | None = None,
 ) -> DCFResult:
     """DCF-PCA where each shard along ``data_axes`` is one paper "client".
 
@@ -286,21 +438,46 @@ def dcf_pca_sharded(
     * ``mask`` (0/1, shape of ``m_obs``) is sharded exactly like ``M`` --
       each client keeps its own slice of Omega and never communicates it;
       all residual work then runs over observed entries only.
+    * Elastic topology: ``n % num_clients != 0`` zero-pads the column tail
+      behind a mask-zero plane (each shard keeps an equal-size slot, the
+      consensus weights use the true per-shard counts), and
+      ``participation`` -- a replicated (T, E) 0/1 schedule or a Bernoulli
+      rate -- turns the consensus pmean into a participation-weighted
+      ``psum(w_i U_i)`` with ``w_i = p_i n_i / sum_j p_j n_j``.  The
+      schedule is identical on every shard, so the runtime's early-exit
+      predicate (computed on the consensus U) stays lock-step and the
+      collectives never diverge.
     """
     if key is None:
         key = jax.random.PRNGKey(0)
     run_cfg = run or rt.FIXED
     track = cfg.track_objective or run_cfg.needs_objective
     if mask is not None:
+        if mask.shape != m_obs.shape:
+            raise ValueError(
+                f"mask shape {mask.shape} != data shape {m_obs.shape}"
+            )
         m_obs = mask * m_obs  # hidden entries must not influence the solve
     m, n = m_obs.shape
+    # lam calibrates on the unpadded data (padding columns are not
+    # observations).
     lam = (
         cfg.lam if cfg.lam is not None else fz.robust_lam(m_obs, mask=mask)
     )
     num_clients = 1
     for a in data_axes:
         num_clients *= mesh.shape[a]
+    ni_pad = -(-n // num_clients)
+    n_pad = ni_pad * num_clients
+    ragged = n_pad != n
+    if ragged:
+        base = mask if mask is not None else jnp.ones_like(m_obs)
+        mask = jnp.pad(base, ((0, 0), (0, n_pad - n)))
+        m_obs = jnp.pad(m_obs, ((0, 0), (0, n_pad - n)))
     n_frac = 1.0 / num_clients
+    sched = _resolve_participation(
+        participation, cfg.outer_iters, num_clients, key
+    )
 
     row_spec = model_axis  # None => replicated rows
     m_sharding = NamedSharding(mesh, P(row_spec, data_axes))
@@ -321,17 +498,39 @@ def dcf_pca_sharded(
         t0 = 0
         u0 = jax.random.normal(k_u, (m, cfg.rank), m_obs.dtype) * scale
     else:
+        # Eager full-shape validation (see the simulated engine): the
+        # sharded engine's own DCFResult layout is ((m, r), (n, r)).
         u0, v_warm = warm
-        if u0.shape[-1] != cfg.rank or v_warm.shape[-1] != cfg.rank:
+        if u0.shape != (m, cfg.rank):
             raise ValueError(
-                f"warm factors have rank {u0.shape[-1]}/{v_warm.shape[-1]}, "
-                f"config says rank {cfg.rank}"
+                f"warm U has shape {u0.shape}, expected (m, rank) = "
+                f"{(m, cfg.rank)}"
             )
+        if v_warm.shape != (n, cfg.rank):
+            raise ValueError(
+                f"warm V has shape {v_warm.shape}, expected (n, rank) = "
+                f"{(n, cfg.rank)}"
+            )
+        if ragged:  # pad V's row tail like M's column tail
+            v_warm = jnp.pad(v_warm, ((0, n_pad - n), (0, 0)))
         t0 = cfg.outer_iters  # resume, don't restart, the schedules
 
-    def solve_body(m_local_full, u, v, w_local):
+    def solve_body(m_local_full, u, v, w_local, sched_rep):
         """shard_map body: this shard's (m_loc, n_i) block + its factors.
-        ``w_local`` is this shard's mask slice (None when fully observed)."""
+        ``w_local`` is this shard's mask slice (None when fully observed);
+        ``sched_rep`` the replicated participation schedule (None = all)."""
+        idx = jax.lax.axis_index(data_axes)  # linear client index
+        if ragged:
+            # True column count of this shard: the zero-padding sits at the
+            # global tail, so shard i really owns clip(n - i*ni, 0, ni).
+            n_i = jnp.clip(
+                jnp.float32(n) - jnp.float32(ni_pad) * idx, 0.0,
+                jnp.float32(ni_pad),
+            )
+            n_frac_i = n_i / jnp.float32(n)
+        else:
+            n_i = jnp.float32(1.0)  # uniform weight base
+            n_frac_i = n_frac  # compile-time 1/E: legacy bit-exact path
 
         def init(p):
             inf = jnp.asarray(jnp.inf, jnp.float32)
@@ -342,15 +541,35 @@ def dcf_pca_sharded(
             eta = cfg.lr(t)
             lam_t = cfg.lam_at(lam, t)
             u_i, v_new = fz.local_round(
-                c.u, c.v, m_local_full, cfg=cfg, lam=lam_t, n_frac=n_frac,
+                c.u, c.v, m_local_full, cfg=cfg, lam=lam_t, n_frac=n_frac_i,
                 eta=eta, reduce_m=reduce_m, w=w_local,
             )
-            u_new = jax.lax.pmean(u_i, data_axes)  # Eq. (9) consensus
+            wsum = None
+            if sched_rep is None and not ragged:
+                u_new = jax.lax.pmean(u_i, data_axes)  # Eq. (9) consensus
+            else:
+                # Participation-weighted consensus (Eq. 9 generalized):
+                # U = sum_i p_i n_i U_i / sum_i p_i n_i, one psum of the
+                # pre-scaled factor -- same 2 E m r communication bound.
+                pt = (
+                    sched_rep[jnp.mod(t, sched_rep.shape[0]), idx]
+                    if sched_rep is not None
+                    else jnp.float32(1.0)
+                )
+                u_i = jnp.where(pt > 0, u_i, c.u)  # dropped: no local step
+                raw_w = pt * n_i
+                wsum = jax.lax.psum(raw_w, data_axes)
+                wgt = raw_w / jnp.maximum(wsum, 1e-30)
+                u_cand = jax.lax.psum(wgt * u_i, data_axes)
+                # All-dropout round: keep the previous consensus U; frozen
+                # clients keep their V_i (no decay toward zero weight).
+                u_new = jnp.where(wsum > 0, u_cand, c.u)
+                v_new = jnp.where(pt > 0, v_new, c.v)
             obj = (
                 jax.lax.psum(
                     fz.local_objective(
-                        u_new, v_new, m_local_full, cfg.rho, lam_t, n_frac,
-                        w=w_local,
+                        u_new, v_new, m_local_full, cfg.rho, lam_t,
+                        n_frac_i, w=w_local,
                     ),
                     all_axes,
                 )
@@ -364,6 +583,15 @@ def dcf_pca_sharded(
             du2 = reduce_m(jnp.sum((u_new - c.u) ** 2))
             u2 = reduce_m(jnp.sum(c.u**2))
             resid = jnp.sqrt(du2) / (jnp.sqrt(u2) + 1e-30)
+            if wsum is not None:
+                # All-dropout round (possible in user-supplied schedules):
+                # a no-op round re-emits the previous residual (zero would
+                # read as convergence) and an inf objective (the frozen
+                # state would trivially plateau); wsum is a psum, so every
+                # shard agrees and the early exit stays lock-step.
+                resid = jnp.where(wsum > 0, resid, c.diag.residual)
+                if track:
+                    obj = jnp.where(wsum > 0, obj, jnp.inf)
             return _Carry(u=u_new, v=v_new, diag=rt.Diag(obj, resid))
 
         solver = rt.Solver(init, step, lambda p, c: c.diag, lambda p, c: None)
@@ -396,6 +624,14 @@ def dcf_pca_sharded(
             v_warm, NamedSharding(mesh, P(data_axes, None))
         )
         specs["v"] = P(data_axes, None)
+    if sched is not None:
+        # The schedule is replicated: every shard indexes the same (T, E)
+        # table, so the round's participation set (and hence the weighted
+        # consensus and the early-exit predicate) agrees mesh-wide.
+        args["sched"] = jax.device_put(
+            sched, NamedSharding(mesh, P(None, None))
+        )
+        specs["sched"] = P(None, None)
 
     def solve(packed):
         m_local_full = packed["m"]
@@ -410,8 +646,11 @@ def dcf_pca_sharded(
                 jax.random.normal(kv_local, (n_i, cfg.rank),
                                   m_local_full.dtype) * scale
             )
-        return solve_body(m_local_full, packed["u"], v, packed.get("w"))
+        return solve_body(m_local_full, packed["u"], v, packed.get("w"),
+                          packed.get("sched"))
 
     fn = shard_map_compat(solve, mesh, (specs,), specs_out)
     l, s, u, v, stats = jax.jit(fn)(args)
+    if ragged:  # trim the zero-padded tail columns / V rows
+        l, s, v = l[:, :n], s[:, :n], v[:n]
     return DCFResult(l=l, s=s, u=u, v=v, stats=stats)

@@ -142,6 +142,22 @@ class DCFConfig:
         return cls(**kw)
 
     @classmethod
+    def elastic(cls, rank: int, participation: float = 1.0,
+                **overrides) -> "DCFConfig":
+        """Preset for partial client participation (elastic topologies).
+
+        With participation rate ``p`` each client's factors advance in only
+        ~``p T`` of the ``T`` rounds while the threshold anneal ticks every
+        round, so the fast anneal of :meth:`tuned` outruns the stragglers
+        and freezes a biased threshold -- the *same* failure mode as
+        masking (each round only updates a ``p`` fraction of the V blocks),
+        so this delegates to :meth:`masked`'s slow anneal with the budget
+        stretched by ``1/p`` (see benchmarks/elastic_bench.py for the
+        phase curve).
+        """
+        return cls.masked(rank, observed_frac=participation, **overrides)
+
+    @classmethod
     def masked(cls, rank: int, observed_frac: float = 0.7,
                **overrides) -> "DCFConfig":
         """Preset for partial observation (robust matrix completion).
@@ -192,6 +208,28 @@ def robust_lam(m_obs: Array, mult: float = 2.0,
     count = jnp.maximum(jnp.sum(keep.astype(jnp.int32)), 1)
     med = _masked_median(x, keep, count)
     return mult * 1.4826 * _masked_median(jnp.abs(x - med), keep, count)
+
+
+def consensus_weights(n_cols: Array | None, part: Array | None,
+                      num_clients: int) -> tuple[Array, Array]:
+    """Normalized consensus weights ``w_i = p_i n_i / sum_j p_j n_j``.
+
+    ``n_cols`` is the (E,) vector of true per-client column counts (``None``
+    => equal blocks), ``part`` the round's 0/1 participation mask (``None``
+    => everyone).  Returns ``(w, wsum)`` where ``wsum = sum_j p_j n_j`` --
+    callers gate the consensus on ``wsum > 0`` (an all-dropout round keeps
+    the previous U).  Normalizing *before* the weighted sum keeps the
+    equal-blocks full-participation case bit-exact with ``mean`` whenever E
+    is a power of two: ``w_i == fl(1/E)`` exactly and scaling by a power of
+    two commutes with every rounding step of the reduction.
+    """
+    raw = jnp.ones((num_clients,), jnp.float32)
+    if n_cols is not None:
+        raw = raw * n_cols
+    if part is not None:
+        raw = raw * part
+    wsum = jnp.sum(raw)
+    return raw / jnp.maximum(wsum, 1e-30), wsum
 
 
 @dataclass(frozen=True)

@@ -114,20 +114,66 @@ def generate_problem(
     )
 
 
+def client_column_counts(n: int, num_clients: int) -> tuple[int, ...]:
+    """True per-client column counts under the padded contiguous split.
+
+    Columns are padded up to ``n_pad = E * ceil(n/E)`` and dealt out in
+    contiguous blocks of ``ni = ceil(n/E)``; client ``i`` then really owns
+    ``clip(n - i*ni, 0, ni)`` columns (the zero-padding lands at the global
+    tail, i.e. on the last client(s) -- a client can own 0 real columns
+    when ``E`` nearly divides into ``n`` unevenly, e.g. ``n=9, E=4``).
+    """
+    ni = -(-n // num_clients)
+    return tuple(min(ni, max(0, n - i * ni)) for i in range(num_clients))
+
+
 def split_columns(mat: Array, num_clients: int) -> Array:
-    """Split ``(m, n)`` into equal column blocks, stacked as ``(E, m, n/E)``.
+    """Split ``(m, n)`` into column blocks, stacked as ``(E, m, ceil(n/E))``.
 
     The paper's distributed data model (Eq. 6): client i holds ``M_i``.
-    Requires ``n % num_clients == 0`` (pad upstream otherwise).
+    A ragged ``n % num_clients != 0`` is zero-padded up to the next
+    multiple of E; the padding columns sit at the global tail (see
+    :func:`client_column_counts`) and downstream solvers exclude them via
+    a zero observation mask (the PR-2 ``Omega`` plumbing).  Divisible ``n``
+    is bit-for-bit the old equal-blocks split.
     """
     m, n = mat.shape
-    if n % num_clients:
-        raise ValueError(f"n={n} not divisible by E={num_clients}")
-    ni = n // num_clients
+    ni = -(-n // num_clients)
+    pad = ni * num_clients - n
+    if pad:
+        mat = jnp.pad(mat, ((0, 0), (0, pad)))
     return jnp.moveaxis(mat.reshape(m, num_clients, ni), 1, 0)
 
 
-def merge_columns(blocks: Array) -> Array:
-    """Inverse of :func:`split_columns`: ``(E, m, ni) -> (m, E*ni)``."""
+def merge_columns(blocks: Array, n: int | None = None) -> Array:
+    """Inverse of :func:`split_columns`: ``(E, m, ni) -> (m, n)``.
+
+    ``n`` trims the zero-padding a ragged split appended (defaults to the
+    full ``E * ni`` width -- the exact inverse for divisible splits).
+    """
     e, m, ni = blocks.shape
-    return jnp.moveaxis(blocks, 0, 1).reshape(m, e * ni)
+    merged = jnp.moveaxis(blocks, 0, 1).reshape(m, e * ni)
+    return merged if n is None else merged[:, :n]
+
+
+def participation_schedule(
+    key: Array,
+    rounds: int,
+    num_clients: int,
+    rate: Array | float,
+    dtype: jnp.dtype = jnp.float32,
+) -> Array:
+    """Draw a ``(rounds, E)`` 0/1 Bernoulli(``rate``) participation schedule.
+
+    Every round is guaranteed at least one participant: in a round where
+    every client dropped out, one uniformly-chosen client is forced on
+    (an empty consensus round would freeze U and read as spurious
+    convergence to the runtime's early-exit criteria).
+    """
+    draw = jax.random.bernoulli(key, rate, (rounds, num_clients))
+    forced = jax.random.randint(
+        jax.random.fold_in(key, 1), (rounds,), 0, num_clients
+    )
+    empty = ~jnp.any(draw, axis=1, keepdims=True)
+    draw = draw | (empty & (jnp.arange(num_clients)[None, :] == forced[:, None]))
+    return draw.astype(dtype)

@@ -44,6 +44,23 @@ at all, and early exit / plateau detection / per-problem freeze masks stay
 correct under masking, including heterogeneous per-problem masks in
 ``solve_batch`` (see DESIGN.md Sec. 9).
 
+Elastic participation (DESIGN.md Sec. 10) extends that contract: a
+participation schedule is another ``problem``-pytree leaf, the solver's
+``step`` freezes dropped-out clients' local factors itself, and its
+``residual`` diagnostic is computed on the *consensus* factor -- a
+globally agreed scalar.  Two consequences keep the driver oblivious and
+the execution lock-step: (1) in the SPMD engine every shard evaluates the
+identical predicate (the schedule is replicated and the consensus U is
+psum-ed), so a ``while``-mode early exit never strands a shard inside a
+collective; (2) a round with zero participants must keep U unchanged
+*without* reading as convergence: solvers re-emit the previous residual
+(a zero would satisfy ``rel_residual``) and emit an *inf* objective
+("not measured" -- the frozen state would trivially plateau), and the
+``obj_plateau`` criterion requires two finite measurements.  Generated
+schedules additionally guarantee >= 1 participant per round.
+``solve_batch`` needs no awareness either way: per-problem schedules
+ride the batch axis like masks do.
+
 All drivers return a structured :class:`SolveStats` instead of the old
 ad-hoc scalar ``history`` arrays.
 """
@@ -143,9 +160,15 @@ def tree_where(pred: Array, new: Any, old: Any) -> Any:
 def _converged(run: RunConfig, diag: Diag, prev_obj: Array) -> Array:
     if run.criterion == "rel_residual":
         return diag.residual <= run.tol
-    return jnp.abs(prev_obj - diag.objective) <= run.tol * jnp.maximum(
+    # A plateau requires two *finite* measurements: the pre-first-check
+    # prev_obj is inf, a diverged solve's objective may be inf/nan, and
+    # solvers emit an inf objective for rounds where no progress was
+    # measurable (e.g. an all-dropout participation round) -- none of
+    # those may read as convergence (inf <= tol * max(inf, 1) is True).
+    delta_ok = jnp.abs(prev_obj - diag.objective) <= run.tol * jnp.maximum(
         jnp.abs(prev_obj), 1.0
     )
+    return delta_ok & jnp.isfinite(prev_obj) & jnp.isfinite(diag.objective)
 
 
 def _f32(x) -> Array:

@@ -54,10 +54,34 @@ class CompressConfig:
         )
 
 
-def _robust_sigma(g: Array, axes) -> Array:
+def _robust_sigma(g: Array, axes, eps: float = 1e-6) -> Array:
+    """Robust scale of a gradient leaf, floored away from zero.
+
+    The plain MAD collapses to 0 on mostly-zero leaves (embedding rows,
+    expert shards, post-warmup sparse grads: > 50% exact zeros), which
+    would set ``lam = 0`` so the sparse term absorbs the *entire* gradient
+    and the robust aggregate silently returns ~0.  When that happens, fall
+    back to the MAD over the **nonzero** deviations -- the robust scale of
+    the leaf's support, still immune to a minority of gross outliers among
+    the active entries (a naive ``eps * rms`` floor is not: one corrupted
+    worker's 1e4-scale spikes inflate its rms by orders of magnitude).
+    The tiny ``eps * rms`` term only rescues fully-constant leaves where
+    even the support is empty.
+    """
     med = jnp.median(g)
-    mad = jnp.median(jnp.abs(g - med))
-    return jax.lax.pmean(1.4826 * mad, axes)
+    dev = jnp.abs(g - med).ravel()
+    # One sort serves both medians (this runs per gradient leaf per step):
+    # the zeros sit at the front of the sorted deviations, so the median
+    # over the nonzero support is just an offset into the same array.
+    x = jnp.sort(dev)
+    sz = dev.size
+    mad = 0.5 * (x[(sz - 1) // 2] + x[sz // 2])
+    cnt = jnp.maximum(jnp.sum(dev > 0), 1)
+    z = sz - cnt
+    mad_nz = 0.5 * (x[z + (cnt - 1) // 2] + x[z + cnt // 2])
+    rms = jnp.sqrt(jnp.mean(jnp.square(g)))
+    sigma = jnp.where(mad > 0, mad, mad_nz)
+    return jax.lax.pmean(jnp.maximum(1.4826 * sigma, eps * rms), axes)
 
 
 def consensus_compress(

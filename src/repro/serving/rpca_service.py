@@ -81,6 +81,8 @@ class RPCAService:
     ):
         self.cfg = cfg
         self.scfg = scfg
+        self.m = m
+        self.n = n
         self._solver = make_solver(cfg)
         self._key = key if key is not None else jax.random.PRNGKey(0)
         self._n_submitted = 0
@@ -104,6 +106,7 @@ class RPCAService:
         self._done = zeros((b,), bool)
         self._hit = zeros((b,), bool)  # met the tolerance (vs budget-out)
         self._active = np.zeros((b,), bool)  # host-side slot occupancy
+        self._slot_n = np.full((b,), n, np.int64)  # true width per slot
 
         step_b = jax.vmap(self._solver.step, in_axes=(0, 0, 0))
         diag_b = jax.vmap(self._solver.diagnostics)
@@ -148,18 +151,62 @@ class RPCAService:
     ) -> int | None:
         """Place a problem into a free slot; returns the slot id or ``None``
         when the batch is full (caller retries after a tick + poll cycle).
+        ``None`` is reserved for *capacity*: a problem that can never fit
+        (wrong row count, too many columns, mis-shaped mask or warm
+        factors) raises ``ValueError`` eagerly instead, so callers can
+        tell "retry later" from "never valid".
 
         ``mask`` is this request's observation mask (0/1, shape of
         ``m_obs``); it may differ from the mask of the warm-start's prior
         solve -- streaming refreshes re-solve under the current epoch's
         observation pattern.
+
+        Ragged widths are first-class: an ``(m, n_req)`` problem with
+        ``n_req < n`` is zero-padded into the service's homogeneous
+        ``(m, n)`` slot pytree behind a mask-zero plane (the PR-2 Omega
+        plumbing) and :meth:`poll` trims the response back to ``n_req``.
         """
+        if m_obs.ndim != 2 or m_obs.shape[0] != self.m:
+            raise ValueError(
+                f"problem shape {m_obs.shape} incompatible with service "
+                f"rows m={self.m}"
+            )
+        n_req = m_obs.shape[1]
+        if n_req == 0 or n_req > self.n:
+            raise ValueError(
+                f"problem has {n_req} columns, service slots hold 1..{self.n}"
+            )
+        if mask is not None and mask.shape != m_obs.shape:
+            raise ValueError(
+                f"mask shape {mask.shape} != problem shape {m_obs.shape}"
+            )
+        if warm is not None:
+            w_u, w_v = warm
+            if w_u.shape != (self.m, self.cfg.rank) or w_v.shape != (
+                n_req, self.cfg.rank
+            ):
+                raise ValueError(
+                    f"warm factors have shapes {w_u.shape}/{w_v.shape}, "
+                    f"expected {(self.m, self.cfg.rank)}/"
+                    f"{(n_req, self.cfg.rank)}"
+                )
         free = np.flatnonzero(~self._active)
         if free.size == 0:
             return None
         slot = int(free[0])
         key = jax.random.fold_in(self._key, self._n_submitted)
         self._n_submitted += 1
+        if n_req < self.n:
+            # Ragged width: pad the data (and the mask's base plane) with
+            # mask-zero columns so the padded tail never influences the
+            # solve; lam still calibrates on the real columns only (the
+            # masked-median path ignores mask-zero entries).
+            pad = self.n - n_req
+            base = mask if mask is not None else jnp.ones_like(m_obs)
+            mask = jnp.pad(base, ((0, 0), (0, pad)))
+            m_obs = jnp.pad(m_obs, ((0, 0), (0, pad)))
+            if warm is not None:
+                warm = (warm[0], jnp.pad(warm[1], ((0, pad), (0, 0))))
         if mask is None:
             # Maskless: calibrate lam on the unmasked fast path (plain
             # medians, no masked sort), then attach the all-ones plane the
@@ -168,6 +215,7 @@ class RPCAService:
             problem = problem._replace(mask=jnp.ones_like(m_obs))
         else:
             problem = make_problem(m_obs, self.cfg, key, warm, mask=mask)
+        self._slot_n[slot] = n_req
         idx = jnp.asarray(slot)
         self._problems = self._write_slot(self._problems, problem, idx)
         self._carry = self._write_slot(
@@ -199,6 +247,9 @@ class RPCAService:
             return None
         take = lambda tree: jax.tree.map(lambda a: a[slot], tree)
         l, s, u, v = self._finalize_one(take(self._problems), take(self._carry))
+        n_req = int(self._slot_n[slot])
+        if n_req < self.n:  # ragged submission: trim the padded tail
+            l, s, v = l[:, :n_req], s[:, :n_req], v[:n_req]
         return RPCAResponse(
             l=l, s=s, u=u, v=v,
             rounds=int(rounds[slot]),

@@ -1,0 +1,311 @@
+"""Elastic client topologies (ISSUE 3): ragged shards, partial
+participation, weighted consensus, and the serving/aggregation satellites.
+
+The sharded-engine (SPMD) counterparts live in tests/test_multidevice.py
+(they need a forced multi-device subprocess).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DCFConfig,
+    client_column_counts,
+    dcf_pca,
+    dcf_pca_batch,
+    generate_problem,
+    low_rank_relative_error,
+    merge_columns,
+    participation_schedule,
+    relative_error,
+    split_columns,
+)
+
+M, N = 120, 160  # N % 8 == 0: the legacy equal-blocks layout
+N_RAG = 150  # N_RAG % 8 == 6: ragged
+RANK = 6
+SPARSITY = 0.05
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return generate_problem(jax.random.PRNGKey(7), M, N, RANK, SPARSITY)
+
+
+@pytest.fixture(scope="module")
+def ragged_problem():
+    return generate_problem(jax.random.PRNGKey(3), M, N_RAG, RANK, SPARSITY)
+
+
+# ---------------------------------------------------------------------------
+# Topology plumbing
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,e", [(150, 8), (7, 3), (10, 10), (9, 4), (160, 8)])
+def test_split_merge_ragged_roundtrip(n, e):
+    x = np.arange(5 * n, dtype=np.float32).reshape(5, n)
+    blocks = split_columns(jnp.asarray(x), e)
+    ni = -(-n // e)
+    assert blocks.shape == (e, 5, ni)
+    # padding lands at the global tail and is zero
+    merged_full = merge_columns(blocks)
+    assert merged_full.shape == (5, e * ni)
+    np.testing.assert_array_equal(np.asarray(merged_full[:, n:]), 0.0)
+    # trimming recovers the input exactly
+    np.testing.assert_array_equal(np.asarray(merge_columns(blocks, n)), x)
+
+
+@pytest.mark.parametrize("n,e", [(150, 8), (7, 3), (10, 10), (9, 4), (160, 8)])
+def test_client_column_counts(n, e):
+    counts = client_column_counts(n, e)
+    ni = -(-n // e)
+    assert len(counts) == e and sum(counts) == n
+    assert all(0 <= c <= ni for c in counts)
+    # counts describe the contiguous padded split exactly
+    x = np.ones((2, n), np.float32)
+    blocks = np.asarray(split_columns(jnp.asarray(x), e))
+    np.testing.assert_array_equal(blocks.sum(axis=(1, 2)) / 2, counts)
+
+
+def test_participation_schedule_never_empty():
+    # Even at a brutal 5% rate, every round keeps >= 1 participant.
+    s = participation_schedule(jax.random.PRNGKey(0), 200, 8, 0.05)
+    assert s.shape == (200, 8)
+    assert float(s.sum(axis=1).min()) >= 1.0
+    assert set(np.unique(np.asarray(s))) <= {0.0, 1.0}
+    # at a moderate rate the draw really is ~Bernoulli
+    s = participation_schedule(jax.random.PRNGKey(1), 500, 8, 0.5)
+    assert 0.4 < float(s.mean()) < 0.6
+
+
+# ---------------------------------------------------------------------------
+# Invariance: the elastic engine must not move the legacy results
+# ---------------------------------------------------------------------------
+def test_full_participation_bit_exact(problem):
+    """Equal blocks + an explicit all-ones schedule is bit-exact with the
+    default (participation=None) path: the weighted consensus reduces to
+    the plain mean exactly for power-of-two E."""
+    cfg = DCFConfig.tuned(RANK, outer_iters=40)
+    r0 = dcf_pca(problem.m_obs, cfg, num_clients=8)
+    r1 = dcf_pca(problem.m_obs, cfg, num_clients=8,
+                 participation=jnp.ones((cfg.outer_iters, 8)))
+    for a, b in zip((r0.l, r0.s, r0.u, r0.v), (r1.l, r1.s, r1.u, r1.v)):
+        assert (a == b).all()
+
+
+def test_ragged_recovery_and_shapes(ragged_problem):
+    p = ragged_problem
+    cfg = DCFConfig.tuned(RANK, outer_iters=80)
+    r = dcf_pca(p.m_obs, cfg, num_clients=8)
+    assert r.l.shape == (M, N_RAG) and r.s.shape == (M, N_RAG)
+    assert r.v.shape == (8, -(-N_RAG // 8), RANK)
+    assert float(relative_error(r.l, r.s, p.l0, p.s0)) < 1e-4
+
+
+def test_ragged_batch_shapes(ragged_problem):
+    p = ragged_problem
+    cfg = DCFConfig.tuned(RANK, outer_iters=10)
+    batch = jnp.stack([p.m_obs, p.m_obs])
+    r = dcf_pca_batch(batch, cfg, num_clients=8)
+    assert r.l.shape == (2, M, N_RAG) and r.s.shape == (2, M, N_RAG)
+
+
+def test_zero_column_client():
+    """E nearly-divides pathologically: some clients own 0 real columns
+    (n=9, E=4 => counts (3, 3, 3, 0)); the solve must still run and the
+    empty client must never bias the consensus.  A 9-column rank-2 problem
+    is intrinsically hard (the centralized baseline only reaches ~7e-2),
+    so the bar is parity with centralized quality, not exact recovery."""
+    from repro.core import cf_pca
+
+    p = generate_problem(jax.random.PRNGKey(5), 64, 9, rank=2, sparsity=0.05)
+    cfg = DCFConfig.tuned(2, outer_iters=300)
+    r = dcf_pca(p.m_obs, cfg, num_clients=4)
+    assert r.l.shape == (64, 9)
+    err = float(low_rank_relative_error(r.l, p.l0))
+    base = cf_pca(p.m_obs, cfg)
+    err_cf = float(low_rank_relative_error(base.l, p.l0))
+    assert jnp.isfinite(r.l).all() and jnp.isfinite(r.s).all()
+    assert err < max(2.0 * err_cf, 1e-2), (err, err_cf)
+
+
+# ---------------------------------------------------------------------------
+# Partial participation
+# ---------------------------------------------------------------------------
+def test_half_participation_recovery(problem):
+    cfg = DCFConfig.elastic(RANK, participation=0.5)
+    r = dcf_pca(problem.m_obs, cfg, num_clients=8, participation=0.5)
+    assert float(low_rank_relative_error(r.l, problem.l0)) <= 1e-2
+    assert float(relative_error(r.l, r.s, problem.l0, problem.s0)) <= 1e-2
+
+
+def test_half_participation_ragged(ragged_problem):
+    """Participation and ragged shards compose."""
+    p = ragged_problem
+    cfg = DCFConfig.elastic(RANK, participation=0.5)
+    r = dcf_pca(p.m_obs, cfg, num_clients=8, participation=0.5)
+    assert float(low_rank_relative_error(r.l, p.l0)) <= 1e-2
+
+
+def test_dropped_client_factors_freeze(problem):
+    """A client that never participates keeps its V_i bit-for-bit: no decay
+    toward zero, and full weight (p_i n_i) the moment it rejoins."""
+    cfg = DCFConfig.tuned(RANK, outer_iters=30)
+    base = dcf_pca(problem.m_obs, cfg, num_clients=8)
+    sched = jnp.ones((cfg.outer_iters, 8)).at[:, 0].set(0.0)
+    r = dcf_pca(problem.m_obs, cfg, num_clients=8,
+                warm=(base.u, base.v), participation=sched)
+    assert (r.v[0] == base.v[0]).all()  # frozen verbatim
+    assert not (r.v[1] == base.v[1]).all()  # the others moved
+
+
+def test_all_dropout_round_not_convergence(problem):
+    """A user-supplied schedule with an all-zero row must not trip the
+    while-mode early exit: the idle round keeps U and re-emits the
+    previous residual instead of a zero."""
+    from repro.core import RunConfig
+
+    cfg = DCFConfig.tuned(RANK, outer_iters=200)
+    run = RunConfig(mode="while", tol=1e-6)
+    full = dcf_pca(problem.m_obs, cfg, num_clients=8, run=run)
+    sched = jnp.ones((cfg.outer_iters, 8)).at[20].set(0.0)
+    r = dcf_pca(problem.m_obs, cfg, num_clients=8, run=run,
+                participation=sched)
+    # did not exit at the idle round, and quality matches the full run
+    assert int(r.stats.rounds) > 25
+    err = float(low_rank_relative_error(r.l, problem.l0))
+    err_full = float(low_rank_relative_error(full.l, problem.l0))
+    assert err <= max(2.0 * err_full, 1e-4), (err, err_full)
+    # obj_plateau is equally protected: the idle round emits an inf
+    # ("not measured") objective instead of a trivially-plateaued one.
+    run_obj = RunConfig(mode="while", criterion="obj_plateau", tol=1e-9)
+    cfg_t = DCFConfig.tuned(RANK, outer_iters=60, track_objective=True)
+    full2 = dcf_pca(problem.m_obs, cfg_t, num_clients=8, run=run_obj)
+    r2 = dcf_pca(problem.m_obs, cfg_t, num_clients=8, run=run_obj,
+                 participation=jnp.ones((60, 8)).at[20].set(0.0))
+    assert int(r2.stats.rounds) > 21, int(r2.stats.rounds)
+    assert int(r2.stats.rounds) >= int(full2.stats.rounds) - 2
+
+
+def test_schedule_shape_validation(problem):
+    cfg = DCFConfig.tuned(RANK, outer_iters=10)
+    with pytest.raises(ValueError, match="participation"):
+        dcf_pca(problem.m_obs, cfg, num_clients=8,
+                participation=jnp.ones((10, 5)))  # 5 != num_clients
+
+
+# ---------------------------------------------------------------------------
+# Warm-start shape validation (satellite)
+# ---------------------------------------------------------------------------
+def test_warm_shape_validation(problem):
+    cfg = DCFConfig.tuned(RANK, outer_iters=10)
+    good = dcf_pca(problem.m_obs, cfg, num_clients=8)
+    # wrong num_clients: V has the E axis of a different topology
+    with pytest.raises(ValueError, match="warm V"):
+        dcf_pca(problem.m_obs, cfg, num_clients=4, warm=(good.u, good.v))
+    # wrong n: V rows from a narrower solve
+    with pytest.raises(ValueError, match="warm V"):
+        dcf_pca(problem.m_obs, cfg, num_clients=8,
+                warm=(good.u, good.v[:, :-1]))
+    # wrong m on U
+    with pytest.raises(ValueError, match="warm U"):
+        dcf_pca(problem.m_obs, cfg, num_clients=8,
+                warm=(good.u[:-1], good.v))
+    # wrong rank still caught
+    with pytest.raises(ValueError, match="warm U"):
+        dcf_pca(problem.m_obs, cfg, num_clients=8,
+                warm=(good.u[:, :-1], good.v))
+
+
+# ---------------------------------------------------------------------------
+# Serving: ragged submissions + error semantics (satellites)
+# ---------------------------------------------------------------------------
+def test_service_ragged_submission():
+    from repro.serving.rpca_service import RPCAService, RPCAServiceConfig
+
+    m, n, n_req, rank = 48, 64, 50, 3
+    p = generate_problem(jax.random.PRNGKey(11), m, n_req, rank, 0.05)
+    svc = RPCAService(m, n, DCFConfig.tuned(rank, outer_iters=150),
+                      RPCAServiceConfig(slots=2, max_rounds=200))
+    slot = svc.submit(p.m_obs)
+    assert slot is not None
+    while svc.pending():
+        svc.tick()
+    resp = svc.poll(slot)
+    assert resp.l.shape == (m, n_req) and resp.s.shape == (m, n_req)
+    assert resp.v.shape == (n_req, rank)
+    assert float(low_rank_relative_error(resp.l, p.l0)) < 1e-2
+    # the trimmed factors warm-start a refresh at the same ragged width
+    svc.release(slot)
+    slot2 = svc.submit(p.m_obs, warm=(resp.u, resp.v))
+    assert slot2 is not None
+    while svc.pending():
+        svc.tick()
+    resp2 = svc.poll(slot2)
+    assert resp2.rounds <= resp.rounds
+
+
+def test_service_error_semantics():
+    from repro.serving.rpca_service import RPCAService, RPCAServiceConfig
+
+    m, n, rank = 32, 40, 3
+    svc = RPCAService(m, n, DCFConfig.tuned(rank, outer_iters=20),
+                      RPCAServiceConfig(slots=2))
+    # incompatible shapes raise (never valid) ...
+    with pytest.raises(ValueError, match="rows"):
+        svc.submit(jnp.zeros((m + 1, n)))
+    with pytest.raises(ValueError, match="columns"):
+        svc.submit(jnp.zeros((m, n + 1)))
+    with pytest.raises(ValueError, match="mask"):
+        svc.submit(jnp.zeros((m, n)), mask=jnp.ones((m, n - 1)))
+    with pytest.raises(ValueError, match="warm"):
+        svc.submit(jnp.zeros((m, n)),
+                   warm=(jnp.zeros((m, rank + 1)), jnp.zeros((n, rank + 1))))
+    # ... and a full service returns None (retry later)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(m, n)),
+                    jnp.float32)
+    assert svc.submit(x) == 0
+    assert svc.submit(x) == 1
+    assert svc.submit(x) is None  # capacity, not an error
+    # bad submissions consumed no slots
+    assert int(np.sum(svc._active)) == 2
+
+
+# ---------------------------------------------------------------------------
+# grad_compress: sparse-gradient-leaf regression (satellite)
+# ---------------------------------------------------------------------------
+def test_robust_sigma_sparse_leaf_floor():
+    from repro.distributed.grad_compress import _robust_sigma
+
+    g = jnp.zeros((64, 64)).at[:2, :].set(3.0)  # >> 50% zeros: MAD == 0
+    sig = jax.vmap(lambda x: _robust_sigma(x, "e"), axis_name="e")(g[None])
+    assert float(sig[0]) > 0.1  # robust scale of the support, not 0
+    # dense leaves are unchanged by the floor (MAD > 0 wins)
+    g2 = jax.random.normal(jax.random.PRNGKey(0), (64, 64))
+    sig2 = jax.vmap(lambda x: _robust_sigma(x, "e"), axis_name="e")(g2[None])
+    med = jnp.median(g2)
+    mad = jnp.median(jnp.abs(g2 - med))
+    assert jnp.allclose(sig2[0], 1.4826 * mad)
+
+
+def test_consensus_compress_sparse_leaf_not_zeroed():
+    """Mostly-zero gradient leaves (embedding-style) used to drive lam to 0
+    and the 'robust aggregate' to ~0; the floored threshold recovers the
+    shared signal."""
+    from repro.distributed.grad_compress import (CompressConfig,
+                                                 consensus_compress)
+
+    e, m, k, r = 8, 256, 128, 4
+    u0 = jax.random.normal(jax.random.PRNGKey(1), (8, r))
+    vs = jax.random.normal(jax.random.PRNGKey(2), (e, k, r))
+    rows = jnp.zeros((m, 8)).at[:8, :].set(jnp.eye(8))  # 8 active rows
+    grads = jnp.einsum("ma,ar,ekr->emk", rows, u0, vs)
+    clean_mean = grads.mean(0)
+    ccfg = CompressConfig(rank=8, rounds=6)
+    agg = jax.vmap(
+        lambda g: consensus_compress(g, "e", ccfg, jax.random.PRNGKey(7)),
+        axis_name="e",
+    )(grads)
+    err = float(jnp.linalg.norm(agg[0] - clean_mean)
+                / jnp.linalg.norm(clean_mean))
+    assert err < 0.05, err
