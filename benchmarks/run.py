@@ -15,6 +15,7 @@ HERE = os.path.dirname(os.path.abspath(__file__))
 sys.path.insert(0, os.path.dirname(HERE))
 
 from benchmarks import (  # noqa: E402
+    api_dispatch_bench,
     elastic_bench,
     fig1_convergence,
     fig2_phase,
@@ -35,6 +36,7 @@ BENCHES = {
     "kernel": kernel_micro,
     "masked": masked_rpca_bench,
     "elastic": elastic_bench,
+    "api": api_dispatch_bench,
     "grad_compress": grad_compress_bench,
     "roofline": roofline_summary,
     "runtime": solver_runtime_bench,

@@ -1,15 +1,19 @@
-"""Quickstart: recover a low-rank + sparse decomposition with DCF-PCA.
+"""Quickstart: recover a low-rank + sparse decomposition through the
+unified ``repro.rpca`` front door.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Also demos the unified solver runtime: convergence-controlled early
-stopping (``run=RunConfig(...)``) and warm-started refresh solves.
+One ``solve`` call covers every solver in the stack: ``method="auto"``
+picks by problem size and capabilities, explicit methods are drop-in
+swaps, and every call returns the same ``RPCAResult`` (components,
+factors where the method has them, structured solve stats).
 """
 import jax
 
+from repro import rpca
 from repro.core import (
-    DCFConfig, RunConfig, dcf_pca, generate_problem,
-    low_rank_relative_error, relative_error,
+    DCFConfig, RunConfig, generate_problem, low_rank_relative_error,
+    relative_error,
 )
 
 
@@ -20,29 +24,47 @@ def main():
 
     # 10 simulated clients, each holding 30 columns; consensus on U only.
     cfg = DCFConfig.tuned(rank=15)
-    result = dcf_pca(problem.m_obs, cfg, num_clients=10)
+    result = rpca.solve(problem.m_obs, method="dcf", cfg=cfg,
+                        num_clients=10)
 
     err = relative_error(result.l, result.s, problem.l0, problem.s0)
     lerr = low_rank_relative_error(result.l, problem.l0)
-    print(f"relative error (Eq. 30): {float(err):.2e}")
-    print(f"low-rank relative error: {float(lerr):.2e}")
-    print(f"consensus factor U: {result.u.shape}, per-client V: {result.v.shape}")
+    print(f"method {result.method}: relative error (Eq. 30) "
+          f"{float(err):.2e}, low-rank {float(lerr):.2e}")
+    u, v = result.factors
+    print(f"consensus factor U: {u.shape}, per-client V: {v.shape}")
     assert err < 1e-4
 
-    # Early stopping: stop when the consensus factor settles instead of
-    # always paying the full outer_iters budget.
-    early = dcf_pca(problem.m_obs, cfg, num_clients=10,
-                    run=RunConfig(mode="chunk", tol=5e-4, chunk_size=10))
+    # The convex SVD baseline is a drop-in method swap -- same call, same
+    # result type (no factors: the convex solvers estimate the rank).
+    convex = rpca.solve(problem.m_obs, method="ialm")
+    c_err = relative_error(convex.l, convex.s, problem.l0, problem.s0)
+    print(f"method {convex.method}: err {float(c_err):.2e}, "
+          f"factors: {convex.factors}")
+
+    # method="auto": this problem sits below the SVD-cost threshold, so
+    # the exact convex solver wins; a spec with a mesh or num_clients
+    # would route to the DCF engines instead.
+    auto = rpca.solve(problem.m_obs)
+    print(f"auto picked {auto.method!r} "
+          f"({int(auto.stats.rounds)} rounds)")
+
+    # Early stopping: run="chunk"/"early" are named runtime presets; pass
+    # a RunConfig for custom tolerances.
+    early = rpca.solve(problem.m_obs, method="dcf", cfg=cfg, num_clients=10,
+                       run=RunConfig(mode="chunk", tol=5e-4, chunk_size=10))
     e_err = relative_error(early.l, early.s, problem.l0, problem.s0)
     print(f"early stop: {int(early.stats.rounds)}/{cfg.outer_iters} rounds, "
           f"err {float(e_err):.2e}")
 
-    # Warm-started refresh: new data, prior factors => a handful of rounds.
+    # Warm-started refresh: new data + prior factors => a handful of
+    # rounds.  result.factors feeds straight back as warm=.  (run="early"
+    # is the same mode at the default 1e-6 tolerance.)
     refreshed_m = problem.m_obs + 0.01 * jax.random.normal(
         jax.random.PRNGKey(1), problem.m_obs.shape)
-    warm = dcf_pca(refreshed_m, cfg, num_clients=10,
-                   run=RunConfig(mode="while", tol=5e-4),
-                   warm=(early.u, early.v))
+    warm = rpca.solve(refreshed_m, method="dcf", cfg=cfg, num_clients=10,
+                      run=RunConfig(mode="while", tol=5e-4),
+                      warm=early.factors)
     print(f"warm refresh: {int(warm.stats.rounds)} rounds")
 
 

@@ -1,0 +1,31 @@
+"""repro: a production-scale reproduction of Distributed Robust PCA.
+
+Public surface:
+
+``repro.rpca``   the front door -- :func:`repro.rpca.solve` over the
+                 solver registry, with :class:`~repro.rpca.RPCASpec` /
+                 :class:`~repro.rpca.RPCAResult`.
+``repro.core``   solver internals (runtime, problems, metrics, the four
+                 solver modules and their legacy entrypoints).
+"""
+from repro import rpca
+from repro.rpca import (
+    RPCAResult,
+    RPCASpec,
+    SOLVERS,
+    SolverCaps,
+    auto_method,
+    register_solver,
+    solve,
+)
+
+__all__ = [
+    "rpca",
+    "RPCAResult",
+    "RPCASpec",
+    "SOLVERS",
+    "SolverCaps",
+    "auto_method",
+    "register_solver",
+    "solve",
+]

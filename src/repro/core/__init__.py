@@ -1,6 +1,9 @@
 """Core RPCA algorithms: the paper's DCF-PCA plus every baseline it
 compares against (CF-PCA, APGM, IALM), all running on the unified solver
-runtime (``repro.core.runtime``)."""
+runtime (``repro.core.runtime``) and registered with the ``repro.rpca``
+front door (re-exported here as ``rpca`` / ``RPCASpec`` / ``RPCAResult``
+/ ``solve``)."""
+from repro import rpca
 from repro.core.apgm import APGMConfig, ConvexResult, apgm, apgm_batch
 from repro.core.cf_pca import CFResult, cf_pca, cf_pca_batch
 from repro.core.dcf_pca import DCFResult, dcf_pca, dcf_pca_batch, dcf_pca_sharded
@@ -23,9 +26,29 @@ from repro.core.problems import (
     participation_schedule,
     split_columns,
 )
-from repro.core.runtime import RunConfig, SolveStats, Solver, solve_batch
+from repro.core.runtime import (
+    CHUNKED,
+    EARLY,
+    FIXED,
+    RUN_PRESETS,
+    RunConfig,
+    SolveStats,
+    Solver,
+    resolve_run,
+    solve_batch,
+)
+from repro.rpca import RPCAResult, RPCASpec, solve
 
 __all__ = [
+    "rpca",
+    "RPCAResult",
+    "RPCASpec",
+    "solve",
+    "CHUNKED",
+    "EARLY",
+    "FIXED",
+    "RUN_PRESETS",
+    "resolve_run",
     "APGMConfig",
     "ConvexResult",
     "apgm",

@@ -11,6 +11,8 @@ Runs on the unified solver runtime (``repro.core.runtime``): the public
 ``apgm`` wrapper keeps its signature but accepts an optional ``run=``
 execution mode (early stopping / chunked serving) and ``warm=(L, S)``
 initial iterates; ``apgm_batch`` solves a stack of problems concurrently.
+Both are thin shims over the ``repro.rpca`` front door (this module
+registers itself as method ``"apgm"``).
 """
 from __future__ import annotations
 
@@ -21,7 +23,9 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import rpca as _rpca
 from repro.core import runtime as rt
+from repro.core import validate
 from repro.core.ops import masked_soft_threshold, soft_threshold, svt
 
 Array = jax.Array
@@ -170,38 +174,132 @@ def _problem(m_obs: Array, warm, mask=None) -> APGMProblem:
 
 
 @partial(jax.jit, static_argnames=("cfg", "run"))
-def apgm(
+def _solve(
     m_obs: Array,
-    cfg: APGMConfig = APGMConfig(),
+    cfg: APGMConfig,
     *,
-    run: rt.RunConfig | None = None,
+    run: rt.RunConfig,
     warm: tuple[Array, Array] | None = None,
     mask: Array | None = None,
 ) -> ConvexResult:
-    """Solve one problem.  ``run=None`` is the paper-faithful fixed scan.
-    ``mask`` (0/1 Omega) solves the robust matrix completion variant."""
     solver = make_solver(cfg)
     problem = _problem(m_obs, warm, mask)
-    carry, stats = rt.run(solver, problem, cfg.iters, run or rt.FIXED)
+    carry, stats = rt.run(solver, problem, cfg.iters, run)
     l, s = solver.finalize(problem, carry)
     return ConvexResult(l=l, s=s, stats=stats)
 
 
 @partial(jax.jit, static_argnames=("cfg", "run"))
-def apgm_batch(
+def _solve_batch(
     m_batch: Array,  # (B, m, n)
-    cfg: APGMConfig = APGMConfig(),
+    cfg: APGMConfig,
     *,
-    run: rt.RunConfig | None = None,
+    run: rt.RunConfig,
     warm: tuple[Array, Array] | None = None,  # (B, m, n) each
     mask: Array | None = None,  # (B, m, n) per-problem masks
 ) -> ConvexResult:
-    """Solve a stack of problems concurrently (per-problem early exit)."""
     problems = jax.vmap(
         _problem,
         in_axes=(0, None if warm is None else 0, None if mask is None else 0),
     )(m_batch, warm, mask)
     (l, s), _, stats = rt.solve_batch(
-        make_solver(cfg), problems, cfg.iters, run or rt.FIXED
+        make_solver(cfg), problems, cfg.iters, run
     )
     return ConvexResult(l=l, s=s, stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# Registry adapter + legacy shims (repro.rpca front door)
+# ---------------------------------------------------------------------------
+def _registry_make(spec, cfg, run_cfg):
+    cfg = cfg if cfg is not None else APGMConfig()
+    _rpca.require_cfg_type("apgm", cfg, APGMConfig)
+    if spec.warm is not None:
+        # Eager: a wrong-shaped warm (L, S) used to fail deep inside rt.run.
+        validate.check_warm_lowrank_sparse(spec.warm, jnp.shape(spec.m_obs))
+    fn = _solve_batch if spec.batched else _solve
+    res = fn(spec.m_obs, cfg, run=run_cfg, warm=spec.warm, mask=spec.mask)
+    return res.l, res.s, None, None, res.stats
+
+
+def convex_service_hooks(make_solver_fn, problem_cls, problem_fn,
+                         default_cfg) -> "_rpca.ServiceHooks":
+    """ServiceHooks shared by the convex (L, S) solvers (APGM, IALM).
+
+    Both carry the same slot-pytree layout: data-shaped ``m_obs``/``l``/
+    ``s`` planes plus an always-present mask plane (all-ones for maskless
+    submissions -- numerically the unmasked path), and warm starts are
+    ``(L, S)`` iterates padded along columns for ragged widths.
+    """
+
+    def empty_problems(cfg, slots, m, n):
+        z = jnp.zeros((slots, m, n))
+        return problem_cls(m_obs=z, l_init=z, s_init=z,
+                           mask=jnp.ones((slots, m, n)))
+
+    def make_problem(m_obs, cfg, key, warm, mask):
+        del key  # convex solvers have no random init
+        return problem_fn(m_obs, warm,
+                          mask if mask is not None else jnp.ones_like(m_obs))
+
+    def warm_layout(cfg, m, n_req):
+        return (
+            ("L", (m, n_req), "(m, n)", 1),
+            ("S", (m, n_req), "(m, n)", 1),
+        )
+
+    return _rpca.ServiceHooks(
+        make_solver=make_solver_fn,
+        empty_problems=empty_problems,
+        make_problem=make_problem,
+        unpack=lambda fin: (fin[0], fin[1], None, None),
+        warm_layout=warm_layout,
+        default_cfg=default_cfg,
+        cfg_type=default_cfg,  # the convex config classes are the factory
+    )
+
+
+_rpca.register_solver(
+    "apgm",
+    _rpca.SolverCaps(supports_mask=True, supports_factors=False,
+                     batchable=True, supports_service=True),
+    _registry_make,
+    service=convex_service_hooks(make_solver, APGMProblem, _problem,
+                                 APGMConfig),
+)
+
+
+def apgm(
+    m_obs: Array,
+    cfg: APGMConfig = APGMConfig(),
+    *,
+    run: rt.RunConfig | str | None = None,
+    warm: tuple[Array, Array] | None = None,
+    mask: Array | None = None,
+) -> ConvexResult:
+    """Solve one problem.  ``run=None`` is the paper-faithful fixed scan.
+    ``mask`` (0/1 Omega) solves the robust matrix completion variant.
+
+    Thin shim over ``repro.rpca.solve(..., method="apgm")`` (bit-exact).
+    """
+    res = _rpca.solve(
+        _rpca.RPCASpec(m_obs, mask=mask, warm=warm), method="apgm",
+        run=run, cfg=cfg,
+    )
+    return ConvexResult(l=res.l, s=res.s, stats=res.stats)
+
+
+def apgm_batch(
+    m_batch: Array,  # (B, m, n)
+    cfg: APGMConfig = APGMConfig(),
+    *,
+    run: rt.RunConfig | str | None = None,
+    warm: tuple[Array, Array] | None = None,  # (B, m, n) each
+    mask: Array | None = None,  # (B, m, n) per-problem masks
+) -> ConvexResult:
+    """Solve a stack of problems concurrently (per-problem early exit).
+
+    Alias for the front door's auto-detected batch route (the leading
+    problem axis selects it); kept for signature compatibility.
+    """
+    return apgm(m_batch, cfg, run=run, warm=warm, mask=mask)

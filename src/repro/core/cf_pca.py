@@ -17,8 +17,10 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import rpca as _rpca
 from repro.core import factorized as fz
 from repro.core import runtime as rt
+from repro.core import validate
 
 Array = jax.Array
 
@@ -119,6 +121,7 @@ def make_problem(
     not depend on whatever the caller stored there).
     """
     if mask is not None:
+        validate.check_mask(mask, m_obs.shape)
         m_obs = mask * m_obs
     m, n = m_obs.shape
     lam0 = (
@@ -133,17 +136,10 @@ def make_problem(
         # Validate the full factor shapes eagerly (a warm (U, V) from a
         # solve with different dimensions used to pass the rank-only check
         # and fail, or silently broadcast, inside the inner solvers).
-        u0, v0 = warm
-        if u0.shape != (m, cfg.rank):
-            raise ValueError(
-                f"warm U has shape {u0.shape}, expected (m, rank) = "
-                f"{(m, cfg.rank)}"
-            )
-        if v0.shape != (n, cfg.rank):
-            raise ValueError(
-                f"warm V has shape {v0.shape}, expected (n, rank) = "
-                f"{(n, cfg.rank)}"
-            )
+        u0, v0 = validate.check_warm_shapes(
+            warm, ("U", "V"), ((m, cfg.rank), (n, cfg.rank)),
+            ("(m, rank)", "(n, rank)"),
+        )
     if t0 is None:
         t0 = 0 if warm is None else cfg.outer_iters
     return CFProblem(
@@ -153,12 +149,118 @@ def make_problem(
 
 
 @partial(jax.jit, static_argnames=("cfg", "run"))
+def _solve(
+    m_obs: Array,
+    cfg: fz.DCFConfig,
+    key: Array,
+    *,
+    run: rt.RunConfig,
+    warm: tuple[Array, Array] | None = None,
+    mask: Array | None = None,
+) -> CFResult:
+    solver = make_solver(cfg, with_objective=run.needs_objective)
+    problem = make_problem(m_obs, cfg, key, warm, mask=mask)
+    carry, stats = rt.run(solver, problem, cfg.outer_iters, run)
+    l, s, u, v = solver.finalize(problem, carry)
+    return CFResult(l=l, s=s, u=u, v=v, stats=stats)
+
+
+@partial(jax.jit, static_argnames=("cfg", "run"))
+def _solve_batch(
+    m_batch: Array,  # (B, m, n)
+    cfg: fz.DCFConfig,
+    keys: Array,  # (B, 2) PRNG keys
+    *,
+    run: rt.RunConfig,
+    warm: tuple[Array, Array] | None = None,  # ((B,m,r), (B,n,r))
+    mask: Array | None = None,  # (B, m, n) per-problem observation masks
+) -> CFResult:
+    problems = jax.vmap(
+        lambda mo, k, w, om: make_problem(mo, cfg, k, w, mask=om),
+        in_axes=(0, 0, None if warm is None else 0,
+                 None if mask is None else 0),
+    )(m_batch, keys, warm, mask)
+    (l, s, u, v), _, stats = rt.solve_batch(
+        make_solver(cfg, with_objective=run.needs_objective),
+        problems,
+        cfg.outer_iters,
+        run,
+    )
+    return CFResult(l=l, s=s, u=u, v=v, stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# Registry adapter + legacy shims (repro.rpca front door)
+# ---------------------------------------------------------------------------
+def _default_cfg(spec) -> fz.DCFConfig:
+    rank = _rpca.require_rank("cf", spec)
+    if spec.mask is not None:
+        return fz.DCFConfig.masked(rank)
+    return fz.DCFConfig.tuned(rank)
+
+
+def _registry_make(spec, cfg, run_cfg):
+    cfg = cfg if cfg is not None else _default_cfg(spec)
+    _rpca.require_cfg_type("cf", cfg, fz.DCFConfig)
+    key = _rpca.default_key(spec)
+    fn = _solve_batch if spec.batched else _solve
+    res = fn(spec.m_obs, cfg, key, run=run_cfg, warm=spec.warm,
+             mask=spec.mask)
+    return res.l, res.s, res.u, res.v, res.stats
+
+
+def _service_empty(cfg, slots, m, n):
+    zeros = jnp.zeros
+    return CFProblem(
+        m_obs=zeros((slots, m, n)),
+        u_init=zeros((slots, m, cfg.rank)),
+        v_init=zeros((slots, n, cfg.rank)),
+        lam0=zeros((slots,)),
+        t0=zeros((slots,), jnp.int32),
+        mask=jnp.ones((slots, m, n)),
+    )
+
+
+def _service_problem(m_obs, cfg, key, warm, mask):
+    if mask is None:
+        # Maskless: calibrate lam on the unmasked fast path (plain medians,
+        # no masked sort), then attach the all-ones plane the homogeneous
+        # slot pytree needs -- numerically identical.
+        problem = make_problem(m_obs, cfg, key, warm)
+        return problem._replace(mask=jnp.ones_like(m_obs))
+    return make_problem(m_obs, cfg, key, warm, mask=mask)
+
+
+def _service_warm_layout(cfg, m, n_req):
+    return (
+        ("U", (m, cfg.rank), "(m, rank)", None),
+        ("V", (n_req, cfg.rank), "(n, rank)", 0),
+    )
+
+
+_rpca.register_solver(
+    "cf",
+    _rpca.SolverCaps(supports_mask=True, supports_factors=True,
+                     batchable=True, needs_rank=True,
+                     supports_service=True),
+    _registry_make,
+    service=_rpca.ServiceHooks(
+        make_solver=make_solver,
+        empty_problems=_service_empty,
+        make_problem=_service_problem,
+        unpack=lambda fin: fin,
+        warm_layout=_service_warm_layout,
+        cfg_type=fz.DCFConfig,
+    ),
+)
+
+
 def cf_pca(
     m_obs: Array,
     cfg: fz.DCFConfig,
     key: Array | None = None,
     *,
-    run: rt.RunConfig | None = None,
+    run: rt.RunConfig | str | None = None,
     warm: tuple[Array, Array] | None = None,
     mask: Array | None = None,
 ) -> CFResult:
@@ -166,44 +268,28 @@ def cf_pca(
 
     ``mask`` (0/1, same shape as ``m_obs``) switches every residual pass to
     observed entries only -- robust matrix completion.
+
+    Thin shim over ``repro.rpca.solve(..., method="cf")`` (bit-exact).
     """
-    if key is None:
-        key = jax.random.PRNGKey(0)
-    run_cfg = run or rt.FIXED
-    solver = make_solver(cfg, with_objective=run_cfg.needs_objective)
-    problem = make_problem(m_obs, cfg, key, warm, mask=mask)
-    carry, stats = rt.run(solver, problem, cfg.outer_iters, run_cfg)
-    l, s, u, v = solver.finalize(problem, carry)
-    return CFResult(l=l, s=s, u=u, v=v, stats=stats)
+    res = _rpca.solve(
+        _rpca.RPCASpec(m_obs, mask=mask, warm=warm, key=key), method="cf",
+        run=run, cfg=cfg,
+    )
+    return CFResult(l=res.l, s=res.s, u=res.u, v=res.v, stats=res.stats)
 
 
-@partial(jax.jit, static_argnames=("cfg", "run"))
 def cf_pca_batch(
     m_batch: Array,  # (B, m, n)
     cfg: fz.DCFConfig,
     keys: Array | None = None,  # (B, 2) PRNG keys, default fold_in(0..B)
     *,
-    run: rt.RunConfig | None = None,
+    run: rt.RunConfig | str | None = None,
     warm: tuple[Array, Array] | None = None,  # ((B,m,r), (B,n,r))
     mask: Array | None = None,  # (B, m, n) per-problem observation masks
 ) -> CFResult:
     """Solve a stack of problems concurrently; finished problems freeze.
 
-    ``mask`` carries heterogeneous per-problem observation masks (leading
-    batch axis, like ``m_batch``).
+    Alias for the front door's auto-detected batch route (the leading
+    problem axis selects it); kept for signature compatibility.
     """
-    if keys is None:
-        keys = jax.random.split(jax.random.PRNGKey(0), m_batch.shape[0])
-    run_cfg = run or rt.FIXED
-    problems = jax.vmap(
-        lambda mo, k, w, om: make_problem(mo, cfg, k, w, mask=om),
-        in_axes=(0, 0, None if warm is None else 0,
-                 None if mask is None else 0),
-    )(m_batch, keys, warm, mask)
-    (l, s, u, v), _, stats = rt.solve_batch(
-        make_solver(cfg, with_objective=run_cfg.needs_objective),
-        problems,
-        cfg.outer_iters,
-        run_cfg,
-    )
-    return CFResult(l=l, s=s, u=u, v=v, stats=stats)
+    return cf_pca(m_batch, cfg, keys, run=run, warm=warm, mask=mask)

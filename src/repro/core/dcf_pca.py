@@ -38,10 +38,12 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import rpca as _rpca
 from repro.compat import shard_map_compat
 from repro.core import factorized as fz
 from repro.core import problems as prob
 from repro.core import runtime as rt
+from repro.core import validate
 
 Array = jax.Array
 
@@ -264,10 +266,7 @@ def make_problem(
     is a (T, E) 0/1 schedule or a Bernoulli rate (see
     :func:`_resolve_participation`)."""
     if mask is not None:
-        if mask.shape != m_obs.shape:
-            raise ValueError(
-                f"mask shape {mask.shape} != data shape {m_obs.shape}"
-            )
+        validate.check_mask(mask, m_obs.shape)
         m_obs = mask * m_obs
     m, n = m_obs.shape
     # lam calibrates on the unpadded data -- padding columns are not
@@ -307,18 +306,12 @@ def make_problem(
         # solve with a different num_clients or n used to pass the old
         # rank-only check and fail (or silently broadcast) deep inside the
         # vmapped local round.
-        u0, v0 = warm
-        if u0.shape != (m, cfg.rank):
-            raise ValueError(
-                f"warm U has shape {u0.shape}, expected (m, rank) = "
-                f"{(m, cfg.rank)}"
-            )
-        if v0.shape != (num_clients, n_i, cfg.rank):
-            raise ValueError(
-                f"warm V has shape {v0.shape}, expected (E, n_i, rank) = "
-                f"{(num_clients, n_i, cfg.rank)} for num_clients="
-                f"{num_clients}, n={n}"
-            )
+        u0, v0 = validate.check_warm_shapes(
+            warm, ("U", "V"),
+            ((m, cfg.rank), (num_clients, n_i, cfg.rank)),
+            ("(m, rank)", "(E, n_i, rank)"),
+            suffixes=("", f" for num_clients={num_clients}, n={n}"),
+        )
     if t0 is None:
         t0 = 0 if warm is None else cfg.outer_iters
     return DCFProblem(
@@ -329,13 +322,140 @@ def make_problem(
 
 
 @partial(jax.jit, static_argnames=("cfg", "num_clients", "run"))
+def _solve(
+    m_obs: Array,
+    cfg: fz.DCFConfig,
+    num_clients: int,
+    key: Array,
+    *,
+    run: rt.RunConfig,
+    warm: tuple[Array, Array] | None = None,
+    mask: Array | None = None,
+    participation: Array | float | None = None,
+) -> DCFResult:
+    solver = make_solver(cfg, with_objective=run.needs_objective)
+    problem = make_problem(m_obs, cfg, num_clients, key, warm, mask=mask,
+                           participation=participation)
+    carry, stats = rt.run(solver, problem, cfg.outer_iters, run)
+    l, s, u, v = solver.finalize(problem, carry)
+    n = m_obs.shape[1]
+    if l.shape[1] != n:  # ragged: trim the zero-padded tail columns
+        l, s = l[:, :n], s[:, :n]
+    return DCFResult(l=l, s=s, u=u, v=v, stats=stats)
+
+
+@partial(jax.jit, static_argnames=("cfg", "num_clients", "run"))
+def _solve_batch(
+    m_batch: Array,  # (B, m, n)
+    cfg: fz.DCFConfig,
+    num_clients: int,
+    keys: Array,  # (B, 2) PRNG keys
+    *,
+    run: rt.RunConfig,
+    warm: tuple[Array, Array] | None = None,  # ((B,m,r), (B,E,n_i,r))
+    mask: Array | None = None,  # (B, m, n) per-problem observation masks
+    participation: Array | float | None = None,  # shared (T, E) or rate
+) -> DCFResult:
+    problems = jax.vmap(
+        lambda mo, k, w, om: make_problem(mo, cfg, num_clients, k, w,
+                                          mask=om,
+                                          participation=participation),
+        in_axes=(0, 0, None if warm is None else 0,
+                 None if mask is None else 0),
+    )(m_batch, keys, warm, mask)
+    (l, s, u, v), _, stats = rt.solve_batch(
+        make_solver(cfg, with_objective=run.needs_objective),
+        problems,
+        cfg.outer_iters,
+        run,
+    )
+    n = m_batch.shape[2]
+    if l.shape[2] != n:  # ragged: trim the zero-padded tail columns
+        l, s = l[:, :, :n], s[:, :, :n]
+    return DCFResult(l=l, s=s, u=u, v=v, stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# Registry adapters + legacy shims (repro.rpca front door)
+# ---------------------------------------------------------------------------
+def _resolve_num_clients(spec) -> int:
+    """E from the spec, or inferred from a 2-D participation schedule."""
+    if spec.num_clients is not None:
+        return spec.num_clients
+    part = spec.participation
+    if part is not None and jnp.ndim(part) == 2:
+        return jnp.shape(part)[1]
+    raise ValueError(
+        "method 'dcf' needs a client count: set RPCASpec.num_clients "
+        "(or pass a (T, E) participation schedule to infer E from)"
+    )
+
+
+def _default_cfg(spec, name: str) -> fz.DCFConfig:
+    rank = _rpca.require_rank(name, spec)
+    part = spec.participation
+    if part is not None:
+        # A scalar rate sizes the elastic preset directly; for an explicit
+        # (T, E) schedule use its mean participation when it is concrete
+        # (under tracing fall back to the preset's reference rate).
+        try:
+            rate = float(jnp.mean(jnp.asarray(part, jnp.float32)))
+        except (TypeError, jax.errors.TracerArrayConversionError):
+            rate = 0.7
+        return fz.DCFConfig.elastic(rank, participation=max(rate, 0.1))
+    if spec.mask is not None:
+        return fz.DCFConfig.masked(rank)
+    return fz.DCFConfig.tuned(rank)
+
+
+def _registry_make(spec, cfg, run_cfg):
+    cfg = cfg if cfg is not None else _default_cfg(spec, "dcf")
+    _rpca.require_cfg_type("dcf", cfg, fz.DCFConfig)
+    num_clients = _resolve_num_clients(spec)
+    key = _rpca.default_key(spec)
+    fn = _solve_batch if spec.batched else _solve
+    res = fn(spec.m_obs, cfg, num_clients, key, run=run_cfg,
+             warm=spec.warm, mask=spec.mask,
+             participation=spec.participation)
+    return res.l, res.s, res.u, res.v, res.stats
+
+
+def _registry_make_sharded(spec, cfg, run_cfg):
+    cfg = cfg if cfg is not None else _default_cfg(spec, "dcf_sharded")
+    _rpca.require_cfg_type("dcf_sharded", cfg, fz.DCFConfig)
+    res = _solve_sharded(
+        spec.m_obs, cfg, spec.mesh,
+        data_axes=spec.data_axes, model_axis=spec.model_axis,
+        key=spec.key, run=run_cfg, warm=spec.warm, mask=spec.mask,
+        participation=spec.participation,
+    )
+    return res.l, res.s, res.u, res.v, res.stats
+
+
+_rpca.register_solver(
+    "dcf",
+    _rpca.SolverCaps(supports_mask=True, supports_factors=True,
+                     supports_clients=True, supports_participation=True,
+                     batchable=True, needs_rank=True),
+    _registry_make,
+)
+
+_rpca.register_solver(
+    "dcf_sharded",
+    _rpca.SolverCaps(supports_mask=True, supports_factors=True,
+                     supports_participation=True, supports_sharding=True,
+                     batchable=False, needs_rank=True),
+    _registry_make_sharded,
+)
+
+
 def dcf_pca(
     m_obs: Array,
     cfg: fz.DCFConfig,
     num_clients: int,
     key: Array | None = None,
     *,
-    run: rt.RunConfig | None = None,
+    run: rt.RunConfig | str | None = None,
     warm: tuple[Array, Array] | None = None,
     mask: Array | None = None,
     participation: Array | float | None = None,
@@ -349,29 +469,25 @@ def dcf_pca(
     weighted by each client's true column count.  ``participation`` is a
     (T, E) 0/1 round schedule or a Bernoulli rate; dropped-out clients
     freeze their V_i and are excluded from that round's consensus.
+
+    Thin shim over ``repro.rpca.solve(..., method="dcf")`` (bit-exact).
     """
-    if key is None:
-        key = jax.random.PRNGKey(0)
-    run_cfg = run or rt.FIXED
-    solver = make_solver(cfg, with_objective=run_cfg.needs_objective)
-    problem = make_problem(m_obs, cfg, num_clients, key, warm, mask=mask,
-                           participation=participation)
-    carry, stats = rt.run(solver, problem, cfg.outer_iters, run_cfg)
-    l, s, u, v = solver.finalize(problem, carry)
-    n = m_obs.shape[1]
-    if l.shape[1] != n:  # ragged: trim the zero-padded tail columns
-        l, s = l[:, :n], s[:, :n]
-    return DCFResult(l=l, s=s, u=u, v=v, stats=stats)
+    res = _rpca.solve(
+        _rpca.RPCASpec(m_obs, mask=mask, warm=warm, key=key,
+                       num_clients=num_clients,
+                       participation=participation),
+        method="dcf", run=run, cfg=cfg,
+    )
+    return DCFResult(l=res.l, s=res.s, u=res.u, v=res.v, stats=res.stats)
 
 
-@partial(jax.jit, static_argnames=("cfg", "num_clients", "run"))
 def dcf_pca_batch(
     m_batch: Array,  # (B, m, n)
     cfg: fz.DCFConfig,
     num_clients: int,
     keys: Array | None = None,  # (B, 2) PRNG keys
     *,
-    run: rt.RunConfig | None = None,
+    run: rt.RunConfig | str | None = None,
     warm: tuple[Array, Array] | None = None,  # ((B,m,r), (B,E,n_i,r))
     mask: Array | None = None,  # (B, m, n) per-problem observation masks
     participation: Array | float | None = None,  # shared (T, E) or rate
@@ -381,33 +497,18 @@ def dcf_pca_batch(
     ``participation`` is shared across the batch when it is a (T, E)
     schedule; a scalar rate draws an independent Bernoulli schedule per
     problem (from each problem's key).
+
+    Alias for the front door's auto-detected batch route (the leading
+    problem axis selects it); kept for signature compatibility.
     """
-    if keys is None:
-        keys = jax.random.split(jax.random.PRNGKey(0), m_batch.shape[0])
-    run_cfg = run or rt.FIXED
-    problems = jax.vmap(
-        lambda mo, k, w, om: make_problem(mo, cfg, num_clients, k, w,
-                                          mask=om,
-                                          participation=participation),
-        in_axes=(0, 0, None if warm is None else 0,
-                 None if mask is None else 0),
-    )(m_batch, keys, warm, mask)
-    (l, s, u, v), _, stats = rt.solve_batch(
-        make_solver(cfg, with_objective=run_cfg.needs_objective),
-        problems,
-        cfg.outer_iters,
-        run_cfg,
-    )
-    n = m_batch.shape[2]
-    if l.shape[2] != n:  # ragged: trim the zero-padded tail columns
-        l, s = l[:, :, :n], s[:, :, :n]
-    return DCFResult(l=l, s=s, u=u, v=v, stats=stats)
+    return dcf_pca(m_batch, cfg, num_clients, keys, run=run, warm=warm,
+                   mask=mask, participation=participation)
 
 
 # ---------------------------------------------------------------------------
 # Engine 2: SPMD over a device mesh (production path)
 # ---------------------------------------------------------------------------
-def dcf_pca_sharded(
+def _solve_sharded(
     m_obs: Array,
     cfg: fz.DCFConfig,
     mesh: Mesh,
@@ -453,10 +554,7 @@ def dcf_pca_sharded(
     run_cfg = run or rt.FIXED
     track = cfg.track_objective or run_cfg.needs_objective
     if mask is not None:
-        if mask.shape != m_obs.shape:
-            raise ValueError(
-                f"mask shape {mask.shape} != data shape {m_obs.shape}"
-            )
+        validate.check_mask(mask, m_obs.shape)
         m_obs = mask * m_obs  # hidden entries must not influence the solve
     m, n = m_obs.shape
     # lam calibrates on the unpadded data (padding columns are not
@@ -500,17 +598,10 @@ def dcf_pca_sharded(
     else:
         # Eager full-shape validation (see the simulated engine): the
         # sharded engine's own DCFResult layout is ((m, r), (n, r)).
-        u0, v_warm = warm
-        if u0.shape != (m, cfg.rank):
-            raise ValueError(
-                f"warm U has shape {u0.shape}, expected (m, rank) = "
-                f"{(m, cfg.rank)}"
-            )
-        if v_warm.shape != (n, cfg.rank):
-            raise ValueError(
-                f"warm V has shape {v_warm.shape}, expected (n, rank) = "
-                f"{(n, cfg.rank)}"
-            )
+        u0, v_warm = validate.check_warm_shapes(
+            warm, ("U", "V"), ((m, cfg.rank), (n, cfg.rank)),
+            ("(m, rank)", "(n, rank)"),
+        )
         if ragged:  # pad V's row tail like M's column tail
             v_warm = jnp.pad(v_warm, ((0, n_pad - n), (0, 0)))
         t0 = cfg.outer_iters  # resume, don't restart, the schedules
@@ -654,3 +745,31 @@ def dcf_pca_sharded(
     if ragged:  # trim the zero-padded tail columns / V rows
         l, s, v = l[:, :n], s[:, :n], v[:n]
     return DCFResult(l=l, s=s, u=u, v=v, stats=stats)
+
+
+def dcf_pca_sharded(
+    m_obs: Array,
+    cfg: fz.DCFConfig,
+    mesh: Mesh,
+    *,
+    data_axes: tuple[str, ...] = ("data",),
+    model_axis: str | None = None,
+    key: Array | None = None,
+    run: rt.RunConfig | str | None = None,
+    warm: tuple[Array, Array] | None = None,
+    mask: Array | None = None,
+    participation: Array | float | None = None,
+) -> DCFResult:
+    """SPMD DCF-PCA over ``mesh`` (see :func:`_solve_sharded` for the
+    sharding layout and elastic-topology semantics).
+
+    Thin shim over ``repro.rpca.solve(..., method="dcf_sharded")``
+    (bit-exact).
+    """
+    res = _rpca.solve(
+        _rpca.RPCASpec(m_obs, mask=mask, warm=warm, key=key, mesh=mesh,
+                       data_axes=data_axes, model_axis=model_axis,
+                       participation=participation),
+        method="dcf_sharded", run=run, cfg=cfg,
+    )
+    return DCFResult(l=res.l, s=res.s, u=res.u, v=res.v, stats=res.stats)

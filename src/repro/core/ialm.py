@@ -21,8 +21,10 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import rpca as _rpca
 from repro.core import runtime as rt
-from repro.core.apgm import ConvexResult
+from repro.core import validate
+from repro.core.apgm import ConvexResult, convex_service_hooks
 from repro.core.ops import masked_soft_threshold, soft_threshold, svt
 
 Array = jax.Array
@@ -137,38 +139,95 @@ def _problem(m_obs: Array, warm, mask=None) -> IALMProblem:
 
 
 @partial(jax.jit, static_argnames=("cfg", "run"))
-def ialm(
+def _solve(
     m_obs: Array,
-    cfg: IALMConfig = IALMConfig(),
+    cfg: IALMConfig,
     *,
-    run: rt.RunConfig | None = None,
+    run: rt.RunConfig,
     warm: tuple[Array, Array] | None = None,
     mask: Array | None = None,
 ) -> ConvexResult:
-    """Solve one problem.  ``run=None`` is the paper-faithful fixed scan.
-    ``mask`` (0/1 Omega) solves the robust matrix completion variant."""
     solver = make_solver(cfg)
     problem = _problem(m_obs, warm, mask)
-    carry, stats = rt.run(solver, problem, cfg.iters, run or rt.FIXED)
+    carry, stats = rt.run(solver, problem, cfg.iters, run)
     l, s = solver.finalize(problem, carry)
     return ConvexResult(l=l, s=s, stats=stats)
 
 
 @partial(jax.jit, static_argnames=("cfg", "run"))
-def ialm_batch(
+def _solve_batch(
     m_batch: Array,  # (B, m, n)
-    cfg: IALMConfig = IALMConfig(),
+    cfg: IALMConfig,
     *,
-    run: rt.RunConfig | None = None,
+    run: rt.RunConfig,
     warm: tuple[Array, Array] | None = None,
     mask: Array | None = None,  # (B, m, n) per-problem masks
 ) -> ConvexResult:
-    """Solve a stack of problems concurrently (per-problem early exit)."""
     problems = jax.vmap(
         _problem,
         in_axes=(0, None if warm is None else 0, None if mask is None else 0),
     )(m_batch, warm, mask)
     (l, s), _, stats = rt.solve_batch(
-        make_solver(cfg), problems, cfg.iters, run or rt.FIXED
+        make_solver(cfg), problems, cfg.iters, run
     )
     return ConvexResult(l=l, s=s, stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# Registry adapter + legacy shims (repro.rpca front door)
+# ---------------------------------------------------------------------------
+def _registry_make(spec, cfg, run_cfg):
+    cfg = cfg if cfg is not None else IALMConfig()
+    _rpca.require_cfg_type("ialm", cfg, IALMConfig)
+    if spec.warm is not None:
+        # Eager: a wrong-shaped warm (L, S) used to fail deep inside rt.run.
+        validate.check_warm_lowrank_sparse(spec.warm, jnp.shape(spec.m_obs))
+    fn = _solve_batch if spec.batched else _solve
+    res = fn(spec.m_obs, cfg, run=run_cfg, warm=spec.warm, mask=spec.mask)
+    return res.l, res.s, None, None, res.stats
+
+
+_rpca.register_solver(
+    "ialm",
+    _rpca.SolverCaps(supports_mask=True, supports_factors=False,
+                     batchable=True, supports_service=True),
+    _registry_make,
+    service=convex_service_hooks(make_solver, IALMProblem, _problem,
+                                 IALMConfig),
+)
+
+
+def ialm(
+    m_obs: Array,
+    cfg: IALMConfig = IALMConfig(),
+    *,
+    run: rt.RunConfig | str | None = None,
+    warm: tuple[Array, Array] | None = None,
+    mask: Array | None = None,
+) -> ConvexResult:
+    """Solve one problem.  ``run=None`` is the paper-faithful fixed scan.
+    ``mask`` (0/1 Omega) solves the robust matrix completion variant.
+
+    Thin shim over ``repro.rpca.solve(..., method="ialm")`` (bit-exact).
+    """
+    res = _rpca.solve(
+        _rpca.RPCASpec(m_obs, mask=mask, warm=warm), method="ialm",
+        run=run, cfg=cfg,
+    )
+    return ConvexResult(l=res.l, s=res.s, stats=res.stats)
+
+
+def ialm_batch(
+    m_batch: Array,  # (B, m, n)
+    cfg: IALMConfig = IALMConfig(),
+    *,
+    run: rt.RunConfig | str | None = None,
+    warm: tuple[Array, Array] | None = None,
+    mask: Array | None = None,  # (B, m, n) per-problem masks
+) -> ConvexResult:
+    """Solve a stack of problems concurrently (per-problem early exit).
+
+    Alias for the front door's auto-detected batch route (the leading
+    problem axis selects it); kept for signature compatibility.
+    """
+    return ialm(m_batch, cfg, run=run, warm=warm, mask=mask)

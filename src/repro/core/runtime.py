@@ -142,6 +142,43 @@ class RunConfig:
 #: Paper-faithful default: fixed-length scan, no early exit.
 FIXED = RunConfig(mode="scan")
 
+#: Convergence-controlled early exit (interactive / latency-sensitive
+#: solves): stop as soon as the relative residual settles.
+EARLY = RunConfig(mode="while")
+
+#: Jit-friendly serving mode: static-shape chunked loop body re-entered a
+#: dynamic number of times, convergence checked once per chunk.
+CHUNKED = RunConfig(mode="chunk")
+
+#: Named presets accepted anywhere a ``run=`` argument takes a string.
+RUN_PRESETS: dict[str, RunConfig] = {
+    "fixed": FIXED,
+    "early": EARLY,
+    "chunk": CHUNKED,
+}
+
+
+def resolve_run(run: "RunConfig | str | None") -> RunConfig:
+    """Normalize a ``run=`` argument: ``None`` -> :data:`FIXED`, a string
+    names a preset in :data:`RUN_PRESETS`, a :class:`RunConfig` passes
+    through."""
+    if run is None:
+        return FIXED
+    if isinstance(run, str):
+        try:
+            return RUN_PRESETS[run]
+        except KeyError:
+            raise ValueError(
+                f"unknown run preset {run!r}; expected one of "
+                f"{sorted(RUN_PRESETS)} or a RunConfig"
+            ) from None
+    if isinstance(run, RunConfig):
+        return run
+    raise ValueError(
+        f"run must be a RunConfig, a preset name, or None; got "
+        f"{type(run).__name__}"
+    )
+
 
 def _bcast(pred: Array, leaf: Array) -> Array:
     """Broadcast a ()- or (B,)-shaped predicate against a carry leaf."""

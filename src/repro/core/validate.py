@@ -1,0 +1,95 @@
+"""Eager shape validation shared by every solver entrypoint (ISSUE 4).
+
+One vocabulary of ``ValueError`` messages for the whole stack: the
+``repro.rpca`` front door, the four legacy solver wrappers, the
+``make_problem`` constructors, and ``RPCAService.submit`` all raise
+through these helpers, so a wrong-shaped ``warm=`` or ``mask=`` fails at
+the API boundary with the same words everywhere -- instead of deep inside
+``rt.run`` with a broadcast error (the pre-PR-4 behavior of the convex
+solvers).
+
+All checks are static-shape only (safe under jit tracing: ``.shape`` is
+concrete on tracers).
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+
+def check_mask(mask: Any, data_shape: tuple[int, ...]) -> None:
+    """Observation mask must match the data shape exactly."""
+    if mask is not None and tuple(mask.shape) != tuple(data_shape):
+        raise ValueError(
+            f"mask shape {tuple(mask.shape)} != data shape "
+            f"{tuple(data_shape)}"
+        )
+
+
+def check_warm_pair(warm: Any) -> tuple[Any, Any]:
+    """``warm=`` must be a pair of arrays; returns it unpacked."""
+    try:
+        a, b = warm
+    except (TypeError, ValueError):
+        raise ValueError(
+            "warm must be a pair of arrays (L, S) for the convex solvers "
+            "or (U, V) for the factorized ones"
+        ) from None
+    return a, b
+
+
+def check_factor(
+    arr: Any, expected: tuple[int, ...], name: str, desc: str,
+    suffix: str = "",
+) -> None:
+    """One warm factor: ``warm {name} has shape ..., expected {desc} = ...``.
+
+    ``desc`` names the symbolic shape (e.g. ``"(m, rank)"``), ``suffix``
+    appends topology context (e.g. ``" for num_clients=4, n=150"``).
+    """
+    if tuple(arr.shape) != tuple(expected):
+        raise ValueError(
+            f"warm {name} has shape {tuple(arr.shape)}, expected {desc} = "
+            f"{tuple(expected)}{suffix}"
+        )
+
+
+def check_warm_shapes(
+    warm: Any,
+    names: Sequence[str],
+    shapes: Sequence[tuple[int, ...]],
+    descs: Sequence[str],
+    suffixes: Sequence[str] | None = None,
+) -> tuple[Any, Any]:
+    """Validate a warm pair against per-factor expected shapes."""
+    a, b = check_warm_pair(warm)
+    suffixes = suffixes or ("", "")
+    check_factor(a, shapes[0], names[0], descs[0], suffixes[0])
+    check_factor(b, shapes[1], names[1], descs[1], suffixes[1])
+    return a, b
+
+
+def check_warm_lowrank_sparse(
+    warm: Any, data_shape: tuple[int, ...]
+) -> tuple[Any, Any]:
+    """Convex-solver warm start: ``(L, S)`` iterates, both data-shaped."""
+    return check_warm_shapes(
+        warm, ("L", "S"), (data_shape, data_shape), ("(m, n)", "(m, n)")
+    )
+
+
+def check_service_problem(m_obs: Any, m: int, n: int) -> int:
+    """Service admission: row count must match, width must fit a slot.
+
+    Returns the request's true column count ``n_req``.
+    """
+    if m_obs.ndim != 2 or m_obs.shape[0] != m:
+        raise ValueError(
+            f"problem shape {tuple(m_obs.shape)} incompatible with service "
+            f"rows m={m}"
+        )
+    n_req = m_obs.shape[1]
+    if n_req == 0 or n_req > n:
+        raise ValueError(
+            f"problem has {n_req} columns, service slots hold 1..{n}"
+        )
+    return n_req

@@ -1,0 +1,440 @@
+"""One front door for every RPCA solver (DESIGN.md Sec. 11).
+
+The paper positions DCF-PCA as a drop-in replacement for the SVD-based
+convex solvers (APGM / IALM); this module makes "drop-in" literal.  A
+problem is captured declaratively in an :class:`RPCASpec`, solved through
+one :func:`solve` call, and returned as one uniform :class:`RPCAResult`
+regardless of which solver ran:
+
+    from repro import rpca
+
+    res = rpca.solve(m_obs)                              # auto-select
+    res = rpca.solve(m_obs, method="dcf", rank=8, num_clients=10)
+    res = rpca.solve(rpca.RPCASpec(m_obs, mask=omega, rank=8),
+                     method="cf", run="early")
+
+Dispatch goes through the :data:`SOLVERS` registry: each solver module
+self-registers (:func:`register_solver`) with a :class:`SolverCaps`
+capability record, so feature x method combinations (mask, warm factors,
+participation schedules, meshes, batching) are validated eagerly with
+uniform ``ValueError`` messages instead of failing deep inside a traced
+loop.  ``method="auto"`` picks by capability and problem size: the convex
+SVD solvers below an SVD-cost threshold, consensus factorization above it,
+and the SPMD engine whenever the spec carries a mesh.
+
+Batched inputs (a leading problem axis, auto-detected) route through the
+same registry path -- this is the canonical batch route; the legacy
+``*_batch`` entrypoints are aliases over it.  The legacy entrypoints
+(``apgm``, ``ialm``, ``cf_pca``, ``dcf_pca``, ``dcf_pca_sharded``) remain
+as thin shims over this front door and stay bit-exact.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+if TYPE_CHECKING:  # annotations only -- see the import note below
+    from repro.core import runtime as rt
+
+# NOTE: this module must not import repro.core at module level.  The solver
+# modules under repro.core self-register here at *their* import time, so
+# repro.rpca has to finish initializing before repro.core.__init__ starts
+# pulling them in (a top-level ``from repro.core import runtime`` would
+# re-enter repro.core's package init mid-flight and the solver modules
+# would see a half-built registry module).  Runtime/validation helpers are
+# imported lazily inside the functions that need them.
+
+Array = jax.Array
+
+
+def _rt():
+    from repro.core import runtime as rt
+
+    return rt
+
+
+def _val():
+    from repro.core import validate as val
+
+    return val
+
+#: ``method="auto"`` switches from the convex SVD solvers to consensus
+#: factorization when one SVD iteration costs more than this many flops
+#: (``m * n * min(m, n)``): beyond ~400x400 square the per-iteration SVD
+#: dominates and the factorized solvers win (paper Fig. 3).
+SVD_COST_THRESHOLD = 1 << 26
+
+
+# ---------------------------------------------------------------------------
+# Problem spec and uniform result
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class RPCASpec:
+    """Declarative description of one RPCA problem (or a batch of them).
+
+    ``m_obs``          observed matrix ``(m, n)`` -- or ``(B, m, n)`` for a
+                       batch (the leading problem axis is auto-detected).
+    ``mask``           optional 0/1 observation matrix Omega, data-shaped
+                       (robust matrix completion).
+    ``rank``           target rank for the factorized solvers; ignored by
+                       the convex ones (they estimate it via SVT).
+    ``num_clients``    client count E for the simulated DCF engine.
+    ``participation``  (T, E) 0/1 round schedule or Bernoulli rate
+                       (elastic topologies; DCF engines only).
+    ``warm``           warm-start pair: ``(L, S)`` iterates for the convex
+                       solvers, ``(U, V)`` factors for the factorized ones.
+    ``key``            PRNG key for random factor inits (``(B, 2)`` keys
+                       for a batch); ``None`` = PRNGKey(0).
+    ``mesh``/``data_axes``/``model_axis``
+                       device-mesh placement for the SPMD engine; a
+                       non-None ``mesh`` makes ``method="auto"`` pick
+                       ``"dcf_sharded"``.
+    """
+
+    m_obs: Array
+    mask: Array | None = None
+    rank: int | None = None
+    num_clients: int | None = None
+    participation: Array | float | None = None
+    warm: tuple[Array, Array] | None = None
+    key: Array | None = None
+    mesh: Any | None = None
+    data_axes: tuple[str, ...] = ("data",)
+    model_axis: str | None = None
+
+    @property
+    def batched(self) -> bool:
+        """True when ``m_obs`` carries a leading problem axis."""
+        return jnp.ndim(self.m_obs) == 3
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        """The per-problem ``(m, n)`` shape (batch axis stripped)."""
+        s = jnp.shape(self.m_obs)
+        return (s[-2], s[-1])
+
+    def validate(self) -> None:
+        """Eager structural checks shared by every method."""
+        val = _val()
+        nd = jnp.ndim(self.m_obs)
+        if nd not in (2, 3):
+            raise ValueError(
+                f"m_obs must be (m, n) or (B, m, n); got ndim={nd}"
+            )
+        val.check_mask(self.mask, jnp.shape(self.m_obs))
+        if self.warm is not None:
+            val.check_warm_pair(self.warm)
+
+
+@dataclass(frozen=True)
+class RPCAResult:
+    """Uniform solve result: what every method returns from :func:`solve`.
+
+    ``l``/``s``     the recovered low-rank and sparse components, data-shaped
+                    (batched solves keep the leading problem axis).
+    ``u``/``v``     the factors for factorized methods (``None`` for the
+                    convex solvers -- see :attr:`factors`).
+    ``stats``       structured :class:`repro.core.runtime.SolveStats`.
+    ``method``      the concrete solver that ran (``"auto"`` is resolved).
+    ``spec``        echo of the (normalized) problem spec that was solved.
+
+    Subsumes the legacy ``ConvexResult`` / ``CFResult`` / ``DCFResult``
+    triple: those remain only as the return types of the legacy shims.
+    """
+
+    l: Array
+    s: Array
+    u: Array | None
+    v: Array | None
+    stats: rt.SolveStats
+    method: str
+    spec: RPCASpec = field(repr=False)
+
+    @property
+    def factors(self) -> tuple[Array, Array] | None:
+        """``(U, V)`` when the method produced factors, else ``None``.
+
+        Feed straight back as ``warm=`` for a refresh solve.
+        """
+        return None if self.u is None else (self.u, self.v)
+
+    @property
+    def history(self) -> Array:
+        """Back-compat view: the per-iteration objective trace."""
+        return self.stats.objective
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class SolverCaps:
+    """What a registered solver supports; ``solve`` validates against this.
+
+    ``supports_factors``  the method returns (U, V) factors and accepts
+                          factor-shaped warm starts (vs (L, S) iterates).
+    ``supports_clients``  the method consumes ``spec.num_clients`` (the
+                          simulated-client engine; the SPMD engine derives
+                          its client count from the mesh instead).
+    ``needs_rank``        a target rank (spec or cfg) is required.
+    ``supports_service``  the method can back an ``RPCAService`` slot lane
+                          (homogeneous batched problem pytrees).
+    """
+
+    supports_mask: bool = True
+    supports_factors: bool = False
+    supports_clients: bool = False
+    supports_participation: bool = False
+    supports_sharding: bool = False
+    batchable: bool = True
+    needs_rank: bool = False
+    supports_service: bool = False
+
+
+@dataclass(frozen=True)
+class ServiceHooks:
+    """How a solver plugs into ``serving.RPCAService``'s slot lanes.
+
+    ``make_solver``     cfg -> runtime :class:`~repro.core.runtime.Solver`.
+    ``empty_problems``  (cfg, slots, m, n) -> zeroed batched problem pytree
+                        (homogeneous across slots: always carries a mask
+                        plane; all-ones = numerically the unmasked path).
+    ``make_problem``    (m_obs, cfg, key, warm, mask) -> one problem pytree
+                        slot-compatible with ``empty_problems``.
+    ``unpack``          finalize output -> ``(l, s, u-or-None, v-or-None)``.
+    ``warm_layout``     (cfg, m, n_req) -> sequence of
+                        ``(name, expected_shape, desc, pad_axis)`` records
+                        used to validate and ragged-pad ``warm=`` factors
+                        (``pad_axis=None`` = never padded).
+    ``default_cfg``     zero-arg cfg factory for lanes created without an
+                        explicit config (``None`` = config required).
+    ``cfg_type``        expected config class; the service validates lane
+                        configs against it eagerly (``None`` = unchecked).
+    """
+
+    make_solver: Callable[[Any], rt.Solver]
+    empty_problems: Callable[[Any, int, int, int], Any]
+    make_problem: Callable[[Array, Any, Array, Any, Array | None], Any]
+    unpack: Callable[[Any], tuple]
+    warm_layout: Callable[[Any, int, int], Sequence[tuple]]
+    default_cfg: Callable[[], Any] | None = None
+    cfg_type: type | None = None
+
+
+@dataclass(frozen=True)
+class SolverEntry:
+    name: str
+    caps: SolverCaps
+    make: Callable[[RPCASpec, Any, rt.RunConfig], tuple]
+    service: ServiceHooks | None = None
+
+
+#: The solver registry: populated by the solver modules at import time.
+SOLVERS: dict[str, SolverEntry] = {}
+
+
+def register_solver(
+    name: str,
+    caps: SolverCaps,
+    make: Callable[[RPCASpec, Any, rt.RunConfig], tuple],
+    service: ServiceHooks | None = None,
+) -> None:
+    """Register (or re-register) a solver under ``name``.
+
+    ``make(spec, cfg, run_cfg)`` runs the solve and returns
+    ``(l, s, u, v, stats)`` with ``u = v = None`` for factor-free methods;
+    ``cfg`` is ``None`` when the caller did not pass one (the adapter picks
+    its default).
+    """
+    SOLVERS[name] = SolverEntry(name=name, caps=caps, make=make,
+                                service=service)
+
+
+def _ensure_registered() -> None:
+    """Import the built-in solver modules (idempotent; they self-register)."""
+    from repro.core import apgm, cf_pca, dcf_pca, ialm  # noqa: F401
+
+
+def get_solver(name: str) -> SolverEntry:
+    """Resolve a registry entry; unknown names list the known methods."""
+    _ensure_registered()
+    try:
+        return SOLVERS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown method {name!r}; registered methods: "
+            f"{', '.join(sorted(SOLVERS))}"
+        ) from None
+
+
+def methods_with(feature: str) -> list[str]:
+    """Names of registered methods whose caps have ``feature`` True."""
+    _ensure_registered()
+    return sorted(
+        n for n, e in SOLVERS.items() if getattr(e.caps, feature)
+    )
+
+
+def _unsupported(name: str, feature: str, flag: str) -> ValueError:
+    return ValueError(
+        f"method {name!r} does not support {feature}; methods with "
+        f"{feature}: {', '.join(methods_with(flag)) or '(none)'}"
+    )
+
+
+def _check_caps(entry: SolverEntry, spec: RPCASpec) -> None:
+    """Eager feature x method validation with uniform messages."""
+    caps = entry.caps
+    if spec.mask is not None and not caps.supports_mask:
+        raise _unsupported(entry.name, "observation masks", "supports_mask")
+    if spec.num_clients is not None and not caps.supports_clients:
+        raise _unsupported(
+            entry.name, "simulated client topologies (num_clients)",
+            "supports_clients",
+        )
+    if spec.participation is not None and not caps.supports_participation:
+        raise _unsupported(
+            entry.name, "participation schedules", "supports_participation"
+        )
+    if spec.mesh is not None and not caps.supports_sharding:
+        raise _unsupported(entry.name, "device meshes", "supports_sharding")
+    if spec.batched and not caps.batchable:
+        raise _unsupported(
+            entry.name, "batched problems (leading problem axis)",
+            "batchable",
+        )
+    if caps.supports_sharding and spec.mesh is None:
+        raise ValueError(
+            f"method {entry.name!r} requires a device mesh: set "
+            f"RPCASpec.mesh"
+        )
+
+
+# ---------------------------------------------------------------------------
+# method="auto"
+# ---------------------------------------------------------------------------
+def auto_method(spec: RPCASpec, cfg: Any = None) -> str:
+    """Capability + problem-size heuristic behind ``method="auto"``.
+
+    1. a mesh is present            -> ``"dcf_sharded"`` (SPMD engine);
+    2. a participation schedule or an explicit ``num_clients`` ->
+       ``"dcf"`` (simulated clients; E=1 is a valid topology);
+    3. a factorized config was passed (``cfg`` carries a ``rank``) ->
+       ``"cf"`` regardless of size (the caller pinned the solver family;
+       auto must not route their DCFConfig into a convex method);
+    4. a rank is known from the spec and one SVD would cost more than
+       :data:`SVD_COST_THRESHOLD` flops -> ``"cf"`` (factorized,
+       SVD-free);
+    5. otherwise                    -> ``"ialm"`` (exact convex baseline;
+       small problems, no rank needed).
+    """
+    if spec.mesh is not None:
+        return "dcf_sharded"
+    if spec.participation is not None or spec.num_clients is not None:
+        return "dcf"
+    if cfg is not None and getattr(cfg, "rank", None) is not None:
+        return "cf"
+    m, n = spec.shape
+    if spec.rank is not None and m * n * min(m, n) > SVD_COST_THRESHOLD:
+        return "cf"
+    return "ialm"
+
+
+# ---------------------------------------------------------------------------
+# The front door
+# ---------------------------------------------------------------------------
+def solve(
+    spec_or_matrix: RPCASpec | Array,
+    method: str = "auto",
+    *,
+    run: rt.RunConfig | str | None = None,
+    cfg: Any = None,
+    **spec_kwargs: Any,
+) -> RPCAResult:
+    """Solve an RPCA problem through the registry -- the one entrypoint.
+
+    ``spec_or_matrix``  an :class:`RPCASpec`, or a bare ``(m, n)`` /
+                        ``(B, m, n)`` array (extra keyword arguments are
+                        then forwarded to the spec: ``mask=``, ``rank=``,
+                        ``num_clients=``, ``warm=``, ...).
+    ``method``          a registered solver name or ``"auto"``
+                        (see :func:`auto_method`).
+    ``run``             execution mode: a ``RunConfig``, one of the named
+                        presets ``"fixed" | "early" | "chunk"``, or ``None``
+                        (= the paper-faithful fixed scan).
+    ``cfg``             solver config (``APGMConfig`` / ``IALMConfig`` /
+                        ``DCFConfig``); defaults are derived per method
+                        (the factorized ones need ``spec.rank`` for that).
+
+    Returns an :class:`RPCAResult` -- never a legacy result type.
+    """
+    if isinstance(spec_or_matrix, RPCASpec):
+        if spec_kwargs:
+            raise ValueError(
+                "pass spec fields either in the RPCASpec or as keywords, "
+                f"not both: {sorted(spec_kwargs)}"
+            )
+        spec = spec_or_matrix
+    else:
+        spec = RPCASpec(jnp.asarray(spec_or_matrix), **spec_kwargs)
+    spec.validate()
+    run_cfg = _rt().resolve_run(run)
+    if method == "auto":
+        method = auto_method(spec, cfg)
+    entry = get_solver(method)
+    _check_caps(entry, spec)
+    l, s, u, v, stats = entry.make(spec, cfg, run_cfg)
+    return RPCAResult(l=l, s=s, u=u, v=v, stats=stats, method=entry.name,
+                      spec=spec)
+
+
+# ---------------------------------------------------------------------------
+# Adapter helpers shared by the solver modules
+# ---------------------------------------------------------------------------
+def require_cfg_type(name: str, cfg: Any, cfg_type: type) -> None:
+    """Uniform config-type error for the registry adapters."""
+    if not isinstance(cfg, cfg_type):
+        raise ValueError(
+            f"method {name!r} takes a {cfg_type.__name__}, got "
+            f"{type(cfg).__name__}"
+        )
+
+
+def require_rank(name: str, spec: RPCASpec) -> int:
+    """Factorized methods need a rank when no cfg was passed."""
+    if spec.rank is None:
+        raise ValueError(
+            f"method {name!r} needs a target rank: set RPCASpec.rank or "
+            f"pass cfg=DCFConfig(...)"
+        )
+    return spec.rank
+
+
+def default_key(spec: RPCASpec) -> Array:
+    """The spec's PRNG key(s); PRNGKey(0) (split for a batch) if unset --
+    matching the legacy entrypoints' defaults bit-for-bit."""
+    if spec.key is not None:
+        return spec.key
+    key = jax.random.PRNGKey(0)
+    if spec.batched:
+        return jax.random.split(key, jnp.shape(spec.m_obs)[0])
+    return key
+
+
+__all__ = [
+    "RPCAResult",
+    "RPCASpec",
+    "SOLVERS",
+    "ServiceHooks",
+    "SolverCaps",
+    "SolverEntry",
+    "SVD_COST_THRESHOLD",
+    "auto_method",
+    "get_solver",
+    "methods_with",
+    "register_solver",
+    "solve",
+]

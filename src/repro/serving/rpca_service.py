@@ -1,33 +1,40 @@
-"""Slot-based batched RPCA serving endpoint (DESIGN.md Sec. 7).
+"""Slot-based batched RPCA serving endpoint (DESIGN.md Sec. 7, Sec. 11).
 
 Continuous-batching lite, mirroring ``serving/engine.py``'s design: a fixed
-batch of request *slots* advances in lock-step through one vmapped,
-jit-compiled solver program; each tick runs ``rounds_per_tick`` consensus
-rounds for every in-flight problem.  Per-slot convergence masks freeze
-finished problems (their carry stops updating) so one slow tenant never
-burns compute for the rest, and the caller refills freed slots between
-ticks -- exactly the decode-slot lifecycle of the LM engine.
+batch of request *slots* advances in lock-step through vmapped,
+jit-compiled solver programs; each tick runs ``rounds_per_tick`` rounds
+for every in-flight problem.  Per-slot convergence masks freeze finished
+problems (their carry stops updating) so one slow tenant never burns
+compute for the rest, and the caller refills freed slots between ticks --
+exactly the decode-slot lifecycle of the LM engine.
 
-Built on the unified solver runtime (``repro.core.runtime``) over the
-centralized CF-PCA solver: each slot holds one full (m, n) problem.
-Warm-starting is first-class: ``submit(m_obs, warm=(U, V))`` seeds a slot
-from a prior solution and resumes the annealing schedule, so streaming
-refresh solves (same tenant, slightly changed data) converge in a handful
-of rounds instead of the full budget.
+Built on the ``repro.rpca`` solver registry: every registered method whose
+capability record has ``supports_service`` can back a slot (today ``cf``,
+``apgm``, ``ialm``), and ``submit(m_obs, method=...)`` picks the solver
+*per request*.  Each method in use gets a *lane* -- its own homogeneous
+batched problem pytree and jitted tick program over the service's slot
+table -- because different solvers carry different state; slots remain one
+global namespace, so the ``submit / tick / poll / release`` lifecycle is
+method-oblivious.
+
+Warm-starting is first-class: ``submit(m_obs, warm=...)`` seeds a slot
+from a prior solution -- ``(U, V)`` factors for the factorized lane
+(resuming the annealing schedule), ``(L, S)`` iterates for the convex
+lanes -- so streaming refresh solves (same tenant, slightly changed data)
+converge in a handful of rounds instead of the full budget.
 
 Partial observation is per-slot: ``submit(m_obs, mask=omega)`` attaches a
-0/1 observation mask and the whole solve (contractions, objective,
-finalize) runs over observed entries only.  The mask is part of the slot's
-problem state, so a warm-started refresh may ship a *different* mask than
-the previous solve (streaming arrivals where new columns land with missing
-entries); maskless submissions get an all-ones mask, which is bit-exact
-with the unmasked solver path.
+0/1 observation mask and the whole solve runs over observed entries only.
+Maskless submissions get an all-ones mask plane (the slot pytrees must be
+homogeneous), which is bit-exact with the unmasked solver path for the
+``cf`` lane and numerically identical for the convex ones.
 
     svc = RPCAService(m, n, DCFConfig.tuned(rank=8))
-    slot = svc.submit(m_obs, mask=omega)
+    slot = svc.submit(m_obs, mask=omega)               # cf (default)
+    tiny = svc.submit(m_small, method="ialm")          # convex lane
     while svc.pending():
         svc.tick()
-    resp = svc.poll(slot)          # RPCAResponse(l, s, u, v, rounds)
+    resp = svc.poll(slot)          # RPCAResponse(l, s, u, v, rounds, ...)
     svc.release(slot)
     # streaming refresh: warm factors + the epoch's evolved mask
     slot = svc.submit(m_obs_new, warm=(resp.u, resp.v), mask=omega_new)
@@ -35,14 +42,15 @@ with the unmasked solver path.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import rpca as _rpca
 from repro.core import runtime as rt
-from repro.core.cf_pca import CFProblem, make_problem, make_solver
+from repro.core import validate
 from repro.core.factorized import DCFConfig
 
 Array = jax.Array
@@ -50,10 +58,10 @@ Array = jax.Array
 
 @dataclass(frozen=True)
 class RPCAServiceConfig:
-    """Service knobs (static: changing them recompiles the tick)."""
+    """Service knobs (static: changing them recompiles the ticks)."""
 
     slots: int = 8  # concurrent in-flight problems
-    rounds_per_tick: int = 8  # consensus rounds per jitted tick
+    rounds_per_tick: int = 8  # solver rounds per jitted tick
     max_rounds: int = 200  # per-problem round budget
     tol: float = 5e-4  # rel-residual convergence tolerance
     min_rounds: int = 2  # suppress spurious first-round exits
@@ -62,61 +70,40 @@ class RPCAServiceConfig:
 class RPCAResponse(NamedTuple):
     l: Array  # recovered low-rank matrix (m, n)
     s: Array  # recovered sparse matrix (m, n)
-    u: Array  # left factor (m, r) -- reuse as warm start
-    v: Array  # right factor (n, r)
-    rounds: int  # consensus rounds actually spent
+    u: Array | None  # left factor (m, r) -- reuse as warm start (cf lane)
+    v: Array | None  # right factor (n, r); None for the convex lanes
+    rounds: int  # solver rounds actually spent
     converged: bool  # met the tolerance (False => ran out of max_rounds)
+    method: str = "cf"  # which registered solver ran this slot
 
 
-class RPCAService:
-    """Batched multi-tenant RPCA solves over ``scfg.slots`` request slots."""
+class _Lane:
+    """One registered method's slot-table state: a homogeneous batched
+    problem pytree, its carry, and a jitted lock-step tick program."""
 
-    def __init__(
-        self,
-        m: int,
-        n: int,
-        cfg: DCFConfig,
-        scfg: RPCAServiceConfig = RPCAServiceConfig(),
-        key: Array | None = None,
-    ):
+    def __init__(self, method: str, hooks: _rpca.ServiceHooks, cfg: Any,
+                 scfg: RPCAServiceConfig, m: int, n: int):
+        self.method = method
+        self.hooks = hooks
         self.cfg = cfg
-        self.scfg = scfg
-        self.m = m
-        self.n = n
-        self._solver = make_solver(cfg)
-        self._key = key if key is not None else jax.random.PRNGKey(0)
-        self._n_submitted = 0
+        self.solver = hooks.make_solver(cfg)
+        self.problems = hooks.empty_problems(cfg, scfg.slots, m, n)
+        self.carry = jax.vmap(self.solver.init)(self.problems)
 
-        b, r = scfg.slots, cfg.rank
-        zeros = jnp.zeros
-        # The batched problem pytree must be homogeneous across slots, so
-        # the service always carries a mask plane; all-ones (the maskless
-        # default) is bit-exact with the unmasked solver path.
-        self._problems = CFProblem(
-            m_obs=zeros((b, m, n)),
-            u_init=zeros((b, m, r)),
-            v_init=zeros((b, n, r)),
-            lam0=zeros((b,)),
-            t0=zeros((b,), jnp.int32),
-            mask=jnp.ones((b, m, n)),
-        )
-        self._carry = jax.vmap(self._solver.init)(self._problems)
-        self._t = zeros((b,), jnp.int32)  # per-slot schedule position
-        self._rounds = zeros((b,), jnp.int32)
-        self._done = zeros((b,), bool)
-        self._hit = zeros((b,), bool)  # met the tolerance (vs budget-out)
-        self._active = np.zeros((b,), bool)  # host-side slot occupancy
-        self._slot_n = np.full((b,), n, np.int64)  # true width per slot
+        step_b = jax.vmap(self.solver.step, in_axes=(0, 0, 0))
+        diag_b = jax.vmap(self.solver.diagnostics)
 
-        step_b = jax.vmap(self._solver.step, in_axes=(0, 0, 0))
-        diag_b = jax.vmap(self._solver.diagnostics)
+        def tick(problems, carry, t, done, rounds, hit, lane_active):
+            """rounds_per_tick lock-step rounds with per-slot freeze.
 
-        def tick(problems, carry, t, done, rounds, hit, active):
-            """rounds_per_tick lock-step rounds with per-slot freeze."""
+            ``lane_active`` masks this lane's occupied slots; slots owned
+            by other lanes (or free) never advance, so the global per-slot
+            counters can be shared across lanes.
+            """
 
             def body(st, _):
                 carry, t, done, rounds, hit = st
-                adv = active & ~done
+                adv = lane_active & ~done
                 carry = rt.tree_where(adv, step_b(problems, carry, t), carry)
                 d = diag_b(problems, carry)
                 t = t + adv.astype(jnp.int32)
@@ -140,7 +127,78 @@ class RPCAService:
                 lambda b_, x: b_.at[i].set(x), batched, single
             )
         )
-        self._finalize_one = jax.jit(self._solver.finalize)
+        self._finalize_one = jax.jit(self.solver.finalize)
+
+
+class RPCAService:
+    """Batched multi-tenant RPCA solves over ``scfg.slots`` request slots.
+
+    ``method`` is the default lane for submissions; ``cfg`` is its solver
+    config.  Other service-capable methods are available per-request via
+    ``submit(..., method=...)``; their configs come from ``cfgs`` (falling
+    back to the registry's default config for that method).
+    """
+
+    def __init__(
+        self,
+        m: int,
+        n: int,
+        cfg: DCFConfig,
+        scfg: RPCAServiceConfig = RPCAServiceConfig(),
+        key: Array | None = None,
+        method: str = "cf",
+        cfgs: dict[str, Any] | None = None,
+    ):
+        self.cfg = cfg
+        self.scfg = scfg
+        self.m = m
+        self.n = n
+        self._key = key if key is not None else jax.random.PRNGKey(0)
+        self._n_submitted = 0
+        self._default_method = method
+        self._cfgs = dict(cfgs or {})
+        self._cfgs.setdefault(method, cfg)
+
+        b = scfg.slots
+        self._t = jnp.zeros((b,), jnp.int32)  # per-slot schedule position
+        self._rounds = jnp.zeros((b,), jnp.int32)
+        self._done = jnp.zeros((b,), bool)
+        self._hit = jnp.zeros((b,), bool)  # met the tolerance (vs budget-out)
+        self._active = np.zeros((b,), bool)  # host-side slot occupancy
+        self._slot_n = np.full((b,), n, np.int64)  # true width per slot
+        self._slot_method = [method] * b  # lane owning each slot
+
+        self._lanes: dict[str, _Lane] = {}
+        self._lane(method)  # build the default lane eagerly
+
+    # -- lanes ---------------------------------------------------------------
+    def _lane(self, method: str) -> _Lane:
+        lane = self._lanes.get(method)
+        if lane is not None:
+            return lane
+        entry = _rpca.get_solver(method)
+        if entry.service is None or not entry.caps.supports_service:
+            raise ValueError(
+                f"method {method!r} does not support the slot service; "
+                f"service methods: "
+                f"{', '.join(_rpca.methods_with('supports_service'))}"
+            )
+        cfg = self._cfgs.get(method)
+        if cfg is None:
+            if entry.service.default_cfg is None:
+                raise ValueError(
+                    f"service lane {method!r} needs a config: pass "
+                    f"cfgs={{{method!r}: ...}} to RPCAService"
+                )
+            cfg = entry.service.default_cfg()
+            self._cfgs[method] = cfg
+        if entry.service.cfg_type is not None:
+            # Eager: a cfg/method mismatch otherwise dies deep inside the
+            # lane's solver construction with an AttributeError.
+            _rpca.require_cfg_type(method, cfg, entry.service.cfg_type)
+        lane = _Lane(method, entry.service, cfg, self.scfg, self.m, self.n)
+        self._lanes[method] = lane
+        return lane
 
     # -- request lifecycle --------------------------------------------------
     def submit(
@@ -148,13 +206,19 @@ class RPCAService:
         m_obs: Array,
         warm: tuple[Array, Array] | None = None,
         mask: Array | None = None,
+        method: str | None = None,
     ) -> int | None:
         """Place a problem into a free slot; returns the slot id or ``None``
         when the batch is full (caller retries after a tick + poll cycle).
         ``None`` is reserved for *capacity*: a problem that can never fit
         (wrong row count, too many columns, mis-shaped mask or warm
-        factors) raises ``ValueError`` eagerly instead, so callers can
-        tell "retry later" from "never valid".
+        factors, a method without service support) raises ``ValueError``
+        eagerly instead, so callers can tell "retry later" from "never
+        valid".
+
+        ``method`` picks the registered solver for *this* request (default:
+        the service's default lane).  ``warm`` is lane-shaped: ``(U, V)``
+        factors for ``cf``, ``(L, S)`` iterates for the convex lanes.
 
         ``mask`` is this request's observation mask (0/1, shape of
         ``m_obs``); it may differ from the mask of the warm-start's prior
@@ -166,30 +230,15 @@ class RPCAService:
         ``(m, n)`` slot pytree behind a mask-zero plane (the PR-2 Omega
         plumbing) and :meth:`poll` trims the response back to ``n_req``.
         """
-        if m_obs.ndim != 2 or m_obs.shape[0] != self.m:
-            raise ValueError(
-                f"problem shape {m_obs.shape} incompatible with service "
-                f"rows m={self.m}"
-            )
-        n_req = m_obs.shape[1]
-        if n_req == 0 or n_req > self.n:
-            raise ValueError(
-                f"problem has {n_req} columns, service slots hold 1..{self.n}"
-            )
-        if mask is not None and mask.shape != m_obs.shape:
-            raise ValueError(
-                f"mask shape {mask.shape} != problem shape {m_obs.shape}"
-            )
+        method = method or self._default_method
+        lane = self._lane(method)  # validates method before shape checks
+        n_req = validate.check_service_problem(m_obs, self.m, self.n)
+        validate.check_mask(mask, m_obs.shape)
+        layout = lane.hooks.warm_layout(lane.cfg, self.m, n_req)
         if warm is not None:
-            w_u, w_v = warm
-            if w_u.shape != (self.m, self.cfg.rank) or w_v.shape != (
-                n_req, self.cfg.rank
-            ):
-                raise ValueError(
-                    f"warm factors have shapes {w_u.shape}/{w_v.shape}, "
-                    f"expected {(self.m, self.cfg.rank)}/"
-                    f"{(n_req, self.cfg.rank)}"
-                )
+            warm = validate.check_warm_pair(warm)
+            for w, (name, shape, desc, _) in zip(warm, layout):
+                validate.check_factor(w, shape, name, desc)
         free = np.flatnonzero(~self._active)
         if free.size == 0:
             return None
@@ -206,20 +255,20 @@ class RPCAService:
             mask = jnp.pad(base, ((0, 0), (0, pad)))
             m_obs = jnp.pad(m_obs, ((0, 0), (0, pad)))
             if warm is not None:
-                warm = (warm[0], jnp.pad(warm[1], ((0, pad), (0, 0))))
-        if mask is None:
-            # Maskless: calibrate lam on the unmasked fast path (plain
-            # medians, no masked sort), then attach the all-ones plane the
-            # homogeneous slot pytree needs -- numerically identical.
-            problem = make_problem(m_obs, self.cfg, key, warm)
-            problem = problem._replace(mask=jnp.ones_like(m_obs))
-        else:
-            problem = make_problem(m_obs, self.cfg, key, warm, mask=mask)
+                warm = tuple(
+                    w if ax is None else jnp.pad(
+                        w, [(0, pad) if a == ax else (0, 0)
+                            for a in range(w.ndim)]
+                    )
+                    for w, (_, _, _, ax) in zip(warm, layout)
+                )
+        problem = lane.hooks.make_problem(m_obs, lane.cfg, key, warm, mask)
         self._slot_n[slot] = n_req
+        self._slot_method[slot] = method
         idx = jnp.asarray(slot)
-        self._problems = self._write_slot(self._problems, problem, idx)
-        self._carry = self._write_slot(
-            self._carry, self._solver.init(problem), idx
+        lane.problems = lane._write_slot(lane.problems, problem, idx)
+        lane.carry = lane._write_slot(
+            lane.carry, lane.solver.init(problem), idx
         )
         self._t = self._t.at[slot].set(0)
         self._rounds = self._rounds.at[slot].set(0)
@@ -229,12 +278,21 @@ class RPCAService:
         return slot
 
     def tick(self) -> None:
-        """Advance every in-flight problem by ``rounds_per_tick`` rounds."""
-        (self._carry, self._t, self._done, self._rounds,
-         self._hit) = self._tick(
-            self._problems, self._carry, self._t, self._done, self._rounds,
-            self._hit, jnp.asarray(self._active),
-        )
+        """Advance every in-flight problem by ``rounds_per_tick`` rounds.
+
+        Lanes tick sequentially; each advances only its own occupied slots
+        (disjoint sets), so the shared per-slot counters compose.
+        """
+        methods = np.asarray(self._slot_method)
+        for name, lane in self._lanes.items():
+            lane_active = self._active & (methods == name)
+            if not lane_active.any():  # host-side skip: no device sync
+                continue
+            (lane.carry, self._t, self._done, self._rounds,
+             self._hit) = lane._tick(
+                lane.problems, lane.carry, self._t, self._done,
+                self._rounds, self._hit, jnp.asarray(lane_active),
+            )
 
     def poll(self, slot: int) -> RPCAResponse | None:
         """Result for ``slot`` if it finished, else ``None``.  The slot stays
@@ -245,15 +303,20 @@ class RPCAService:
         rounds = np.asarray(self._rounds)
         if not done[slot]:
             return None
+        lane = self._lanes[self._slot_method[slot]]
         take = lambda tree: jax.tree.map(lambda a: a[slot], tree)
-        l, s, u, v = self._finalize_one(take(self._problems), take(self._carry))
+        fin = lane._finalize_one(take(lane.problems), take(lane.carry))
+        l, s, u, v = lane.hooks.unpack(fin)
         n_req = int(self._slot_n[slot])
         if n_req < self.n:  # ragged submission: trim the padded tail
-            l, s, v = l[:, :n_req], s[:, :n_req], v[:n_req]
+            l, s = l[:, :n_req], s[:, :n_req]
+            if v is not None:
+                v = v[:n_req]
         return RPCAResponse(
             l=l, s=s, u=u, v=v,
             rounds=int(rounds[slot]),
             converged=bool(np.asarray(self._hit)[slot]),
+            method=lane.method,
         )
 
     def release(self, slot: int) -> None:
@@ -269,21 +332,25 @@ class RPCAService:
         matrices: list[Array],
         warm: dict[int, tuple[Array, Array]] | None = None,
         masks: dict[int, Array] | None = None,
+        methods: dict[int, str] | None = None,
     ) -> list[RPCAResponse]:
         """Drain a queue of problems through the slots (continuous refill).
 
-        ``warm`` maps queue indices to prior factors, ``masks`` maps queue
-        indices to observation masks.  Returns responses in queue order.
+        ``warm`` maps queue indices to prior factors, ``masks`` to
+        observation masks, ``methods`` to per-request solver names.
+        Returns responses in queue order.
         """
         warm = warm or {}
         masks = masks or {}
+        methods = methods or {}
         results: list[RPCAResponse | None] = [None] * len(matrices)
         queue = list(enumerate(matrices))
         in_flight: dict[int, int] = {}  # slot -> queue index
         while queue or in_flight:
             while queue:
                 qi, mat = queue[0]
-                slot = self.submit(mat, warm.get(qi), mask=masks.get(qi))
+                slot = self.submit(mat, warm.get(qi), mask=masks.get(qi),
+                                   method=methods.get(qi))
                 if slot is None:
                     break
                 queue.pop(0)

@@ -1,0 +1,353 @@
+"""Facade parity + registry semantics for the ``repro.rpca`` front door.
+
+The contract (ISSUE 4): ``rpca.solve(..., method=X)`` is *bit-exact* with
+the legacy entrypoint it subsumes, for every method and every feature
+combination the method supports; feature x method mismatches raise uniform
+``ValueError``s eagerly; ``method="auto"`` picks by capability and problem
+size; and no legacy result type ever escapes ``rpca.solve``.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro import rpca
+from repro.core import (
+    APGMConfig,
+    CHUNKED,
+    ConvexResult,
+    DCFConfig,
+    EARLY,
+    FIXED,
+    IALMConfig,
+    RunConfig,
+    apgm,
+    apgm_batch,
+    cf_pca,
+    cf_pca_batch,
+    dcf_pca,
+    dcf_pca_batch,
+    generate_problem,
+)
+
+N = int(os.environ.get("RPCA_TEST_N", "64"))
+M = 48
+RANK = 3
+CLIENTS = 4
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return generate_problem(jax.random.PRNGKey(0), M, N, RANK, 0.05)
+
+
+@pytest.fixture(scope="module")
+def masked_problem():
+    return generate_problem(jax.random.PRNGKey(1), M, N, RANK, 0.05,
+                            observed_frac=0.8)
+
+
+@pytest.fixture(scope="module")
+def batch(problem):
+    return jnp.stack([problem.m_obs,
+                      problem.m_obs + 0.01,
+                      2.0 * problem.m_obs])
+
+
+def tree_bitexact(a, b) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        bool(jnp.all(x == y)) for x, y in zip(la, lb)
+    )
+
+
+def _cfg(method):
+    return {
+        "apgm": APGMConfig(iters=30),
+        "ialm": IALMConfig(iters=30),
+        "cf": DCFConfig.tuned(RANK, outer_iters=30),
+        "dcf": DCFConfig.tuned(RANK, outer_iters=30),
+    }[method]
+
+
+def _legacy(method, m_obs, cfg, **kw):
+    if method == "apgm":
+        return apgm(m_obs, cfg, **kw)
+    if method == "ialm":
+        from repro.core import ialm as ialm_fn
+        return ialm_fn(m_obs, cfg, **kw)
+    if method == "cf":
+        return cf_pca(m_obs, cfg, **kw)
+    return dcf_pca(m_obs, cfg, CLIENTS, **kw)
+
+
+def _spec_kw(method, **kw):
+    if method == "dcf":
+        kw["num_clients"] = CLIENTS
+    return kw
+
+
+# ---------------------------------------------------------------------------
+# Bit-exact parity with the legacy entrypoints
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("method", ["apgm", "ialm", "cf", "dcf"])
+def test_parity_plain(problem, method):
+    cfg = _cfg(method)
+    legacy = _legacy(method, problem.m_obs, cfg)
+    res = rpca.solve(problem.m_obs, method=method, cfg=cfg,
+                     **_spec_kw(method))
+    assert res.method == method
+    assert tree_bitexact((legacy.l, legacy.s, legacy.stats),
+                         (res.l, res.s, res.stats))
+
+
+@pytest.mark.parametrize("method", ["apgm", "ialm", "cf", "dcf"])
+def test_parity_mask(masked_problem, method):
+    cfg = _cfg(method)
+    legacy = _legacy(method, masked_problem.m_obs, cfg,
+                     mask=masked_problem.mask)
+    res = rpca.solve(masked_problem.m_obs, method=method, cfg=cfg,
+                     mask=masked_problem.mask, **_spec_kw(method))
+    assert tree_bitexact((legacy.l, legacy.s), (res.l, res.s))
+
+
+@pytest.mark.parametrize("method", ["apgm", "ialm", "cf", "dcf"])
+def test_parity_warm(problem, method):
+    cfg = _cfg(method)
+    first = rpca.solve(problem.m_obs, method=method, cfg=cfg,
+                       **_spec_kw(method))
+    warm = first.factors if first.factors is not None else (first.l, first.s)
+    legacy = _legacy(method, problem.m_obs, cfg, warm=warm)
+    res = rpca.solve(problem.m_obs, method=method, cfg=cfg, warm=warm,
+                     **_spec_kw(method))
+    assert tree_bitexact((legacy.l, legacy.s), (res.l, res.s))
+    if first.factors is not None:
+        assert tree_bitexact((legacy.u, legacy.v), (res.u, res.v))
+
+
+@pytest.mark.parametrize("method", ["apgm", "ialm", "cf", "dcf"])
+def test_parity_batch(batch, method):
+    cfg = _cfg(method)
+    if method == "apgm":
+        legacy = apgm_batch(batch, cfg)
+    elif method == "ialm":
+        from repro.core import ialm_batch
+        legacy = ialm_batch(batch, cfg)
+    elif method == "cf":
+        legacy = cf_pca_batch(batch, cfg)
+    else:
+        legacy = dcf_pca_batch(batch, cfg, CLIENTS)
+    res = rpca.solve(batch, method=method, cfg=cfg, **_spec_kw(method))
+    assert res.l.shape == batch.shape
+    assert tree_bitexact((legacy.l, legacy.s, legacy.stats),
+                         (res.l, res.s, res.stats))
+
+
+def test_parity_participation(problem):
+    cfg = _cfg("dcf")
+    sched = jnp.ones((30, CLIENTS)).at[::3, 1].set(0.0)
+    legacy = dcf_pca(problem.m_obs, cfg, CLIENTS, participation=sched)
+    res = rpca.solve(problem.m_obs, method="dcf", cfg=cfg,
+                     num_clients=CLIENTS, participation=sched)
+    assert tree_bitexact((legacy.l, legacy.s, legacy.u, legacy.v),
+                         (res.l, res.s, res.u, res.v))
+
+
+def test_parity_run_modes(problem):
+    """String presets resolve to the named RunConfigs through the shims."""
+    cfg = _cfg("cf")
+    assert FIXED == RunConfig(mode="scan")
+    assert EARLY.mode == "while" and CHUNKED.mode == "chunk"
+    for run_str, run_cfg in [("early", EARLY), ("chunk", CHUNKED)]:
+        via_str = rpca.solve(problem.m_obs, method="cf", cfg=cfg,
+                             run=run_str)
+        via_cfg = cf_pca(problem.m_obs, cfg, run=run_cfg)
+        assert tree_bitexact((via_cfg.l, via_cfg.stats),
+                             (via_str.l, via_str.stats))
+    with pytest.raises(ValueError, match="run preset"):
+        rpca.solve(problem.m_obs, run="turbo")
+
+
+# ---------------------------------------------------------------------------
+# Uniform result type: no legacy type escapes the front door
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("method", ["apgm", "ialm", "cf", "dcf"])
+def test_uniform_result_type(problem, method):
+    res = rpca.solve(problem.m_obs, method=method, cfg=_cfg(method),
+                     **_spec_kw(method))
+    assert type(res) is rpca.RPCAResult
+    assert not isinstance(res, ConvexResult)
+    assert res.spec.m_obs is not None and res.method == method
+    if method in ("cf", "dcf"):
+        assert res.factors == (res.u, res.v)
+    else:
+        assert res.factors is None and res.u is None and res.v is None
+    # the objective trace rides along uniformly
+    assert res.history.shape == res.stats.objective.shape
+
+
+# ---------------------------------------------------------------------------
+# Eager capability / shape validation
+# ---------------------------------------------------------------------------
+def test_capability_mismatch_errors(problem, batch):
+    with pytest.raises(ValueError, match="does not support participation"):
+        rpca.solve(problem.m_obs, method="apgm", participation=0.5)
+    with pytest.raises(ValueError, match="does not support simulated client"):
+        rpca.solve(problem.m_obs, method="ialm", num_clients=8)
+    # the missing-rank error names the method that was actually requested
+    mesh1 = jax.sharding.Mesh(np.array(jax.devices()), ("data",))
+    with pytest.raises(ValueError,
+                       match="'dcf_sharded' needs a target rank"):
+        rpca.solve(problem.m_obs, method="dcf_sharded", mesh=mesh1)
+    with pytest.raises(ValueError, match="does not support device meshes"):
+        rpca.solve(problem.m_obs, method="ialm",
+                   mesh=jax.sharding.Mesh(np.array(jax.devices()), ("data",)))
+    with pytest.raises(ValueError, match="does not support batched"):
+        rpca.solve(batch, method="dcf_sharded", rank=RANK)
+    with pytest.raises(ValueError, match="requires a device mesh"):
+        rpca.solve(problem.m_obs, method="dcf_sharded", rank=RANK)
+    with pytest.raises(ValueError, match="unknown method"):
+        rpca.solve(problem.m_obs, method="svd3000")
+    with pytest.raises(ValueError, match="needs a client count"):
+        rpca.solve(problem.m_obs, method="dcf", rank=RANK)
+    with pytest.raises(ValueError, match="needs a target rank"):
+        rpca.solve(problem.m_obs, method="cf")
+    with pytest.raises(ValueError, match="takes a DCFConfig"):
+        rpca.solve(problem.m_obs, method="cf", cfg=APGMConfig())
+    with pytest.raises(ValueError, match="takes a APGMConfig"):
+        rpca.solve(problem.m_obs, method="apgm", cfg=IALMConfig())
+
+
+def test_eager_shape_validation(problem):
+    # mask shape: uniform message at the front door for every method
+    for method in ("apgm", "ialm", "cf", "dcf"):
+        with pytest.raises(ValueError, match="mask shape"):
+            rpca.solve(problem.m_obs, method=method, cfg=_cfg(method),
+                       mask=jnp.ones((M, N - 1)), **_spec_kw(method))
+    # convex solvers now reject wrong-shaped warm iterates eagerly
+    # (pre-PR-4 this failed deep inside rt.run)
+    bad = jnp.zeros((M, N - 1))
+    for method in ("apgm", "ialm"):
+        with pytest.raises(ValueError, match="warm L has shape"):
+            rpca.solve(problem.m_obs, method=method, cfg=_cfg(method),
+                       warm=(bad, bad))
+    with pytest.raises(ValueError, match="warm V has shape"):
+        rpca.solve(problem.m_obs, method="cf", cfg=_cfg("cf"),
+                   warm=(jnp.zeros((M, RANK)), jnp.zeros((N - 1, RANK))))
+    with pytest.raises(ValueError, match="warm must be a pair"):
+        rpca.solve(problem.m_obs, method="apgm", warm=jnp.zeros((M, N)))
+    with pytest.raises(ValueError, match="m_obs must be"):
+        rpca.solve(jnp.zeros((N,)))
+
+
+# ---------------------------------------------------------------------------
+# method="auto"
+# ---------------------------------------------------------------------------
+def test_auto_small_problem_is_convex(problem):
+    assert rpca.auto_method(rpca.RPCASpec(problem.m_obs)) == "ialm"
+    res = rpca.solve(problem.m_obs)  # end to end
+    assert res.method == "ialm"
+
+
+def test_auto_large_problem_is_factorized():
+    big = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    spec = rpca.RPCASpec(big, rank=RANK)
+    assert rpca.auto_method(spec) == "cf"
+    # without a known rank the factorized family is unavailable
+    assert rpca.auto_method(rpca.RPCASpec(big)) == "ialm"
+    # a DCFConfig also carries the rank
+    assert rpca.auto_method(rpca.RPCASpec(big),
+                            DCFConfig.tuned(RANK)) == "cf"
+
+
+def test_auto_respects_factorized_cfg(problem):
+    """auto + DCFConfig must stay factorized even below the SVD
+    threshold -- routing the caller's cfg into ialm would reject it."""
+    cfg = DCFConfig.tuned(RANK, outer_iters=20)
+    res = rpca.solve(problem.m_obs, cfg=cfg)
+    assert res.method == "cf"
+    legacy = cf_pca(problem.m_obs, cfg)
+    assert tree_bitexact((legacy.l, legacy.s), (res.l, res.s))
+
+
+def test_auto_clients_and_mesh(problem):
+    spec = rpca.RPCASpec(problem.m_obs, rank=RANK, num_clients=CLIENTS)
+    assert rpca.auto_method(spec) == "dcf"
+    sched = jnp.ones((10, CLIENTS))
+    assert rpca.auto_method(
+        rpca.RPCASpec(problem.m_obs, rank=RANK, participation=sched)
+    ) == "dcf"
+    mesh = jax.sharding.Mesh(np.array(jax.devices()), ("data",))
+    assert rpca.auto_method(
+        rpca.RPCASpec(problem.m_obs, rank=RANK, mesh=mesh)
+    ) == "dcf_sharded"
+
+
+def test_auto_meshed_end_to_end(problem):
+    """A 1-device mesh drives the SPMD engine through the front door."""
+    mesh = jax.sharding.Mesh(np.array(jax.devices()), ("data",))
+    cfg = DCFConfig.tuned(RANK, outer_iters=30)
+    res = rpca.solve(rpca.RPCASpec(problem.m_obs, mesh=mesh), cfg=cfg)
+    assert res.method == "dcf_sharded"
+    from repro.core import dcf_pca_sharded
+    legacy = dcf_pca_sharded(problem.m_obs, cfg, mesh)
+    assert tree_bitexact((legacy.l, legacy.s, legacy.u, legacy.v),
+                         (res.l, res.s, res.u, res.v))
+
+
+# ---------------------------------------------------------------------------
+# Public surface
+# ---------------------------------------------------------------------------
+def test_public_surface_resolves():
+    for name in repro.__all__:
+        assert getattr(repro, name) is not None, name
+    for name in rpca.__all__:
+        assert getattr(rpca, name) is not None, name
+    # the registry is populated with the built-in methods
+    assert set(rpca.SOLVERS) >= {"apgm", "ialm", "cf", "dcf", "dcf_sharded"}
+    for entry in rpca.SOLVERS.values():
+        assert isinstance(entry.caps, rpca.SolverCaps)
+
+
+def test_spec_kwarg_exclusivity(problem):
+    spec = rpca.RPCASpec(problem.m_obs)
+    with pytest.raises(ValueError, match="not both"):
+        rpca.solve(spec, rank=RANK)
+
+
+# ---------------------------------------------------------------------------
+# Per-slot method= in the service rides the same registry
+# ---------------------------------------------------------------------------
+def test_service_per_slot_method(problem):
+    from repro.serving.rpca_service import RPCAService, RPCAServiceConfig
+
+    svc = RPCAService(M, N, DCFConfig.tuned(RANK, outer_iters=150),
+                      RPCAServiceConfig(slots=3, max_rounds=200))
+    s_cf = svc.submit(problem.m_obs)
+    s_ia = svc.submit(problem.m_obs, method="ialm")
+    while svc.pending():
+        svc.tick()
+    r_cf, r_ia = svc.poll(s_cf), svc.poll(s_ia)
+    assert r_cf.method == "cf" and r_cf.u is not None
+    assert r_ia.method == "ialm" and r_ia.u is None and r_ia.v is None
+    # both lanes recover the planted low-rank component
+    from repro.core import low_rank_relative_error
+    assert float(low_rank_relative_error(r_cf.l, problem.l0)) < 5e-2
+    assert float(low_rank_relative_error(r_ia.l, problem.l0)) < 5e-2
+    # a non-service method is rejected with the uniform message
+    with pytest.raises(ValueError, match="does not support the slot"):
+        svc.submit(problem.m_obs, method="dcf_sharded")
+    # lane configs are type-checked eagerly (ctor and per-request lanes)
+    with pytest.raises(ValueError, match="takes a IALMConfig"):
+        RPCAService(M, N, DCFConfig.tuned(RANK), method="ialm")
+    with pytest.raises(ValueError, match="takes a APGMConfig"):
+        svc2 = RPCAService(M, N, DCFConfig.tuned(RANK),
+                           cfgs={"apgm": DCFConfig.tuned(RANK)})
+        svc2.submit(problem.m_obs, method="apgm")
+    # convex lanes validate their (L, S) warm layout eagerly
+    with pytest.raises(ValueError, match="warm L has shape"):
+        svc.submit(problem.m_obs, method="ialm",
+                   warm=(jnp.zeros((M, RANK)), jnp.zeros((N, RANK))))
