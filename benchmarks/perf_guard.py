@@ -1,0 +1,128 @@
+"""CI perf guard: fail when a tracked bench row regresses vs the committed
+baseline (``BENCH_baseline.json`` at the repo root).
+
+    python -m benchmarks.perf_guard [--baseline BENCH_baseline.json]
+                                    [--results benchmarks/bench_results.json]
+                                    [--tolerance 0.15]
+
+The baseline maps dotted row paths (``<bench>/<row-name>/<field>``) to
+``{"value": <float>, "direction": "min" | "max"}`` records:
+
+* ``direction="min"``  the metric must stay *at least* ``value * (1-tol)``
+  (speedups, traffic ratios -- bigger is better);
+* ``direction="max"``  the metric must stay *at most* ``value * (1+tol)``
+  (recovery errors, modelled bytes -- smaller is better).
+
+Tracked rows are deterministic by construction (byte models, error levels,
+speedup *ratios* -- the two sides of a ratio share the same noisy box, so
+the ratio is far more stable than either absolute).  Regenerate the
+baseline after an intentional perf change with ``--write-baseline``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.dirname(HERE)
+
+#: Rows the guard tracks (path -> direction).  Keep this list in sync with
+#: the benches that emit them; missing rows fail the guard (a silently
+#: dropped bench must not read as "no regression").
+TRACKED = {
+    "fused/speedups/hbm_bytes_speedup": "min",
+    "fused/speedups/e2e20_speedup": "min",
+    "fused/speedups/round_wall_speedup": "min",
+    "fused/fused_round/hbm_bytes": "max",
+    "fused/pr4_round/hbm_bytes": "max",
+    "kernel/huber_contract_v/traffic_ratio": "min",
+    "kernel/huber_contract_v_masked/traffic_ratio": "min",
+}
+
+#: Hand-seeded bounds that ``--write-baseline`` must PRESERVE rather than
+#: overwrite with a fresh measurement.  Wall-clock ratios swing with host
+#: noise (measured 1.15x-2.04x for the fused round on the same box), so
+#: their committed baselines are deliberate conservative floors; the 15%
+#: tolerance still applies, so the *effective* gates are value*(1-tol):
+#: round_wall >= 0.85x (the fused round may not lose more than ~15% to
+#: the PR-4 path even on a noisy runner) and e2e20 >= 1.275x.  The
+#: deterministic byte/traffic models carry the tight trajectory.
+#: Snapshotting a lucky fast run here would turn the gates flaky; raising
+#: the floors is an intentional, manual edit.
+FLOOR_OVERRIDES = {
+    "fused/speedups/round_wall_speedup": 1.0,
+    "fused/speedups/e2e20_speedup": 1.5,
+}
+
+
+def _rows_by_path(results: dict) -> dict[str, float]:
+    flat: dict[str, float] = {}
+    for bench, rows in results.items():
+        if isinstance(rows, dict):  # {"error": ...}
+            continue
+        for row in rows:
+            name = row.get("name", "?")
+            for k, v in row.items():
+                if isinstance(v, (int, float)) and not isinstance(v, bool):
+                    flat[f"{bench}/{name}/{k}"] = float(v)
+    return flat
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline",
+                    default=os.path.join(ROOT, "BENCH_baseline.json"))
+    ap.add_argument("--results",
+                    default=os.path.join(HERE, "bench_results.json"))
+    ap.add_argument("--tolerance", type=float, default=0.15)
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="snapshot current results as the new baseline")
+    args = ap.parse_args()
+
+    with open(args.results) as f:
+        flat = _rows_by_path(json.load(f))
+
+    if args.write_baseline:
+        base = {}
+        for path, direction in TRACKED.items():
+            if path not in flat:
+                sys.exit(f"cannot seed baseline: tracked row {path} missing "
+                         f"from {args.results}")
+            value = FLOOR_OVERRIDES.get(path, flat[path])
+            base[path] = {"value": value, "direction": direction}
+        with open(args.baseline, "w") as f:
+            json.dump(base, f, indent=1, sort_keys=True)
+        print(f"wrote {args.baseline} ({len(base)} tracked rows)")
+        return
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+
+    failures = []
+    for path, rec in base.items():
+        if path not in flat:
+            failures.append(f"{path}: missing from results")
+            continue
+        got, want = flat[path], rec["value"]
+        tol = args.tolerance
+        if rec["direction"] == "min":
+            ok = got >= want * (1.0 - tol)
+            bound = f">= {want * (1.0 - tol):.4g}"
+        else:
+            ok = got <= want * (1.0 + tol)
+            bound = f"<= {want * (1.0 + tol):.4g}"
+        status = "ok" if ok else "REGRESSED"
+        print(f"{status:9s} {path}: {got:.4g} (baseline {want:.4g}, "
+              f"bound {bound})")
+        if not ok:
+            failures.append(f"{path}: {got:.4g} vs baseline {want:.4g}")
+    if failures:
+        sys.exit("perf guard failed:\n  " + "\n  ".join(failures))
+    print(f"perf guard ok: {len(base)} tracked rows within "
+          f"{args.tolerance:.0%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,7 @@ from benchmarks import (  # noqa: E402
     fig1_convergence,
     fig2_phase,
     fig4_local_iters,
+    fused_round_bench,
     grad_compress_bench,
     kernel_micro,
     masked_rpca_bench,
@@ -34,6 +35,7 @@ BENCHES = {
     "table1": table1_upper_rank,
     "fig4": fig4_local_iters,
     "kernel": kernel_micro,
+    "fused": fused_round_bench,
     "masked": masked_rpca_bench,
     "elastic": elastic_bench,
     "api": api_dispatch_bench,

@@ -23,8 +23,10 @@ from repro.core.problems import (
     generate_mask,
     generate_problem,
     merge_columns,
+    pack_mask,
     participation_schedule,
     split_columns,
+    unpack_mask,
 )
 from repro.core.runtime import (
     CHUNKED,
@@ -79,6 +81,8 @@ __all__ = [
     "generate_mask",
     "generate_problem",
     "merge_columns",
+    "pack_mask",
     "participation_schedule",
     "split_columns",
+    "unpack_mask",
 ]

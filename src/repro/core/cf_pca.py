@@ -21,6 +21,7 @@ from repro import rpca as _rpca
 from repro.core import factorized as fz
 from repro.core import runtime as rt
 from repro.core import validate
+from repro.kernels import bitmask
 
 Array = jax.Array
 
@@ -78,15 +79,19 @@ def make_solver(cfg: fz.DCFConfig, *, with_objective: bool = False) -> rt.Solver
         t = t + p.t0
         eta = cfg.lr(t)
         lam_t = cfg.lam_at(p.lam0, t)
-        u, v = fz.local_round(
+        u, v, diag = fz.local_round(
             c.u, c.v, p.m_obs, cfg=cfg, lam=lam_t, n_frac=1.0, eta=eta,
             w=p.mask,
         )
-        obj = (
-            fz.local_objective(u, v, p.m_obs, cfg.rho, lam_t, 1.0, w=p.mask)
-            if track
-            else jnp.zeros((), p.m_obs.dtype)
-        )
+        if not track:
+            obj = jnp.zeros((), jnp.float32)
+        elif diag is not None:
+            # Fused path: the Huber data term came from the final pass's
+            # epilogue; only the cheap factor-norm regularizer is added.
+            obj = diag[0] + fz.reg_terms(u, v, cfg.rho, 1.0)
+        else:
+            obj = fz.local_objective(u, v, p.m_obs, cfg.rho, lam_t, 1.0,
+                                     w=p.mask)
         resid = jnp.linalg.norm(u - c.u) / (jnp.linalg.norm(c.u) + 1e-30)
         return _Carry(u=u, v=v, diag=rt.Diag(obj, resid))
 
@@ -119,16 +124,22 @@ def make_problem(
     auto-calibrated threshold then uses the observed entries only and the
     hidden entries of ``m_obs`` are zero-filled up front (the solve must
     not depend on whatever the caller stored there).
+
+    Compact data plane: ``m_obs`` may be bfloat16 (the factors and outputs
+    stay f32; kernels accumulate f32), and ``cfg.pack_mask`` stores the
+    mask bit-packed (uint8, 8 cols/byte) in the problem pytree.
     """
     if mask is not None:
         validate.check_mask(mask, m_obs.shape)
-        m_obs = mask * m_obs
+        m_obs = (mask * m_obs.astype(jnp.float32)).astype(m_obs.dtype)
     m, n = m_obs.shape
     lam0 = (
         jnp.asarray(cfg.lam, jnp.float32)
         if cfg.lam is not None
-        else fz.robust_lam(m_obs, mask=mask)
+        else fz.robust_lam(m_obs, mask=mask, sample=cfg.lam_sample)
     )
+    if mask is not None and cfg.pack_mask:
+        mask = bitmask.pack_mask(mask)
     if warm is None:
         state = fz.init_state(key, m, n, cfg.rank, m_obs.dtype)
         u0, v0 = state.u, state.v
@@ -217,7 +228,8 @@ def _service_empty(cfg, slots, m, n):
         v_init=zeros((slots, n, cfg.rank)),
         lam0=zeros((slots,)),
         t0=zeros((slots,), jnp.int32),
-        mask=jnp.ones((slots, m, n)),
+        mask=(bitmask.packed_ones((slots, m, n)) if cfg.pack_mask
+              else jnp.ones((slots, m, n))),
     )
 
 
@@ -227,7 +239,10 @@ def _service_problem(m_obs, cfg, key, warm, mask):
         # no masked sort), then attach the all-ones plane the homogeneous
         # slot pytree needs -- numerically identical.
         problem = make_problem(m_obs, cfg, key, warm)
-        return problem._replace(mask=jnp.ones_like(m_obs))
+        return problem._replace(
+            mask=(bitmask.packed_ones(m_obs.shape) if cfg.pack_mask
+                  else jnp.ones(m_obs.shape, jnp.float32))
+        )
     return make_problem(m_obs, cfg, key, warm, mask=mask)
 
 
@@ -242,7 +257,7 @@ _rpca.register_solver(
     "cf",
     _rpca.SolverCaps(supports_mask=True, supports_factors=True,
                      batchable=True, needs_rank=True,
-                     supports_service=True),
+                     supports_service=True, supports_lowp=True),
     _registry_make,
     service=_rpca.ServiceHooks(
         make_solver=make_solver,

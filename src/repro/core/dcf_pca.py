@@ -44,6 +44,7 @@ from repro.core import factorized as fz
 from repro.core import problems as prob
 from repro.core import runtime as rt
 from repro.core import validate
+from repro.kernels import bitmask
 
 Array = jax.Array
 
@@ -110,6 +111,12 @@ def make_solver(cfg: fz.DCFConfig, *, with_objective: bool = False) -> rt.Solver
         t = t + p.t0
         eta = cfg.lr(t)
         lam_t = cfg.lam_at(p.lam0, t)
+        # Fused epilogue diagnostics replace the separate objective pass
+        # whenever the fused round measures them; participation rounds keep
+        # the legacy pass (a dropped client's epilogue measures a local run
+        # whose factors are then discarded -- the frozen state's objective
+        # is the meaningful one).
+        fused_obj = track and cfg.fused != "off" and p.participation is None
         # Server broadcasts U; clients run K local iterations concurrently.
         if p.n_cols is None:
             # Equal blocks: the compile-time 1/E constant keeps this path
@@ -118,11 +125,11 @@ def make_solver(cfg: fz.DCFConfig, *, with_objective: bool = False) -> rt.Solver
             local = partial(fz.local_round, cfg=cfg, lam=lam_t,
                             n_frac=n_frac)
             if p.mask is None:
-                u_i, v_new = jax.vmap(
+                u_i, v_new, diag_i = jax.vmap(
                     lambda vb, mb: local(c.u, vb, mb, eta=eta)
                 )(c.v, p.blocks)
             else:
-                u_i, v_new = jax.vmap(
+                u_i, v_new, diag_i = jax.vmap(
                     lambda vb, mb, wb: local(c.u, vb, mb, eta=eta, w=wb)
                 )(c.v, p.blocks, p.mask)
         else:
@@ -130,7 +137,7 @@ def make_solver(cfg: fz.DCFConfig, *, with_objective: bool = False) -> rt.Solver
             # mask-zero) and a per-client regularizer share n_i/n.
             n_frac = p.n_cols / jnp.sum(p.n_cols)
             local = partial(fz.local_round, cfg=cfg, lam=lam_t)
-            u_i, v_new = jax.vmap(
+            u_i, v_new, diag_i = jax.vmap(
                 lambda vb, mb, wb, nf: local(c.u, vb, mb, eta=eta, w=wb,
                                              n_frac=nf)
             )(c.v, p.blocks, p.mask, n_frac)
@@ -153,7 +160,12 @@ def make_solver(cfg: fz.DCFConfig, *, with_objective: bool = False) -> rt.Solver
             u = jnp.where(
                 wsum > 0, jnp.sum(w[:, None, None] * u_i, axis=0), c.u
             )
-        if track:
+        if fused_obj:
+            # Free data terms from the kernel epilogues; only the factor-
+            # norm regularizer is added (sum_i n_frac_i == 1, so the
+            # stacked V and the consensus U take full weight).
+            obj = diag_i[0].sum() + fz.reg_terms(u, v, cfg.rho, 1.0)
+        elif track:
             if p.n_cols is None:
                 if p.mask is None:
                     obj = jax.vmap(
@@ -174,7 +186,7 @@ def make_solver(cfg: fz.DCFConfig, *, with_objective: bool = False) -> rt.Solver
                     )
                 )(v, p.blocks, p.mask, n_frac).sum()
         else:
-            obj = jnp.zeros((), p.blocks.dtype)
+            obj = jnp.zeros((), jnp.float32)
         resid = jnp.linalg.norm(u - c.u) / (jnp.linalg.norm(c.u) + 1e-30)
         if wsum is not None:
             # A user-supplied schedule may contain an all-dropout row
@@ -267,21 +279,22 @@ def make_problem(
     :func:`_resolve_participation`)."""
     if mask is not None:
         validate.check_mask(mask, m_obs.shape)
-        m_obs = mask * m_obs
+        m_obs = (mask * m_obs.astype(jnp.float32)).astype(m_obs.dtype)
     m, n = m_obs.shape
     # lam calibrates on the unpadded data -- padding columns are not
     # observations and must not drag the MAD toward zero.
     lam0 = (
         jnp.asarray(cfg.lam, jnp.float32)
         if cfg.lam is not None
-        else fz.robust_lam(m_obs, mask=mask)
+        else fz.robust_lam(m_obs, mask=mask, sample=cfg.lam_sample)
     )
     blocks = prob.split_columns(m_obs, num_clients)  # (E, m, n_i), padded
     n_i = blocks.shape[-1]
     if n % num_clients:
         # Ragged: exclude the zero-padded tail columns via the Omega
         # plumbing (an all-ones base mask when the problem is unmasked).
-        base = mask if mask is not None else jnp.ones_like(m_obs)
+        base = mask if mask is not None else jnp.ones(m_obs.shape,
+                                                     jnp.float32)
         mask_blocks = prob.split_columns(base, num_clients)
         n_cols = jnp.asarray(
             prob.client_column_counts(n, num_clients), jnp.float32
@@ -291,6 +304,10 @@ def make_problem(
             None if mask is None else prob.split_columns(mask, num_clients)
         )
         n_cols = None
+    if mask_blocks is not None and cfg.pack_mask:
+        # Compact data plane: per-client mask slices stored bit-packed
+        # (8 cols/byte); the kernels unpack per-tile in VMEM.
+        mask_blocks = bitmask.pack_mask(mask_blocks)
     sched = _resolve_participation(
         participation, cfg.outer_iters, num_clients, key
     )
@@ -436,7 +453,7 @@ _rpca.register_solver(
     "dcf",
     _rpca.SolverCaps(supports_mask=True, supports_factors=True,
                      supports_clients=True, supports_participation=True,
-                     batchable=True, needs_rank=True),
+                     batchable=True, needs_rank=True, supports_lowp=True),
     _registry_make,
 )
 
@@ -444,7 +461,7 @@ _rpca.register_solver(
     "dcf_sharded",
     _rpca.SolverCaps(supports_mask=True, supports_factors=True,
                      supports_participation=True, supports_sharding=True,
-                     batchable=False, needs_rank=True),
+                     batchable=False, needs_rank=True, supports_lowp=True),
     _registry_make_sharded,
 )
 
@@ -551,6 +568,18 @@ def _solve_sharded(
     """
     if key is None:
         key = jax.random.PRNGKey(0)
+    if cfg.pack_mask and mask is not None:
+        # The mask plane is sharded exactly like M (P(model, data)); a
+        # packed (m, n/8) plane would need its own sharding layout and
+        # per-shard ragged byte boundaries.  Fail eagerly rather than
+        # silently shipping dense mask traffic under a compact-plane flag.
+        # (mask=None is fine: there is no plane to pack, matching the
+        # simulated engine which packs only when a mask exists.)
+        raise ValueError(
+            "cfg.pack_mask is not supported by the sharded engine (the "
+            "mask is sharded like M); use a dense mask, or the simulated "
+            "engine for bit-packed planes"
+        )
     run_cfg = run or rt.FIXED
     track = cfg.track_objective or run_cfg.needs_objective
     if mask is not None:
@@ -560,7 +589,9 @@ def _solve_sharded(
     # lam calibrates on the unpadded data (padding columns are not
     # observations).
     lam = (
-        cfg.lam if cfg.lam is not None else fz.robust_lam(m_obs, mask=mask)
+        cfg.lam
+        if cfg.lam is not None
+        else fz.robust_lam(m_obs, mask=mask, sample=cfg.lam_sample)
     )
     num_clients = 1
     for a in data_axes:
@@ -590,11 +621,12 @@ def _solve_sharded(
 
     k_u, k_v = jax.random.split(key)
     scale = 1.0 / float(jnp.sqrt(float(cfg.rank)))
+    fdtype = jnp.result_type(m_obs.dtype, jnp.float32)  # factors stay f32
     # U init is identical across clients (the server broadcast); sharded
     # over rows only.  V_i inits are per-client (folded client index).
     if warm is None:
         t0 = 0
-        u0 = jax.random.normal(k_u, (m, cfg.rank), m_obs.dtype) * scale
+        u0 = jax.random.normal(k_u, (m, cfg.rank), fdtype) * scale
     else:
         # Eager full-shape validation (see the simulated engine): the
         # sharded engine's own DCFResult layout is ((m, r), (n, r)).
@@ -631,7 +663,7 @@ def _solve_sharded(
             t = t + t0
             eta = cfg.lr(t)
             lam_t = cfg.lam_at(lam, t)
-            u_i, v_new = fz.local_round(
+            u_i, v_new, diag_i = fz.local_round(
                 c.u, c.v, m_local_full, cfg=cfg, lam=lam_t, n_frac=n_frac_i,
                 eta=eta, reduce_m=reduce_m, w=w_local,
             )
@@ -656,17 +688,27 @@ def _solve_sharded(
                 # clients keep their V_i (no decay toward zero weight).
                 u_new = jnp.where(wsum > 0, u_cand, c.u)
                 v_new = jnp.where(pt > 0, v_new, c.v)
-            obj = (
-                jax.lax.psum(
+            if not track:
+                obj = jnp.zeros((), jnp.float32)
+            elif diag_i is not None and sched_rep is None:
+                # Fused epilogue data term (already summed over this
+                # shard's rows; the model axis holds distinct rows, so the
+                # all-axes psum composes it exactly like local_objective).
+                obj = jax.lax.psum(
+                    diag_i[0]
+                    + fz.reg_terms(u_new, v_new, cfg.rho, n_frac_i),
+                    all_axes,
+                )
+            else:
+                # Participation rounds keep the legacy pass: a dropped
+                # shard's epilogue measured a discarded local run.
+                obj = jax.lax.psum(
                     fz.local_objective(
                         u_new, v_new, m_local_full, cfg.rho, lam_t,
                         n_frac_i, w=w_local,
                     ),
                     all_axes,
                 )
-                if track
-                else jnp.zeros((), m_local_full.dtype)
-            )
             # Residual on the consensus U: psum the squared norms over the
             # model axis so every shard sees the same scalar and the
             # while_loop predicate (and hence the collectives) stay
@@ -734,8 +776,10 @@ def _solve_sharded(
             idx = jax.lax.axis_index(data_axes)
             kv_local = jax.random.fold_in(k_v, idx)
             v = (
-                jax.random.normal(kv_local, (n_i, cfg.rank),
-                                  m_local_full.dtype) * scale
+                jax.random.normal(
+                    kv_local, (n_i, cfg.rank),
+                    jnp.result_type(m_local_full.dtype, jnp.float32),
+                ) * scale
             )
         return solve_body(m_local_full, packed["u"], v, packed.get("w"),
                           packed.get("sched"))

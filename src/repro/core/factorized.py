@@ -25,6 +25,27 @@ Two inner solvers for Eq. (7) are provided:
              1/(rho + sigma_max(U)^2) per Lemma 1.
 
 Both consume the fused kernels through ``repro.kernels.ops``.
+
+Fused round (DESIGN.md Sec. 12): ``DCFConfig.fused`` selects how much of
+the round rides the dual-contraction / epilogue-diagnostics kernel:
+
+``"off"``   the PR-4 structure: J inner sweeps + a separate U-step
+            contraction, diagnostics as a separate full-matrix pass.
+``"diag"``  the default: identical factor math; the U-step pass also emits
+            the Huber objective and ``||Psi||_F^2`` from its epilogue, so
+            round diagnostics cost zero extra passes.
+``"dual"``  the bandwidth-optimal opt-in: the final inner sweep is the
+            dual-contraction kernel -- its ``Psi^T U`` output performs the
+            last V update *exactly* as the unfused sweep would, its
+            ``Psi V`` output feeds the U gradient, and the epilogue emits
+            the diagnostics.  One streamed pass over M per local iteration
+            is saved (J passes instead of J+1); the semantic change is
+            that the U gradient is evaluated at the pre-final-sweep V.
+            Usually the inner problem has essentially converged by then
+            and recovery matches (tests/test_rpca_core), but on hard
+            masked slow-anneal problems the stale gradient can settle
+            into a worse stationary point for some inits -- hence opt-in,
+            not default.
 """
 from __future__ import annotations
 
@@ -36,9 +57,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import ops as core_ops
+from repro.kernels import bitmask
 from repro.kernels import ops as kops
 
 Array = jax.Array
+
+#: (objective data term, ||Psi||_F^2) measured in a fused pass's epilogue.
+RoundDiag = tuple[Array, Array]
 
 
 @dataclass(frozen=True)
@@ -77,6 +102,26 @@ class DCFConfig:
     precondition: Literal["lipschitz", "newton", "raw"] = "lipschitz"
     impl: Literal["auto", "pallas", "ref"] = "auto"
     track_objective: bool = False  # record eliminated objective per round
+    # Fused-round level (see module docstring): "diag" (default) keeps the
+    # exact PR-4 factor math and gets the round diagnostics free from the
+    # U-step pass's epilogue; "dual" additionally streams one fewer
+    # full-matrix pass per local iteration by evaluating the U gradient at
+    # the pre-final-sweep V -- choose it when HBM bandwidth dominates and
+    # accept that the half-sweep-stale gradient can settle into a worse
+    # stationary point on hard masked problems with unlucky inits (seen at
+    # 128x128 r=5, 70% observed, slow anneal); "off" is the literal PR-4
+    # structure (diagnostics as a separate pass).
+    fused: Literal["off", "diag", "dual"] = "diag"
+    # Compact data plane: store the observation mask bit-packed (uint8,
+    # 8 cols/byte) in the problem pytree -- the kernels unpack per-tile in
+    # VMEM, cutting steady-state mask traffic 32x.  Exact: unpack(pack(W))
+    # round-trips any 0/1 mask bit-for-bit.
+    pack_mask: bool = False
+    # lam calibration subsample: cap the entries fed to robust_lam's
+    # medians (None = exact, two full-matrix sorts).  ~64k (1 << 16)
+    # estimates the MAD to well under a percent -- the right trade for
+    # short refresh/serving solves where calibration would dominate.
+    lam_sample: int | None = None
 
     def resolved_lam(self, m: int, n: int) -> float:
         if self.lam is not None:
@@ -186,7 +231,8 @@ def _masked_median(x: Array, keep: Array, count: Array) -> Array:
 
 
 def robust_lam(m_obs: Array, mult: float = 2.0,
-               mask: Array | None = None) -> Array:
+               mask: Array | None = None,
+               sample: int | None = None) -> Array:
     """Data-driven soft-threshold level: ``mult * 1.4826 * MAD(M)``.
 
     The shrinkage threshold must sit between the clean-entry residual scale
@@ -199,12 +245,35 @@ def robust_lam(m_obs: Array, mult: float = 2.0,
 
     ``mask`` restricts both medians to the observed entries -- the hidden
     entries are stored as zeros and would otherwise drag the MAD toward 0.
+    A bit-packed uint8 mask is accepted and unpacked.
+
+    ``sample`` caps the number of entries fed to the medians (strided
+    subsample).  Exact medians cost two full sorts -- on large matrices
+    that dwarfs the per-round work (XLA sorts are slow on every backend);
+    a ~64k-entry subsample estimates the MAD to well under a percent,
+    far inside the slack the threshold already tolerates.  ``None`` keeps
+    the exact (bit-identical to ``jnp.median``) behavior.
     """
-    if mask is None:
-        med = jnp.median(m_obs)
-        return mult * 1.4826 * jnp.median(jnp.abs(m_obs - med))
-    keep = mask.ravel() > 0
-    x = m_obs.ravel()
+    if mask is not None and bitmask.is_packed(mask):
+        mask = bitmask.unpack_mask(mask, m_obs.shape[-1])
+    n_cols = m_obs.shape[-1] if m_obs.ndim >= 2 else 1
+    x = m_obs.ravel().astype(jnp.float32)
+    keep = None if mask is None else mask.ravel() > 0
+    if sample is not None and x.size > sample:
+        stride = -(-x.size // sample)
+        # A stride sharing a factor with the column count would walk only
+        # n/gcd(stride, n) distinct columns of the row-major ravel --
+        # fatal under column-structured masks/corruption.  Bump it coprime
+        # so the subsample sweeps every column.
+        import math
+
+        while n_cols > 1 and math.gcd(stride, n_cols) > 1:
+            stride += 1
+        x = x[::stride]
+        keep = None if keep is None else keep[::stride]
+    if keep is None:
+        med = jnp.median(x)
+        return mult * 1.4826 * jnp.median(jnp.abs(x - med))
     count = jnp.maximum(jnp.sum(keep.astype(jnp.int32)), 1)
     med = _masked_median(x, keep, count)
     return mult * 1.4826 * _masked_median(jnp.abs(x - med), keep, count)
@@ -244,7 +313,13 @@ class DCFState:
 
 def init_state(key: Array, m: int, n_local: int, rank: int,
                dtype=jnp.float32) -> DCFState:
-    """Random init. U ~ N(0, 1/sqrt(r)) keeps ||U V^T|| at O(1) scale."""
+    """Random init. U ~ N(0, 1/sqrt(r)) keeps ||U V^T|| at O(1) scale.
+
+    The factors never drop below f32 -- a bf16 *data* plane (compact
+    storage for M) still iterates f32 factors, exactly like the kernels'
+    f32 accumulation.
+    """
+    dtype = jnp.result_type(dtype, jnp.float32)
     ku, kv = jax.random.split(key)
     scale = 1.0 / jnp.sqrt(jnp.asarray(rank, dtype))
     u = jax.random.normal(ku, (m, rank), dtype) * scale
@@ -278,20 +353,47 @@ def inner_solve_altmin(
     ``U^T (M_fill - S) == G V^T + U^T Psi_W`` with
     ``Psi_W = W * clip(M - U V^T, +-lam)``, so masking only changes the
     fused contraction, not the sweep structure.
+
+    The (r, r) system matrix ``G + rho I`` is constant across the sweeps
+    (U is fixed), so it is Cholesky-factored once outside the scan and
+    each sweep back-substitutes (``cho_solve``) instead of re-factorizing.
     """
-    g = reduce_m(u.T @ u)  # (r, r)
-    g_reg = g + rho * jnp.eye(g.shape[0], dtype=g.dtype)
+    g, update = _altmin_ctx(u, rho, reduce_m)
 
     def sweep(v, _):
         contr = reduce_m(
             kops.huber_contract_v(u, v, m_blk, lam, w=w, impl=impl)
         )
-        rhs = g @ v.T + contr.T
-        v_new = jnp.linalg.solve(g_reg, rhs).T
-        return v_new, None
+        return update(v, contr), None
 
     v, _ = jax.lax.scan(sweep, v, None, length=sweeps)
     return v
+
+
+def _altmin_ctx(u: Array, rho: float, reduce_m=_identity):
+    """Per-U altmin context: the Gram matrix and a one-sweep V update
+    (ridge back-substitution against the once-factored ``G + rho I``).
+    Shared by :func:`inner_solve_altmin` and the fused dual round so the
+    Gram gemm / psum / Cholesky run once per local iteration."""
+    g = reduce_m(u.T @ u)  # (r, r)
+    g_reg = g + rho * jnp.eye(g.shape[0], dtype=g.dtype)
+    cho = jax.scipy.linalg.cho_factor(g_reg)
+
+    def update(v: Array, contr: Array) -> Array:
+        return jax.scipy.linalg.cho_solve(cho, g @ v.T + contr.T).T
+
+    return g, update
+
+
+def _gd_ctx(u: Array, rho: float, reduce_m=_identity):
+    """Per-U Huber-GD context: one Lemma-1 step from the contraction."""
+    g = reduce_m(u.T @ u)
+    step = 1.0 / (rho + core_ops.spectral_norm_ub_gram(g))
+
+    def update(v: Array, contr: Array) -> Array:
+        return v - step * (rho * v - contr)
+
+    return g, update
 
 
 def inner_solve_huber_gd(
@@ -301,19 +403,41 @@ def inner_solve_huber_gd(
     """GD on ``h(V) = rho/2 ||V||^2 + H_lam(P_Omega(M - U V^T))`` (Lemma 1
     step size; masking only shrinks the data-term Lipschitz constant, so
     the unmasked 1/(rho + sigma_max(U)^2) step stays valid)."""
-    g = reduce_m(u.T @ u)
-    sigma2 = core_ops.spectral_norm_ub_gram(g)
-    step = 1.0 / (rho + sigma2)
+    _, update = _gd_ctx(u, rho, reduce_m)
 
     def sweep(v, _):
         contr = reduce_m(
             kops.huber_contract_v(u, v, m_blk, lam, w=w, impl=impl)
         )
-        grad = rho * v - contr
-        return v - step * grad, None
+        return update(v, contr), None
 
     v, _ = jax.lax.scan(sweep, v, None, length=sweeps)
     return v
+
+
+def _u_step(cfg: DCFConfig, u_i: Array, v_i: Array, psi_v: Array,
+            n_frac: Array | float, eta: Array) -> Array:
+    """One gradient step on the local U copy from the contraction Psi V.
+
+    grad_U L_i = (U V^T + S - M) V + (n_i/n) rho U = -Psi V + (n_i/n) rho U
+    (rows of grad_U stay local under row sharding -- no collective).
+    """
+    grad_u = -psi_v + n_frac * cfg.rho * u_i
+    if cfg.precondition == "raw":
+        upd = eta * grad_u
+    else:
+        # For fixed (V, S) the U-subproblem is quadratic with Hessian
+        # H = V^T V + rho (n_i/n) I  (r x r, local -- no collective).
+        gram_v = v_i.T @ v_i
+        if cfg.precondition == "newton":
+            h = gram_v + n_frac * cfg.rho * jnp.eye(
+                gram_v.shape[0], dtype=gram_v.dtype
+            )
+            upd = eta * jnp.linalg.solve(h, grad_u.T).T
+        else:  # "lipschitz": eta / L with L = sigma_max(V)^2 + rho n_i/n
+            lip = core_ops.spectral_norm_ub_gram(gram_v) + n_frac * cfg.rho
+            upd = (eta / lip) * grad_u
+    return u_i - upd
 
 
 def local_round(
@@ -327,49 +451,81 @@ def local_round(
     eta: Array,
     reduce_m=_identity,
     w: Array | None = None,
-) -> tuple[Array, Array]:
+) -> tuple[Array, Array, RoundDiag | None]:
     """One client's work in one consensus round: K local iterations of
     {inner (V,S) solve; one gradient step on the local U copy} (Alg. 1).
 
     ``n_frac = n_i / n`` weights the client's share of the rho/2 ||U||^2
-    regularizer (paper Eq. 11).  Returns (U_i, V_i) to be averaged /
-    kept local respectively.  ``w`` is this client's slice of the
-    observation mask: every residual contraction then runs over observed
+    regularizer (paper Eq. 11).  Returns ``(U_i, V_i, diag)`` -- the
+    factors to be averaged / kept local, plus the round diagnostics
+    ``(H_lam(R_W), ||Psi_W||_F^2)`` measured for free in the final fused
+    pass's epilogue (``None`` under ``cfg.fused == "off"``; engines then
+    fall back to a separate :func:`local_objective` pass).  The epilogue
+    objective is the data term at the point of the last fused pass: under
+    ``"diag"`` that is (U_i pre-U-step, V_i final); under ``"dual"`` it is
+    one inner sweep earlier still -- (U_i pre-U-step, V_i pre-final-sweep),
+    the same point the stale U gradient uses.  Either is a consistent
+    per-round surrogate of the post-consensus objective; see runtime.py's
+    diagnostics contract.
+
+    ``w`` is this client's slice of the observation mask (dense 0/1 or
+    bit-packed uint8): every residual contraction then runs over observed
     entries only (Psi_W = W * clip, fused in the kernel epilogue).
+
+    Under ``cfg.fused == "dual"`` each local iteration streams M once less:
+    the final inner sweep runs the dual-contraction kernel, whose
+    ``Psi^T U`` output applies the last V update exactly while its
+    ``Psi V`` output feeds the U gradient (evaluated one inner sweep
+    stale -- see the module docstring).
     """
-    inner = (
-        inner_solve_altmin if cfg.inner == "altmin" else inner_solve_huber_gd
-    )
+    altmin = cfg.inner == "altmin"
+    inner = inner_solve_altmin if altmin else inner_solve_huber_gd
+    dual = cfg.fused == "dual"
+    diag_only = cfg.fused == "diag"
+    make_ctx = _altmin_ctx if altmin else _gd_ctx
 
     def one_local_iter(carry, _):
         u_i, v_i = carry
-        v_i = inner(u_i, v_i, m_blk, cfg.rho, lam, cfg.inner_sweeps,
-                    cfg.impl, reduce_m, w)
-        # grad_U L_i = (U V^T + S - M) V + (n_i/n) rho U = -Psi V + (n_i/n) rho U
-        # (rows of grad_U stay local under row sharding -- no collective).
-        psi_v = kops.huber_contract_u(u_i, v_i, m_blk, lam, w=w,
-                                      impl=cfg.impl)
-        grad_u = -psi_v + n_frac * cfg.rho * u_i
-        if cfg.precondition == "raw":
-            upd = eta * grad_u
-        else:
-            # For fixed (V, S) the U-subproblem is quadratic with Hessian
-            # H = V^T V + rho (n_i/n) I  (r x r, local -- no collective).
-            gram_v = v_i.T @ v_i
-            if cfg.precondition == "newton":
-                h = gram_v + n_frac * cfg.rho * jnp.eye(
-                    gram_v.shape[0], dtype=gram_v.dtype
-                )
-                upd = eta * jnp.linalg.solve(h, grad_u.T).T
-            else:  # "lipschitz": eta / L with L = sigma_max(V)^2 + rho n_i/n
-                lip = core_ops.spectral_norm_ub_gram(gram_v) + n_frac * cfg.rho
-                upd = (eta / lip) * grad_u
-        return (u_i - upd, v_i), None
+        if dual:
+            # J-1 plain sweeps; the J-th sweep is the fused dual pass.
+            # One inner-solver context (Gram gemm / psum / factorization)
+            # serves all J sweeps -- U is fixed within the iteration.
+            _, update = make_ctx(u_i, cfg.rho, reduce_m)
 
-    (u_i, v_i), _ = jax.lax.scan(
+            def sweep(v, _):
+                contr = reduce_m(kops.huber_contract_v(
+                    u_i, v, m_blk, lam, w=w, impl=cfg.impl
+                ))
+                return update(v, contr), None
+
+            v_i, _ = jax.lax.scan(sweep, v_i, None,
+                                  length=cfg.inner_sweeps - 1)
+            cv, psi_v, obj, psi2 = kops.huber_dual_contract(
+                u_i, v_i, m_blk, lam, w=w, impl=cfg.impl
+            )
+            # Exact final sweep from the dual's Psi^T U output.
+            v_i = update(v_i, reduce_m(cv))
+            diag = (obj, psi2)
+        else:
+            v_i = inner(u_i, v_i, m_blk, cfg.rho, lam, cfg.inner_sweeps,
+                        cfg.impl, reduce_m, w)
+            if diag_only:
+                psi_v, obj, psi2 = kops.huber_contract_u_diag(
+                    u_i, v_i, m_blk, lam, w=w, impl=cfg.impl
+                )
+                diag = (obj, psi2)
+            else:
+                psi_v = kops.huber_contract_u(u_i, v_i, m_blk, lam, w=w,
+                                              impl=cfg.impl)
+                diag = (jnp.zeros((), jnp.float32),) * 2
+        return (_u_step(cfg, u_i, v_i, psi_v, n_frac, eta), v_i), diag
+
+    (u_i, v_i), diags = jax.lax.scan(
         one_local_iter, (u_global, v), None, length=cfg.local_iters
     )
-    return u_i, v_i
+    if cfg.fused == "off":
+        return u_i, v_i, None
+    return u_i, v_i, (diags[0][-1], diags[1][-1])
 
 
 def finalize(u: Array, v: Array, m_blk: Array, lam: Array | float,
@@ -389,11 +545,22 @@ def local_objective(u: Array, v: Array, m_blk: Array, rho: float,
                     w: Array | None = None) -> Array:
     """g_i(U) surrogate at the current (V): eliminated objective Eq. (17)
     plus this client's share of the U regularizer.  Masked: the Huber term
-    sums over observed entries only (H_lam(0) == 0)."""
-    resid = m_blk - u @ v.T
+    sums over observed entries only (H_lam(0) == 0).  A bit-packed mask is
+    unpacked; a bf16 data block is upcast (the residual is f32 either way).
+    """
+    if w is not None and bitmask.is_packed(w):
+        w = bitmask.unpack_mask(w, m_blk.shape[-1])
+    resid = m_blk.astype(jnp.float32) - u @ v.T
     data = (
         core_ops.huber_loss(resid, lam)
         if w is None
         else core_ops.masked_huber_loss(resid, lam, w)
     )
     return data + 0.5 * rho * (jnp.sum(v * v) + n_frac * jnp.sum(u * u))
+
+
+def reg_terms(u: Array, v: Array, rho: float,
+              n_frac: Array | float) -> Array:
+    """The rho/2 regularizer share added to an epilogue-measured data term
+    to reconstruct g_i (cheap: factor norms only, no full-matrix pass)."""
+    return 0.5 * rho * (jnp.sum(v * v) + n_frac * jnp.sum(u * u))

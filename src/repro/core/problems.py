@@ -18,6 +18,11 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
+# Compact data plane: bit-packed observation masks (8 cols/byte).  The
+# canonical implementation lives with the kernels that unpack them
+# per-tile; re-exported here as the problem-construction API.
+from repro.kernels.bitmask import pack_mask, unpack_mask  # noqa: F401
+
 Array = jax.Array
 
 
@@ -88,6 +93,11 @@ def generate_problem(
     * ``observed_frac < 1`` additionally hides entries behind an observation
       mask (see :func:`generate_mask`); the returned ``m_obs`` is zero on
       the hidden entries and ``problem.mask`` records ``Omega``.
+
+    ``dtype=jnp.bfloat16`` generates a compact data plane: ``m_obs``,
+    ``l0`` and ``s0`` are stored half-width (the solvers keep their factors
+    and accumulations f32), while ``mask`` stays at least f32 (it is a 0/1
+    plane; store it bit-packed with :func:`pack_mask` for 1 bit/entry).
     """
     # NOTE: keep the 4-way split of the fully-observed generator -- seed
     # problems must stay bit-identical; the mask key is derived separately.
@@ -107,9 +117,15 @@ def generate_problem(
     if observed_frac >= 1.0:
         return RPCAProblem(m_obs=l0 + s0, l0=l0, s0=s0, rank=rank,
                            sparsity=sparsity)
-    omega = generate_mask(k_omega, m, n, observed_frac, mask_kind, dtype)
+    # The mask plane never drops below f32 (a 0/1 indicator gains nothing
+    # from bf16 and every masked consumer expects float-exact 0/1).
+    mask_dtype = jnp.result_type(dtype, jnp.float32)
+    omega = generate_mask(k_omega, m, n, observed_frac, mask_kind,
+                          mask_dtype)
     return RPCAProblem(
-        m_obs=omega * (l0 + s0), l0=l0, s0=omega * s0,
+        m_obs=(omega * (l0 + s0).astype(mask_dtype)).astype(dtype),
+        l0=l0,
+        s0=(omega * s0.astype(mask_dtype)).astype(dtype),
         rank=rank, sparsity=sparsity, mask=omega,
     )
 

@@ -44,6 +44,20 @@ at all, and early exit / plateau detection / per-problem freeze masks stay
 correct under masking, including heterogeneous per-problem masks in
 ``solve_batch`` (see DESIGN.md Sec. 9).
 
+In-epilogue diagnostics (DESIGN.md Sec. 12): a solver's tracked objective
+may be measured inside its last fused kernel pass (the factorized solvers'
+dual-contraction epilogue emits the Huber data term and ``||Psi||_F^2``
+with zero extra full-matrix passes) rather than by a dedicated pass over
+the final state.  The contract this driver relies on is therefore
+*consistency*, not a fixed evaluation point: each solver reports the same
+well-defined surrogate every round (for the fused factorized rounds, the
+client-summed ``g_i`` at the last fused pass's point -- half a U-step
+stale under ``fused="diag"``, one further inner sweep stale under
+``"dual"``; see ``factorized.local_round``), so ``obj_plateau`` deltas
+and the recorded ``SolveStats.objective`` trace remain meaningful.  Solvers built with ``fused="off"`` keep the legacy
+post-consensus objective pass; rounds where no progress was measurable
+(all-dropout participation) still report an *inf* objective as below.
+
 Elastic participation (DESIGN.md Sec. 10) extends that contract: a
 participation schedule is another ``problem``-pytree leaf, the solver's
 ``step`` freezes dropped-out clients' local factors itself, and its

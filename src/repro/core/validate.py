@@ -17,8 +17,26 @@ from typing import Any, Sequence
 
 
 def check_mask(mask: Any, data_shape: tuple[int, ...]) -> None:
-    """Observation mask must match the data shape exactly."""
-    if mask is not None and tuple(mask.shape) != tuple(data_shape):
+    """Observation mask must match the data shape exactly and be float.
+
+    uint8 is rejected eagerly: the kernel layer reads uint8 planes as
+    *bit-packed* masks (8 cols/byte, ``kernels.bitmask``), so a dense
+    uint8 0/1 mask would be silently reinterpreted.  Packed planes are an
+    internal storage format -- pass the dense mask and opt in with
+    ``DCFConfig.pack_mask``.
+    """
+    if mask is None:
+        return
+    if getattr(mask, "dtype", None) is not None:
+        from jax import numpy as jnp
+
+        if jnp.issubdtype(mask.dtype, jnp.integer):
+            raise ValueError(
+                f"mask dtype {mask.dtype} is not float/bool; pass a dense "
+                f"0/1 float mask (bit-packed uint8 planes are internal -- "
+                f"use DCFConfig.pack_mask to store masks packed)"
+            )
+    if tuple(mask.shape) != tuple(data_shape):
         raise ValueError(
             f"mask shape {tuple(mask.shape)} != data shape "
             f"{tuple(data_shape)}"

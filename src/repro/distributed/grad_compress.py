@@ -105,7 +105,7 @@ def consensus_compress(
 
     def round_(carry, t):
         u, v = carry
-        u_i, v = fz.local_round(
+        u_i, v, _ = fz.local_round(
             u, v, g_local.astype(jnp.float32), cfg=cfg, lam=lam,
             n_frac=1.0 / n_workers, eta=cfg.lr(t),
         )

@@ -1,0 +1,88 @@
+"""Bit-packed observation masks: 8 columns per byte (the compact data plane).
+
+A 0/1 observation mask ``W`` of shape ``(..., m, n)`` stores one float32 per
+entry -- at production sizes that is as much HBM traffic as the data plane
+itself.  Packing the minor (column) axis eight-to-a-byte cuts the mask's
+steady-state traffic 32x (f32 -> 1 bit): ``packed[..., i, jb]`` holds
+columns ``8*jb .. 8*jb+7`` of row ``i``, LSB first.
+
+The packed layout is consumed two ways:
+
+* the Pallas kernels stream ``(bm, bn//8)`` uint8 tiles and unpack them to
+  ``(bm, bn)`` float tiles in VMEM (one shift+AND per bit plane, VPU work
+  that overlaps the MXU contraction) -- the mask never exists unpacked in
+  HBM;
+* the jnp reference path unpacks with :func:`unpack_mask` before the dense
+  oracle -- bit-exact, because ``unpack(pack(w)) == w`` for any 0/1 mask.
+
+``n % 8 != 0`` is allowed: the tail byte's high bits are zero (packed
+padding behaves exactly like the mask-zero padding of the elastic column
+split, see ``problems.split_columns``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+#: Columns packed per byte.
+PACK = 8
+
+
+def packed_width(n: int) -> int:
+    """Bytes per row for an ``n``-column mask."""
+    return -(-n // PACK)
+
+
+def is_packed(w: Array) -> bool:
+    """True when ``w`` is a bit-packed mask (uint8 plane)."""
+    return w.dtype == jnp.uint8
+
+
+def pack_mask(w: Array) -> Array:
+    """Pack a 0/1 mask ``(..., m, n)`` into ``(..., m, ceil(n/8))`` uint8.
+
+    Any dtype whose nonzero entries mean "observed" is accepted; leading
+    batch axes (e.g. the client-block axis ``(E, m, n_i)``) ride along.
+    """
+    n = w.shape[-1]
+    pad = (-n) % PACK
+    bits = (w != 0).astype(jnp.uint8)
+    if pad:
+        widths = [(0, 0)] * (w.ndim - 1) + [(0, pad)]
+        bits = jnp.pad(bits, widths)
+    bits = bits.reshape(*w.shape[:-1], -1, PACK)
+    shifts = jnp.arange(PACK, dtype=jnp.uint8)
+    return jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint8)
+
+
+def unpack_mask(packed: Array, n: int, dtype=jnp.float32) -> Array:
+    """Inverse of :func:`pack_mask`: ``(..., m, ceil(n/8))`` -> ``(..., m, n)``.
+
+    Exact round trip: ``unpack_mask(pack_mask(w), w.shape[-1]) == w`` for
+    any 0/1 mask ``w`` (enforced by tests/test_masked.py).
+    """
+    shifts = jnp.arange(PACK, dtype=jnp.uint8)
+    bits = (packed[..., None] >> shifts) & jnp.uint8(1)
+    full = bits.reshape(*packed.shape[:-1], packed.shape[-1] * PACK)
+    return full[..., :n].astype(dtype)
+
+
+def packed_ones(dense_shape: tuple[int, ...]) -> Array:
+    """Packed plane equal to ``pack_mask(jnp.ones(dense_shape))`` -- built
+    directly (0xFF bytes, tail byte's padding bits cleared) so callers
+    never materialize the dense all-ones plane just to pack it."""
+    n = dense_shape[-1]
+    out = jnp.full((*dense_shape[:-1], packed_width(n)), 0xFF, jnp.uint8)
+    rem = n % PACK
+    if rem:
+        out = out.at[..., -1].set(jnp.uint8((1 << rem) - 1))
+    return out
+
+
+def resolve_mask(w: Array | None, n: int, dtype=jnp.float32) -> Array | None:
+    """Dense view of a maybe-packed mask (``None`` passes through)."""
+    if w is None or not is_packed(w):
+        return w
+    return unpack_mask(w, n, dtype)

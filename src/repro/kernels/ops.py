@@ -5,11 +5,24 @@
                       dry-run and anywhere XLA fusion is already adequate).
 ``impl='auto'``    -- pallas on TPU, ref elsewhere (CPU interpret mode is a
                       correctness tool, not a fast path).
+
+``impl`` resolution is memoized (:func:`resolve_impl`): solver loop bodies
+dispatch these per sweep inside ``lax.scan``/``vmap`` traces, so the
+validation and the ``jax.default_backend()`` lookup run once per process
+per spelling instead of once per call site per trace.
+
+Masks: every ``w=`` accepts either a dense 0/1 plane (shape of ``m``) or a
+bit-packed uint8 plane (8 cols/byte, ``kernels.bitmask``).  The Pallas
+contraction kernels consume packed planes natively (per-tile VMEM unpack);
+the ref path and the shrinkage kernels unpack once at dispatch.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 
+from repro.kernels import bitmask
 from repro.kernels import huber_contract as _hc
 from repro.kernels import ref as _ref
 from repro.kernels import shrinkage as _sh
@@ -19,24 +32,54 @@ Array = jax.Array
 _IMPLS = ("auto", "pallas", "ref")
 
 
-def _resolve(impl: str) -> str:
+@functools.lru_cache(maxsize=None)
+def _resolve_cached(impl: str, backend: str) -> str:
     if impl not in _IMPLS:
         raise ValueError(f"impl must be one of {_IMPLS}, got {impl!r}")
     if impl == "auto":
-        return "pallas" if jax.default_backend() == "tpu" else "ref"
+        return "pallas" if backend == "tpu" else "ref"
     return impl
+
+
+def resolve_impl(impl: str) -> str:
+    """Validate and resolve ``impl`` (memoized per backend)."""
+    return _resolve_cached(impl, jax.default_backend())
+
+
+_resolve = resolve_impl  # back-compat alias
+
+
+#: VMEM budget for a grid-resident ``(n_pad, r_pad)`` out_v accumulator
+#: (f32 bytes).  The dual/packed-v kernels keep the whole inner-solve
+#: contraction resident (DESIGN.md Sec. 12); past this bound the dispatch
+#: falls back to the streaming kernels (dense-mask variants / two passes)
+#: instead of letting Mosaic fail on an oversized allocation.
+RESIDENT_OUT_V_BYTES = 4 << 20
+
+
+def _out_v_fits(v, u) -> bool:
+    n_pad = -(-v.shape[0] // _hc.DEFAULT_BN) * _hc.DEFAULT_BN
+    r_pad = -(-u.shape[1] // _hc.LANE) * _hc.LANE
+    return n_pad * r_pad * 4 <= RESIDENT_OUT_V_BYTES
 
 
 def huber_contract_v(u, v, m, lam, *, w=None, impl: str = "auto") -> Array:
     """(n, r) = Psi^T U,  Psi = clip(M - U V^T, +-lam).
 
-    ``w`` (optional 0/1 observation mask, same shape as ``m``) switches to
-    the masked fused variant: Psi = W * clip(M - U V^T, +-lam).
+    ``w`` (optional observation mask -- dense 0/1 or bit-packed uint8,
+    see module docstring) switches to the masked fused variant:
+    Psi = W * clip(M - U V^T, +-lam).
     """
-    if _resolve(impl) == "pallas":
-        if w is not None:
-            return _hc.huber_contract_v_masked(u, v, m, w, lam)
-        return _hc.huber_contract_v(u, v, m, lam)
+    if resolve_impl(impl) == "pallas":
+        if w is None:
+            return _hc.huber_contract_v(u, v, m, lam)
+        if bitmask.is_packed(w):
+            if _out_v_fits(v, u):
+                return _hc.huber_contract_v_packed(u, v, m, w, lam)
+            # Too wide for the resident accumulator: unpack once and use
+            # the streaming (blocked out_v) masked kernel.
+            w = bitmask.unpack_mask(w, m.shape[-1])
+        return _hc.huber_contract_v_masked(u, v, m, w, lam)
     if w is not None:
         return _ref.huber_contract_v_masked(u, v, m, w, lam)
     return _ref.huber_contract_v(u, v, m, lam)
@@ -44,20 +87,67 @@ def huber_contract_v(u, v, m, lam, *, w=None, impl: str = "auto") -> Array:
 
 def huber_contract_u(u, v, m, lam, *, w=None, impl: str = "auto") -> Array:
     """(m, r) = Psi V,  Psi = clip(M - U V^T, +-lam); masked when ``w``."""
-    if _resolve(impl) == "pallas":
-        if w is not None:
-            return _hc.huber_contract_u_masked(u, v, m, w, lam)
-        return _hc.huber_contract_u(u, v, m, lam)
+    if resolve_impl(impl) == "pallas":
+        if w is None:
+            return _hc.huber_contract_u(u, v, m, lam)
+        if bitmask.is_packed(w):
+            return _hc.huber_contract_u_packed(u, v, m, w, lam)
+        return _hc.huber_contract_u_masked(u, v, m, w, lam)
     if w is not None:
         return _ref.huber_contract_u_masked(u, v, m, w, lam)
     return _ref.huber_contract_u(u, v, m, lam)
 
 
+def huber_dual_contract(
+    u, v, m, lam, *, w=None, impl: str = "auto"
+) -> tuple[Array, Array, Array, Array]:
+    """The fused round primitive: one streamed pass over ``M`` emitting
+    ``(Psi^T U, Psi V, H_lam(R_W), ||Psi||_F^2)`` -- both contractions plus
+    the round diagnostics (DESIGN.md Sec. 12).  Masked when ``w``.
+
+    Past the resident-out_v VMEM bound the single fused pass degrades
+    gracefully to two streaming passes (``huber_contract_v`` +
+    ``huber_contract_u_diag``) with identical semantics.
+    """
+    if resolve_impl(impl) == "pallas":
+        if not _out_v_fits(v, u):
+            cv = huber_contract_v(u, v, m, lam, w=w, impl=impl)
+            cu, obj, psi2 = huber_contract_u_diag(u, v, m, lam, w=w,
+                                                  impl=impl)
+            return cv, cu, obj, psi2
+        if w is None:
+            return _hc.huber_dual_contract(u, v, m, lam)
+        return _hc.huber_dual_contract_masked(u, v, m, w, lam)
+    if w is not None:
+        return _ref.huber_dual_contract_masked(u, v, m, w, lam)
+    return _ref.huber_dual_contract(u, v, m, lam)
+
+
+def huber_contract_u_diag(
+    u, v, m, lam, *, w=None, impl: str = "auto"
+) -> tuple[Array, Array, Array]:
+    """(Psi V, H_lam(R_W), ||Psi||_F^2) in one pass: the U-step contraction
+    with the epilogue diagnostics, no (n, r) output."""
+    if resolve_impl(impl) == "pallas":
+        if w is None:
+            return _hc.huber_contract_u_diag(u, v, m, lam)
+        return _hc.huber_contract_u_diag_masked(u, v, m, w, lam)
+    cv, cu, obj, psi2 = (
+        _ref.huber_dual_contract(u, v, m, lam)
+        if w is None
+        else _ref.huber_dual_contract_masked(u, v, m, w, lam)
+    )
+    del cv  # the ref fused oracle shares one Psi; XLA DCEs the unused gemm
+    return cu, obj, psi2
+
+
 def residual_shrink(u, v, m, lam, *, w=None, impl: str = "auto") -> Array:
     """(m, n) = soft_threshold(M - U V^T, lam); masked when ``w``."""
-    if _resolve(impl) == "pallas":
+    if resolve_impl(impl) == "pallas":
         if w is not None:
-            return _sh.residual_shrink_masked(u, v, m, w, lam)
+            return _sh.residual_shrink_masked(
+                u, v, m, bitmask.resolve_mask(w, m.shape[-1]), lam
+            )
         return _sh.residual_shrink(u, v, m, lam)
     if w is not None:
         return _ref.residual_shrink_masked(u, v, m, w, lam)
@@ -66,11 +156,14 @@ def residual_shrink(u, v, m, lam, *, w=None, impl: str = "auto") -> Array:
 
 def residual_shrink_psi(u, v, m, lam, *, w=None, impl: str = "auto"):
     """((m,n) S, (m,n) Psi) in one pass; masked when ``w``."""
-    if _resolve(impl) == "pallas":
+    if resolve_impl(impl) == "pallas":
         if w is not None:
-            return _sh.residual_shrink_psi_masked(u, v, m, w, lam)
+            return _sh.residual_shrink_psi_masked(
+                u, v, m, bitmask.resolve_mask(w, m.shape[-1]), lam
+            )
         return _sh.residual_shrink_psi(u, v, m, lam)
     if w is not None:
+        w = bitmask.resolve_mask(w, m.shape[-1])
         s = _ref.residual_shrink_masked(u, v, m, w, lam)
         psi = _ref.residual_clip_masked(u, v, m, w, lam)
         return s, psi

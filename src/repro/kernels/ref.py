@@ -9,17 +9,35 @@ Notation (paper Sec. 2.2):
     R   = M - U V^T                    (residual)
     S   = soft_threshold(R, lam)       (Eq. 16 -- sparse component)
     Psi = clip(R, -lam, lam) = R - S   (H'_lam(R), the Huber derivative)
+
+Compute plane: all oracles accumulate in float32 regardless of ``M``'s
+storage dtype (the bf16 data plane stores ``M`` half-width; the factors and
+every output stay f32), matching the kernels' ``preferred_element_type``.
+
+Layout note: the (n, r) contraction is computed as ``(U^T Psi)^T`` rather
+than ``Psi^T U``.  The two are the same contraction over the same (m) axis,
+but the former keeps both gemm operands in their natural row-major layout
+-- XLA:CPU otherwise materializes a full (m, n) transpose of Psi (measured
+3-4x slower), and on TPU it is what the tiled kernel computes anyway.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import bitmask
+
 Array = jax.Array
 
 
 def _residual(u: Array, v: Array, m: Array) -> Array:
-    return m - (u @ v.T).astype(m.dtype)
+    """R = M - U V^T in f32 (bf16 ``m`` is upcast; f32 is bit-unchanged)."""
+    return m.astype(jnp.float32) - (u @ v.T).astype(jnp.float32)
+
+
+def _dense_w(w: Array, n: int) -> Array:
+    """Dense f32 view of a (maybe bit-packed) observation mask."""
+    return bitmask.resolve_mask(w, n)
 
 
 def residual_shrink(u: Array, v: Array, m: Array, lam: float) -> Array:
@@ -41,7 +59,7 @@ def huber_contract_v(u: Array, v: Array, m: Array, lam: float) -> Array:
       * Huber GD:          grad_V h = rho V - Psi^T U
     """
     psi = residual_clip(u, v, m, lam)
-    return (psi.T @ u).astype(u.dtype)
+    return (u.T.astype(jnp.float32) @ psi).T.astype(u.dtype)
 
 
 def huber_contract_u(u: Array, v: Array, m: Array, lam: float) -> Array:
@@ -50,7 +68,7 @@ def huber_contract_u(u: Array, v: Array, m: Array, lam: float) -> Array:
     grad_U L_i = -(Psi V) + (n_i/n) rho U   (paper Eq. 55/59).
     """
     psi = residual_clip(u, v, m, lam)
-    return (psi @ v).astype(u.dtype)
+    return (psi @ v.astype(jnp.float32)).astype(u.dtype)
 
 
 def huber_contract_uv(
@@ -58,7 +76,41 @@ def huber_contract_uv(
 ) -> tuple[Array, Array]:
     """Both contractions from one Psi (single residual materialization)."""
     psi = residual_clip(u, v, m, lam)
-    return (psi.T @ u).astype(u.dtype), (psi @ v).astype(u.dtype)
+    return (
+        (u.T.astype(jnp.float32) @ psi).T.astype(u.dtype),
+        (psi @ v.astype(jnp.float32)).astype(u.dtype),
+    )
+
+
+def _huber_sum(r: Array, lam: Array | float) -> Array:
+    """Huber loss H_lam summed over an f32 residual plane."""
+    a = jnp.abs(r)
+    lam = jnp.asarray(lam, jnp.float32)
+    return jnp.sum(
+        jnp.where(a <= lam, 0.5 * r * r, lam * a - 0.5 * lam * lam)
+    )
+
+
+def huber_dual_contract(
+    u: Array, v: Array, m: Array, lam: float
+) -> tuple[Array, Array, Array, Array]:
+    """The fused round primitive: one streamed pass over ``M`` emitting
+
+        out_v = Psi^T U            (n, r)  -- the inner-solve contraction
+        out_u = Psi V              (m, r)  -- the U-step contraction
+        obj   = H_lam(M - U V^T)   ()      -- Huber objective data term
+        psi2  = ||Psi||_F^2        ()      -- clipped-residual energy
+
+    All four share one residual materialization; the f32 outputs are
+    bit-exact equal to composing :func:`huber_contract_v`,
+    :func:`huber_contract_u` and the separate loss reductions (identical
+    expressions over the identical Psi).
+    """
+    r = _residual(u, v, m)
+    psi = jnp.clip(r, -lam, lam)
+    out_v = (u.T.astype(jnp.float32) @ psi).T.astype(u.dtype)
+    out_u = (psi @ v.astype(jnp.float32)).astype(u.dtype)
+    return out_v, out_u, _huber_sum(r, lam), jnp.sum(psi * psi)
 
 
 # ---------------------------------------------------------------------------
@@ -66,29 +118,47 @@ def huber_contract_uv(
 #     Psi_W = W * clip(M - U V^T, +-lam)     (zero outside Omega)
 #     S_W   = W * soft_threshold(M - U V^T, lam)
 # With an all-ones W every masked oracle is bit-exact equal to its unmasked
-# counterpart (multiplication by 1.0f is the identity in IEEE-754).
+# counterpart (multiplication by 1.0f is the identity in IEEE-754).  ``w``
+# may be a dense 0/1 plane or a bit-packed uint8 plane (8 cols/byte, see
+# ``kernels.bitmask``); the packed form unpacks to the identical dense mask.
 # ---------------------------------------------------------------------------
 def residual_clip_masked(u: Array, v: Array, m: Array, w: Array,
                          lam: float) -> Array:
     """Psi_W = W * clip(M - U V^T, [-lam, lam])."""
-    return w * residual_clip(u, v, m, lam)
+    return _dense_w(w, m.shape[-1]) * residual_clip(u, v, m, lam)
 
 
 def residual_shrink_masked(u: Array, v: Array, m: Array, w: Array,
                            lam: float) -> Array:
     """S_W = W * soft_threshold(M - U V^T, lam)."""
-    return w * residual_shrink(u, v, m, lam)
+    return _dense_w(w, m.shape[-1]) * residual_shrink(u, v, m, lam)
 
 
 def huber_contract_v_masked(u: Array, v: Array, m: Array, w: Array,
                             lam: float) -> Array:
     """Psi_W^T U: the masked (n, r) inner-solve contraction."""
     psi = residual_clip_masked(u, v, m, w, lam)
-    return (psi.T @ u).astype(u.dtype)
+    return (u.T.astype(jnp.float32) @ psi).T.astype(u.dtype)
 
 
 def huber_contract_u_masked(u: Array, v: Array, m: Array, w: Array,
                             lam: float) -> Array:
     """Psi_W V: the masked (m, r) outer-step contraction."""
     psi = residual_clip_masked(u, v, m, w, lam)
-    return (psi @ v).astype(u.dtype)
+    return (psi @ v.astype(jnp.float32)).astype(u.dtype)
+
+
+def huber_dual_contract_masked(
+    u: Array, v: Array, m: Array, w: Array, lam: float
+) -> tuple[Array, Array, Array, Array]:
+    """Masked fused round primitive (see :func:`huber_dual_contract`):
+
+        out_v = Psi_W^T U,  out_u = Psi_W V,
+        obj   = H_lam(W * (M - U V^T))  (observed entries only; H_lam(0)=0),
+        psi2  = ||Psi_W||_F^2.
+    """
+    rw = _dense_w(w, m.shape[-1]) * _residual(u, v, m)
+    psi = jnp.clip(rw, -lam, lam)
+    out_v = (u.T.astype(jnp.float32) @ psi).T.astype(u.dtype)
+    out_u = (psi @ v.astype(jnp.float32)).astype(u.dtype)
+    return out_v, out_u, _huber_sum(rw, lam), jnp.sum(psi * psi)

@@ -8,6 +8,13 @@ residual itself never round-trips through HBM.  Optionally also emits
 ``Psi = clip(M - U V^T, +-lam) = residual - S`` from the same tile (used
 when the caller wants both the sparse estimate and the Huber derivative,
 e.g. the final DCF-PCA output step).
+
+Compact data plane: a bfloat16 ``M`` is upcast per-tile (every epilogue
+computes in f32 -- see the ``.astype(jnp.float32)`` on the data tile).
+Bit-packed masks are unpacked once at the ``kernels.ops`` dispatch layer
+before reaching these kernels: shrinkage runs once per *solve* (the
+finalize step), not per round, so its mask traffic is not on the
+steady-state path the packed plane optimizes (DESIGN.md Sec. 12).
 """
 from __future__ import annotations
 

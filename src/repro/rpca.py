@@ -30,7 +30,7 @@ as thin shims over this front door and stay bit-exact.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import TYPE_CHECKING, Any, Callable, Sequence
 
 import jax
@@ -92,6 +92,11 @@ class RPCASpec:
                        device-mesh placement for the SPMD engine; a
                        non-None ``mesh`` makes ``method="auto"`` pick
                        ``"dcf_sharded"``.
+    ``dtype``          storage dtype for the data plane: ``jnp.bfloat16``
+                       halves the observed matrix's memory traffic while
+                       factors, accumulations and outputs stay f32
+                       (``None`` keeps ``m_obs``'s dtype; bf16 input is
+                       also accepted directly).
     """
 
     m_obs: Array
@@ -104,6 +109,7 @@ class RPCASpec:
     mesh: Any | None = None
     data_axes: tuple[str, ...] = ("data",)
     model_axis: str | None = None
+    dtype: Any | None = None
 
     @property
     def batched(self) -> bool:
@@ -192,6 +198,10 @@ class SolverCaps:
     batchable: bool = True
     needs_rank: bool = False
     supports_service: bool = False
+    # Accepts a low-precision (bf16/f16) data plane for M; the factorized
+    # solvers iterate f32 factors over it, while the convex SVD solvers
+    # carry data-dtype (L, S) iterates and would fail deep inside the scan.
+    supports_lowp: bool = False
 
 
 @dataclass(frozen=True)
@@ -285,9 +295,18 @@ def _unsupported(name: str, feature: str, flag: str) -> ValueError:
     )
 
 
+def _is_lowp(dtype: Any) -> bool:
+    return dtype in (jnp.bfloat16, jnp.float16)
+
+
 def _check_caps(entry: SolverEntry, spec: RPCASpec) -> None:
     """Eager feature x method validation with uniform messages."""
     caps = entry.caps
+    if _is_lowp(spec.m_obs.dtype) and not caps.supports_lowp:
+        raise _unsupported(
+            entry.name, "low-precision (bf16/f16) data planes",
+            "supports_lowp",
+        )
     if spec.mask is not None and not caps.supports_mask:
         raise _unsupported(entry.name, "observation masks", "supports_mask")
     if spec.num_clients is not None and not caps.supports_clients:
@@ -325,10 +344,14 @@ def auto_method(spec: RPCASpec, cfg: Any = None) -> str:
     3. a factorized config was passed (``cfg`` carries a ``rank``) ->
        ``"cf"`` regardless of size (the caller pinned the solver family;
        auto must not route their DCFConfig into a convex method);
-    4. a rank is known from the spec and one SVD would cost more than
+    4. a low-precision (bf16) data plane -> ``"cf"`` (the factorized
+       family iterates f32 factors over a compact M; the convex SVD
+       solvers can't -- a rank is then required, with an eager error
+       otherwise);
+    5. a rank is known from the spec and one SVD would cost more than
        :data:`SVD_COST_THRESHOLD` flops -> ``"cf"`` (factorized,
        SVD-free);
-    5. otherwise                    -> ``"ialm"`` (exact convex baseline;
+    6. otherwise                    -> ``"ialm"`` (exact convex baseline;
        small problems, no rank needed).
     """
     if spec.mesh is not None:
@@ -336,6 +359,14 @@ def auto_method(spec: RPCASpec, cfg: Any = None) -> str:
     if spec.participation is not None or spec.num_clients is not None:
         return "dcf"
     if cfg is not None and getattr(cfg, "rank", None) is not None:
+        return "cf"
+    if _is_lowp(spec.m_obs.dtype):
+        if spec.rank is None:
+            raise ValueError(
+                "a low-precision (bf16/f16) data plane needs a factorized "
+                "method: set RPCASpec.rank (auto then picks 'cf') or cast "
+                "m_obs to float32 for the convex solvers"
+            )
         return "cf"
     m, n = spec.shape
     if spec.rank is not None and m * n * min(m, n) > SVD_COST_THRESHOLD:
@@ -380,6 +411,8 @@ def solve(
         spec = spec_or_matrix
     else:
         spec = RPCASpec(jnp.asarray(spec_or_matrix), **spec_kwargs)
+    if spec.dtype is not None and spec.m_obs.dtype != spec.dtype:
+        spec = replace(spec, m_obs=spec.m_obs.astype(spec.dtype))
     spec.validate()
     run_cfg = _rt().resolve_run(run)
     if method == "auto":

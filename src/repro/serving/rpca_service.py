@@ -121,7 +121,12 @@ class _Lane:
             )
             return carry, t, done, rounds, hit
 
-        self._tick = jax.jit(tick)
+        # Donate the per-tick state (carry + slot counters): every tick
+        # consumes the previous tick's buffers, so XLA reuses them in place
+        # instead of double-buffering the (slots, m, n) residual planes of
+        # the convex lanes on every call.  The problem pytree (arg 0) is
+        # NOT donated -- it persists across ticks and submits write into it.
+        self._tick = jax.jit(tick, donate_argnums=(1, 2, 3, 4, 5))
         self._write_slot = jax.jit(
             lambda batched, single, i: jax.tree.map(
                 lambda b_, x: b_.at[i].set(x), batched, single

@@ -71,3 +71,163 @@ def test_ref_impl_dispatch():
     np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
     with pytest.raises(ValueError):
         ops.huber_contract_u(u, v, mat, 0.5, impl="bogus")
+
+
+# ---------------------------------------------------------------------------
+# Dual contraction + epilogue diagnostics (the fused round primitive)
+# ---------------------------------------------------------------------------
+def _mask(m, n, frac=0.7, seed=7):
+    k = jax.random.PRNGKey(seed)
+    return (jax.random.uniform(k, (m, n)) < frac).astype(jnp.float32)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_dual_contract_matches_oracle(shape):
+    m, n, r = shape
+    u, v, mat = _problem(m, n, r, jnp.float32)
+    lam = 0.9
+    got = ops.huber_dual_contract(u, v, mat, lam, impl="pallas")
+    want = ref.huber_dual_contract(u, v, mat, lam)
+    for g, w_, tol in zip(got, want, (2e-5, 2e-5, None, None)):
+        if tol is None:  # scalar reductions: relative tolerance only
+            np.testing.assert_allclose(g, w_, rtol=1e-4)
+        else:
+            np.testing.assert_allclose(g, w_, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_dual_contract_masked_and_packed(shape):
+    from repro.kernels import bitmask
+
+    m, n, r = shape
+    u, v, mat = _problem(m, n, r, jnp.float32)
+    w = _mask(m, n)
+    wp = bitmask.pack_mask(w)
+    lam = 0.9
+    want = ref.huber_dual_contract_masked(u, v, mat, w, lam)
+    dense = ops.huber_dual_contract(u, v, mat, lam, w=w, impl="pallas")
+    packed = ops.huber_dual_contract(u, v, mat, lam, w=wp, impl="pallas")
+    packed_ref = ops.huber_dual_contract(u, v, mat, lam, w=wp, impl="ref")
+    for d, p, pr, w_ in zip(dense, packed, packed_ref, want):
+        # packed and dense masks feed the identical epilogue
+        np.testing.assert_allclose(p, d, rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(d), np.asarray(w_),
+                                   rtol=1e-4, atol=2e-5)
+        np.testing.assert_allclose(np.asarray(pr), np.asarray(w_),
+                                   rtol=1e-4, atol=2e-5)
+
+
+def test_dual_contract_f32_bit_exact_vs_unfused_oracles():
+    """The fused ref primitive must equal the unfused oracle composition
+    bit-for-bit in f32 (same expressions over the same Psi)."""
+    u, v, mat = _problem(300, 200, 17, jnp.float32)
+    w = _mask(300, 200)
+    for lam in (0.0, 0.9, 5.0):
+        cv, cu, obj, psi2 = ref.huber_dual_contract(u, v, mat, lam)
+        assert np.array_equal(cv, ref.huber_contract_v(u, v, mat, lam))
+        assert np.array_equal(cu, ref.huber_contract_u(u, v, mat, lam))
+        cvm, cum, _, _ = ref.huber_dual_contract_masked(u, v, mat, w, lam)
+        assert np.array_equal(
+            cvm, ref.huber_contract_v_masked(u, v, mat, w, lam)
+        )
+        assert np.array_equal(
+            cum, ref.huber_contract_u_masked(u, v, mat, w, lam)
+        )
+
+
+def test_dual_contract_diag_oracle_values():
+    """Epilogue scalars must equal the core-ops loss definitions."""
+    from repro.core import ops as core_ops
+
+    u, v, mat = _problem(192, 160, 9, jnp.float32)
+    w = _mask(192, 160)
+    lam = 1.1
+    _, _, obj, psi2 = ref.huber_dual_contract(u, v, mat, lam)
+    resid = mat - u @ v.T
+    np.testing.assert_allclose(obj, core_ops.huber_loss(resid, lam),
+                               rtol=1e-6)
+    np.testing.assert_allclose(
+        psi2, jnp.sum(jnp.clip(resid, -lam, lam) ** 2), rtol=1e-6
+    )
+    _, _, objm, psi2m = ref.huber_dual_contract_masked(u, v, mat, w, lam)
+    np.testing.assert_allclose(
+        objm, core_ops.masked_huber_loss(resid, lam, w), rtol=1e-6
+    )
+
+
+@pytest.mark.parametrize("masked", [False, True])
+def test_dual_contract_bf16_data_plane(masked):
+    """bf16 M storage: f32 accumulation keeps the result within bf16
+    input-rounding distance of the f32 result."""
+    m, n, r = 256, 192, 8
+    u, v, mat = _problem(m, n, r, jnp.float32)
+    w = _mask(m, n) if masked else None
+    lam = 0.9
+    f32 = ops.huber_dual_contract(u, v, mat, lam, w=w, impl="pallas")
+    bf16 = ops.huber_dual_contract(u, v, mat.astype(jnp.bfloat16), lam,
+                                   w=w, impl="pallas")
+    bf16_ref = ops.huber_dual_contract(u, v, mat.astype(jnp.bfloat16), lam,
+                                       w=w, impl="ref")
+    for a, b, c in zip(f32, bf16, bf16_ref):
+        assert jnp.asarray(b).dtype == jnp.float32
+        # pallas and ref agree tightly on the same bf16 input...
+        np.testing.assert_allclose(np.asarray(b), np.asarray(c),
+                                   rtol=1e-4, atol=2e-5)
+        # ...and sit within the bf16 quantization of M from the f32 result.
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-2, atol=0.5)
+
+
+def test_dual_contract_block_size_invariance():
+    from repro.kernels import huber_contract as hc
+
+    u, v, mat = _problem(300, 260, 12, jnp.float32)
+    lam = 1.1
+    base = hc.huber_dual_contract(u, v, mat, lam, bm=256, bn=256)
+    for bm, bn in [(128, 128), (256, 128), (128, 512)]:
+        other = hc.huber_dual_contract(u, v, mat, lam, bm=bm, bn=bn)
+        for a, b in zip(base, other):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_contract_u_diag_matches_dual():
+    u, v, mat = _problem(200, 150, 6, jnp.float32)
+    w = _mask(200, 150)
+    lam = 0.7
+    for w_ in (None, w):
+        cu, obj, psi2 = ops.huber_contract_u_diag(u, v, mat, lam, w=w_,
+                                                  impl="pallas")
+        _, cu2, obj2, psi22 = ops.huber_dual_contract(u, v, mat, lam, w=w_,
+                                                      impl="pallas")
+        np.testing.assert_allclose(cu, cu2, rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(obj, obj2, rtol=1e-6)
+        np.testing.assert_allclose(psi2, psi22, rtol=1e-6)
+
+
+def test_resolve_impl_cached_and_validated():
+    assert ops.resolve_impl("ref") == "ref"
+    assert ops.resolve_impl("pallas") == "pallas"
+    assert ops.resolve_impl("auto") in ("pallas", "ref")
+    with pytest.raises(ValueError):
+        ops.resolve_impl("bogus")
+
+
+def test_resident_out_v_fallback_paths(monkeypatch):
+    """Past the resident-out_v VMEM bound the pallas dispatch must fall
+    back to streaming kernels with identical results (large-n safety)."""
+    from repro.kernels import bitmask
+
+    u, v, mat = _problem(128, 200, 9, jnp.float32)
+    w = _mask(128, 200)
+    wp = bitmask.pack_mask(w)
+    lam = 0.8
+    want_dual = ops.huber_dual_contract(u, v, mat, lam, w=w, impl="pallas")
+    want_cv = ops.huber_contract_v(u, v, mat, lam, w=wp, impl="pallas")
+    monkeypatch.setattr(ops, "RESIDENT_OUT_V_BYTES", 1)  # force fallback
+    got_dual = ops.huber_dual_contract(u, v, mat, lam, w=w, impl="pallas")
+    got_cv = ops.huber_contract_v(u, v, mat, lam, w=wp, impl="pallas")
+    for a, b in zip(want_dual, got_dual):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(want_cv), np.asarray(got_cv),
+                               rtol=1e-5, atol=1e-5)

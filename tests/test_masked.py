@@ -367,3 +367,170 @@ def test_service_evolving_mask_warm_refresh():
     assert r1.rounds < r0.rounds  # warm refresh skips the early rounds
     err = completion_errors(r1.l, p.l0, new_mask)
     assert float(err.observed) < 1e-2
+
+
+# ---------------------------------------------------------------------------
+# Compact data plane: bit-packed masks + bf16 storage (DESIGN.md Sec. 12)
+# ---------------------------------------------------------------------------
+def test_pack_mask_round_trip_exact():
+    from repro.core.problems import pack_mask, unpack_mask
+
+    for m, n in [(64, 48), (300, 200), (17, 13), (8, 8), (5, 129)]:
+        w = (jax.random.uniform(jax.random.PRNGKey(m * n), (m, n)) < 0.6
+             ).astype(jnp.float32)
+        p = pack_mask(w)
+        assert p.dtype == jnp.uint8
+        assert p.shape == (m, -(-n // 8))
+        assert np.array_equal(unpack_mask(p, n), w)
+    # client-blocked leading axis rides along
+    wb = (jax.random.uniform(jax.random.PRNGKey(9), (4, 32, 50)) < 0.5
+          ).astype(jnp.float32)
+    assert np.array_equal(unpack_mask(pack_mask(wb), 50), wb)
+    # all-ones and all-zeros corners
+    ones = jnp.ones((16, 20))
+    assert np.array_equal(unpack_mask(pack_mask(ones), 20), ones)
+    zeros = jnp.zeros((16, 20))
+    assert np.array_equal(unpack_mask(pack_mask(zeros), 20), zeros)
+
+
+def test_packed_mask_solve_bit_exact_vs_dense():
+    """cfg.pack_mask stores the identical Omega (exact round trip), so the
+    whole solve is bit-for-bit the dense-mask solve -- cf and dcf."""
+    p = generate_problem(jax.random.PRNGKey(3), 60, 56, 3, 0.05,
+                         observed_frac=0.7)
+    dense = DCFConfig(rank=3, outer_iters=8, track_objective=True)
+    packed = DCFConfig(rank=3, outer_iters=8, track_objective=True,
+                       pack_mask=True)
+    a = cf_pca(p.m_obs, dense, mask=p.mask)
+    b = cf_pca(p.m_obs, packed, mask=p.mask)
+    assert np.array_equal(np.asarray(a.l), np.asarray(b.l))
+    assert np.array_equal(np.asarray(a.s), np.asarray(b.s))
+    assert np.array_equal(np.asarray(a.stats.objective),
+                          np.asarray(b.stats.objective))
+    da = dcf_pca(p.m_obs, dense, 4, mask=p.mask)
+    db = dcf_pca(p.m_obs, packed, 4, mask=p.mask)
+    assert np.array_equal(np.asarray(da.l), np.asarray(db.l))
+    assert np.array_equal(np.asarray(da.s), np.asarray(db.s))
+
+
+def test_packed_mask_ragged_clients():
+    """Packed masks compose with the elastic zero-padded column split."""
+    p = generate_problem(jax.random.PRNGKey(5), 48, 50, 3, 0.05,
+                         observed_frac=0.8)
+    dense = DCFConfig(rank=3, outer_iters=8)
+    packed = DCFConfig(rank=3, outer_iters=8, pack_mask=True)
+    a = dcf_pca(p.m_obs, dense, 4, mask=p.mask)   # 50 % 4 != 0
+    b = dcf_pca(p.m_obs, packed, 4, mask=p.mask)
+    assert np.array_equal(np.asarray(a.l), np.asarray(b.l))
+    assert np.array_equal(np.asarray(a.s), np.asarray(b.s))
+
+
+def test_bf16_data_plane_recovery_bound():
+    """bf16 M storage: recovery error within 5x of the f32 solve on the
+    seed problem (factors and accumulation stay f32)."""
+    from repro.core import relative_error
+
+    p = generate_problem(jax.random.PRNGKey(0), 96, 96, 4, 0.05)
+    cfg = DCFConfig.tuned(4, outer_iters=120)
+    r32 = cf_pca(p.m_obs, cfg)
+    r16 = cf_pca(p.m_obs.astype(jnp.bfloat16), cfg)
+    assert r16.l.dtype == jnp.float32  # outputs stay f32
+    e32 = float(relative_error(r32.l, r32.s, p.l0, p.s0))
+    e16 = float(relative_error(r16.l, r16.s, p.l0, p.s0))
+    # bf16 input rounding floors the achievable error near bf16 eps; the
+    # acceptance bound is 5x the f32 error (or the bf16 floor, whichever
+    # is larger).
+    assert e16 < max(5.0 * e32, 2e-2), (e16, e32)
+
+
+def test_bf16_masked_solve_runs_and_completes():
+    p = generate_problem(jax.random.PRNGKey(1), 64, 64, 3, 0.05,
+                         observed_frac=0.8)
+    cfg = DCFConfig.masked(3, observed_frac=0.8, outer_iters=200,
+                           pack_mask=True)
+    r = dcf_pca(p.m_obs.astype(jnp.bfloat16), cfg, 4, mask=p.mask)
+    err = completion_errors(r.l, p.l0, p.mask)
+    assert float(err.observed) < 5e-2
+
+
+def test_front_door_dtype_coercion():
+    from repro import rpca
+
+    p = generate_problem(jax.random.PRNGKey(2), 48, 48, 3, 0.05)
+    cfg = DCFConfig.tuned(3, outer_iters=10)
+    res = rpca.solve(rpca.RPCASpec(p.m_obs, dtype=jnp.bfloat16),
+                     method="cf", cfg=cfg)
+    assert res.spec.m_obs.dtype == jnp.bfloat16
+    assert res.l.dtype == jnp.float32
+
+
+def test_robust_lam_sampled_close_to_exact():
+    p = generate_problem(jax.random.PRNGKey(4), 128, 96, 4, 0.1,
+                         observed_frac=0.7)
+    exact = float(robust_lam(p.m_obs, mask=p.mask))
+    sampled = float(robust_lam(p.m_obs, mask=p.mask, sample=4096))
+    assert abs(sampled - exact) < 0.15 * exact, (sampled, exact)
+    # packed mask accepted too
+    from repro.core.problems import pack_mask
+    packed = float(robust_lam(p.m_obs, mask=pack_mask(p.mask)))
+    assert packed == exact
+
+
+def test_dense_uint8_mask_rejected_eagerly():
+    """A dense uint8 mask would be misread as a bit-packed plane by the
+    kernel layer -- the boundary validation must reject it."""
+    p = generate_problem(jax.random.PRNGKey(6), 40, 40, 3, 0.05,
+                         observed_frac=0.8)
+    with pytest.raises(ValueError, match="bit-packed"):
+        cf_pca(p.m_obs, DCFConfig(rank=3, outer_iters=4),
+               mask=p.mask.astype(jnp.uint8))
+
+
+def test_robust_lam_sample_stride_sweeps_all_columns():
+    """The subsample stride must stay coprime to the column count: a
+    column-burst mask concentrated on a few columns would otherwise bias
+    the MAD arbitrarily (stride | n visits n/gcd columns only)."""
+    # 2048 cols, sample -> naive stride 64 | 2048; coprime bump required.
+    m, n = 64, 2048
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, n))
+    exact = float(robust_lam(x))
+    sampled = float(robust_lam(x, sample=2048))
+    assert abs(sampled - exact) < 0.2 * exact
+    # column-structured mask: only even columns observed; a stride-aliased
+    # subsample could land entirely on unobserved columns.
+    wcol = jnp.tile(jnp.arange(n) % 2 == 0, (m, 1)).astype(jnp.float32)
+    exact_m = float(robust_lam(x, mask=wcol))
+    sampled_m = float(robust_lam(x, mask=wcol, sample=2048))
+    assert abs(sampled_m - exact_m) < 0.25 * exact_m
+
+
+def test_pack_mask_sharded_engine_rejected():
+    from repro.core import dcf_pca_sharded
+    from repro.launch.mesh import make_compat_mesh
+
+    p = generate_problem(jax.random.PRNGKey(1), 32, 32, 2, 0.05,
+                         observed_frac=0.8)
+    mesh = make_compat_mesh((1,), ("data",))
+    cfg = DCFConfig(rank=2, outer_iters=2, pack_mask=True)
+    with pytest.raises(ValueError, match="pack_mask"):
+        dcf_pca_sharded(p.m_obs, cfg, mesh, mask=p.mask)
+    # maskless: nothing to pack, the shared config stays usable
+    r = dcf_pca_sharded(p.m_obs, cfg, mesh)
+    assert r.l.shape == (32, 32)
+
+
+def test_lowp_data_plane_capability_gated():
+    """bf16 data planes are a factorized-family capability: convex methods
+    reject eagerly with the uniform message, auto routes by rank."""
+    from repro import rpca
+
+    p = generate_problem(jax.random.PRNGKey(7), 40, 40, 3, 0.05)
+    m16 = p.m_obs.astype(jnp.bfloat16)
+    with pytest.raises(ValueError, match="low-precision"):
+        rpca.solve(m16, method="ialm")
+    with pytest.raises(ValueError, match="low-precision"):
+        rpca.solve(m16, method="apgm")
+    # auto: bf16 + rank -> cf; bf16 without rank -> eager guidance
+    assert rpca.auto_method(rpca.RPCASpec(m16, rank=3)) == "cf"
+    with pytest.raises(ValueError, match="rank"):
+        rpca.auto_method(rpca.RPCASpec(m16))

@@ -98,3 +98,25 @@ def test_objective_monotone_descent(problem):
     assert float(h[-1]) < float(h[0])
     increases = jnp.maximum(h[1:] - h[:-1], 0.0)
     assert float(increases.max()) < 0.05 * float(h[0] - h[-1])
+
+
+def test_fused_levels_recover_equally(problem):
+    """The three fusion levels of the round (off / diag / dual) must all
+    reach the preset's recovery quality; 'off' and 'diag' are the same
+    factor math bit-for-bit (diag only adds epilogue diagnostics)."""
+    import dataclasses
+
+    base = DCFConfig.tuned(RANK, outer_iters=80, track_objective=True)
+    res = {}
+    for level in ("off", "diag", "dual"):
+        cfg = dataclasses.replace(base, fused=level)
+        r = dcf_pca(problem.m_obs, cfg, num_clients=8)
+        res[level] = r
+        err = float(relative_error(r.l, r.s, problem.l0, problem.s0))
+        assert err < 1e-3, (level, err)
+        h = r.history
+        assert bool(jnp.all(jnp.isfinite(h))), level
+        assert float(h[-1]) < float(h[0]), level  # objective descends
+    # identical factor math: diag == off exactly
+    assert (res["off"].l == res["diag"].l).all()
+    assert (res["off"].s == res["diag"].s).all()
