@@ -1,0 +1,150 @@
+"""AOT dispatch benchmark: the shape-bucketed executable cache vs plain jit.
+
+On the masked 2048 x 2048 rank-64 acceptance problem (20-round cf
+refresh solve; ``RPCA_BENCH_FAST=1`` shrinks it for smoke runs),
+measures the three dispatch regimes of DESIGN.md Sec. 13:
+
+``uncached``  the regular ``jax.jit`` front door -- ``cold_ms`` pays
+              trace + XLA compile on the first call at a shape,
+              ``warm_ms`` is the steady-state jit-cache dispatch;
+``cached``    ``solve(..., compile_policy="aot")`` -- ``cold_ms`` pays
+              the one-time AOT lower + compile for the bucket,
+              ``warm_ms`` re-dispatches the *same* shape, ``drift_ms``
+              dispatches a *different true shape in the same bucket*
+              (the serving case: tenant shapes drift, executables
+              must not);
+``dispatch``  the derived gates -- ``overhead_frac`` (warm cached over
+              warm uncached, the acceptance bound: < 5% of the 20-round
+              solve), ``warm_xla_compiles`` / ``drift_xla_compiles``
+              (XLA compilations during the warm / drifted dispatch,
+              counted via ``jax.monitoring`` -- both must be exactly 0),
+              and ``cold_over_warm`` (how much wall the cache removes
+              from a fresh-shape arrival, informational on a CPU box,
+              decisive on accelerators where compile dominates).
+
+The warm rows are medians over interleaved repeats so the
+``overhead_frac`` ratio sees the same host noise on both sides; the
+compile counts are deterministic.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro import rpca
+from repro.core import compile_cache as cc
+from repro.core import problems as prob
+from repro.core.factorized import DCFConfig
+
+_XLA_COMPILES = [0]
+
+
+def _count(event: str, duration: float, **kwargs) -> None:
+    if "backend_compile" in event:
+        _XLA_COMPILES[0] += 1
+
+
+jax.monitoring.register_event_duration_secs_listener(_count)
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) * 1e3
+
+
+def _median_interleaved(fns: dict, reps: int = 3) -> dict:
+    """Median wall per labelled thunk, sampled round-robin so host noise
+    hits every variant equally."""
+    samples: dict = {k: [] for k in fns}
+    for _ in range(reps):
+        for k, fn in fns.items():
+            samples[k].append(_timed(fn))
+    return {k: sorted(v)[len(v) // 2] for k, v in samples.items()}
+
+
+def run(m=2048, n=2048, rank=64, rounds=20, observed=0.7):
+    p = prob.generate_problem(
+        jax.random.PRNGKey(0), m, n, rank, 0.1, observed_frac=observed
+    )
+    cfg = DCFConfig.tuned(rank=rank, outer_iters=rounds)
+    m_host = np.asarray(p.m_obs)
+    w_host = np.asarray(p.mask)
+    # A drifted tenant shape inside the same bucket (2048 is a bucket
+    # edge; anything in (1024, 2048] lands back in it).
+    md, nd = m - 1, n - 3
+    m_drift, w_drift = m_host[:md, :nd].copy(), w_host[:md, :nd].copy()
+
+    # Isolated cache: the bench must pay (and measure) its own cold
+    # compile even if the process already warmed the default cache.
+    cache = cc.CompileCache()
+    prev, cc._DEFAULT_CACHE = cc._DEFAULT_CACHE, cache
+    try:
+        return _run_rows(m_host, w_host, m_drift, w_drift, cfg, rank,
+                         cache)
+    finally:
+        cc._DEFAULT_CACHE = prev
+
+
+def _run_rows(m_host, w_host, m_drift, w_drift, cfg, rank, cache):
+    def uncached():
+        return rpca.solve(m_host, method="cf", cfg=cfg, mask=w_host,
+                          rank=rank).l
+
+    def cached(mat=m_host, w=w_host):
+        return rpca.solve(mat, method="cf", cfg=cfg, mask=w, rank=rank,
+                          compile_policy="aot").l
+
+    # First arrivals: both sides pay their compile exactly once.
+    uncached_cold = _timed(uncached)
+    cached_cold = _timed(cached)
+    assert cache.stats.compiles == 1
+
+    warm = _median_interleaved({
+        "uncached": uncached,
+        "cached": cached,
+        "drift": lambda: cached(m_drift, w_drift),
+    })
+
+    before = _XLA_COMPILES[0]
+    jax.block_until_ready(cached())
+    warm_compiles = _XLA_COMPILES[0] - before
+    before = _XLA_COMPILES[0]
+    jax.block_until_ready(cached(m_drift, w_drift))
+    drift_compiles = _XLA_COMPILES[0] - before
+    assert cache.stats.compiles == 1, "same-bucket dispatch recompiled"
+
+    overhead = max(0.0, warm["cached"] / warm["uncached"] - 1.0)
+    rows = [
+        {"bench": "aot_dispatch", "name": "uncached",
+         "cold_ms": uncached_cold, "warm_ms": warm["uncached"]},
+        {"bench": "aot_dispatch", "name": "cached",
+         "cold_ms": cached_cold, "warm_ms": warm["cached"],
+         "drift_ms": warm["drift"]},
+        {"bench": "aot_dispatch", "name": "dispatch",
+         "overhead_frac": overhead,
+         "warm_xla_compiles": warm_compiles,
+         "drift_xla_compiles": drift_compiles,
+         "cold_over_warm": cached_cold / warm["cached"]},
+    ]
+    return rows
+
+
+def main(full=False, fast=None):
+    import os
+
+    if fast is None:
+        fast = os.environ.get("RPCA_BENCH_FAST", "") == "1"
+    rows = run(m=512, n=512, rank=16) if fast else run()
+    for r in rows:
+        extras = {k: v for k, v in r.items() if k not in ("bench", "name")}
+        print(f"aot_dispatch/{r['name']},"
+              + ",".join(f"{k}={v:.4g}" if isinstance(v, float) else
+                         f"{k}={v}" for k, v in extras.items()))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

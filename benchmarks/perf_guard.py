@@ -39,6 +39,9 @@ TRACKED = {
     "fused/pr4_round/hbm_bytes": "max",
     "kernel/huber_contract_v/traffic_ratio": "min",
     "kernel/huber_contract_v_masked/traffic_ratio": "min",
+    "aot/dispatch/overhead_frac": "max",
+    "aot/dispatch/warm_xla_compiles": "max",
+    "aot/dispatch/drift_xla_compiles": "max",
 }
 
 #: Hand-seeded bounds that ``--write-baseline`` must PRESERVE rather than
@@ -54,6 +57,15 @@ TRACKED = {
 FLOOR_OVERRIDES = {
     "fused/speedups/round_wall_speedup": 1.0,
     "fused/speedups/e2e20_speedup": 1.5,
+    # The AOT dispatch gates (ISSUE-6 acceptance).  overhead_frac is a
+    # warm-vs-warm wall ratio -- noisy, so the committed bound is the
+    # acceptance ceiling itself (< 5% of the 20-round solve; with the
+    # 15% tolerance the effective gate is 5.75%), not a lucky
+    # measurement (full-scale runs measure ~0).  The compile counts are
+    # deterministic and gate at exactly zero (0 * (1+tol) == 0).
+    "aot/dispatch/overhead_frac": 0.05,
+    "aot/dispatch/warm_xla_compiles": 0,
+    "aot/dispatch/drift_xla_compiles": 0,
 }
 
 

@@ -15,6 +15,7 @@ HERE = os.path.dirname(os.path.abspath(__file__))
 sys.path.insert(0, os.path.dirname(HERE))
 
 from benchmarks import (  # noqa: E402
+    aot_dispatch_bench,
     api_dispatch_bench,
     elastic_bench,
     fig1_convergence,
@@ -39,6 +40,7 @@ BENCHES = {
     "masked": masked_rpca_bench,
     "elastic": elastic_bench,
     "api": api_dispatch_bench,
+    "aot": aot_dispatch_bench,
     "grad_compress": grad_compress_bench,
     "roofline": roofline_summary,
     "runtime": solver_runtime_bench,

@@ -6,6 +6,13 @@ front door (re-exported here as ``rpca`` / ``RPCASpec`` / ``RPCAResult``
 from repro import rpca
 from repro.core.apgm import APGMConfig, ConvexResult, apgm, apgm_batch
 from repro.core.cf_pca import CFResult, cf_pca, cf_pca_batch
+from repro.core.compile_cache import (
+    CacheStats,
+    CompileCache,
+    CompilePolicy,
+    bucket_shape,
+    default_cache,
+)
 from repro.core.dcf_pca import DCFResult, dcf_pca, dcf_pca_batch, dcf_pca_sharded
 from repro.core.factorized import DCFConfig
 from repro.core.ialm import IALMConfig, ialm, ialm_batch
@@ -36,6 +43,7 @@ from repro.core.runtime import (
     RunConfig,
     SolveStats,
     Solver,
+    driver,
     resolve_run,
     solve_batch,
 )
@@ -69,7 +77,13 @@ __all__ = [
     "RunConfig",
     "SolveStats",
     "Solver",
+    "driver",
     "solve_batch",
+    "CacheStats",
+    "CompileCache",
+    "CompilePolicy",
+    "bucket_shape",
+    "default_cache",
     "CompletionErrors",
     "completion_errors",
     "low_rank_relative_error",

@@ -72,6 +72,11 @@ class APGMProblem(NamedTuple):
     l_init: Array
     s_init: Array
     mask: Array | None = None
+    #: Optional operand override for the l1 weight: the AOT compile cache
+    #: ships the *true*-shape ``1/sqrt(max(m, n))`` here so a bucket-
+    #: padded plane does not leak its padded shape into lam.  ``None``
+    #: (the regular path) keeps the in-init derivation bit-for-bit.
+    lam0: Array | None = None
 
 
 class _Carry(NamedTuple):
@@ -94,11 +99,14 @@ def make_solver(cfg: APGMConfig) -> rt.Solver:
 
     def init(p: APGMProblem) -> _Carry:
         m, n = p.m_obs.shape
-        lam = (
-            jnp.asarray(cfg.lam, p.m_obs.dtype)
-            if cfg.lam is not None
-            else 1.0 / jnp.sqrt(jnp.asarray(float(max(m, n)), p.m_obs.dtype))
-        )
+        if p.lam0 is not None:  # operand override (AOT bucket padding)
+            lam = jnp.asarray(p.lam0, p.m_obs.dtype)
+        elif cfg.lam is not None:
+            lam = jnp.asarray(cfg.lam, p.m_obs.dtype)
+        else:
+            lam = 1.0 / jnp.sqrt(
+                jnp.asarray(float(max(m, n)), p.m_obs.dtype)
+            )
         # _problem zero-fills hidden entries, so p.m_obs is already
         # P_Omega(M) and every norm below is an observed-entry norm.
         norm2 = jnp.linalg.norm(p.m_obs, ord=2)
@@ -159,7 +167,7 @@ def make_solver(cfg: APGMConfig) -> rt.Solver:
     return rt.Solver(init, step, diagnostics, finalize)
 
 
-def _problem(m_obs: Array, warm, mask=None) -> APGMProblem:
+def _problem(m_obs: Array, warm, mask=None, lam0=None) -> APGMProblem:
     if mask is not None:
         # Zero-fill hidden entries up front: the solution must not depend
         # on whatever the caller stored there (sentinels, NaNs, stale
@@ -168,9 +176,11 @@ def _problem(m_obs: Array, warm, mask=None) -> APGMProblem:
         m_obs = mask * m_obs + 0.0
     if warm is None:
         z = jnp.zeros_like(m_obs)
-        return APGMProblem(m_obs=m_obs, l_init=z, s_init=z, mask=mask)
+        return APGMProblem(m_obs=m_obs, l_init=z, s_init=z, mask=mask,
+                           lam0=lam0)
     l0, s0 = warm
-    return APGMProblem(m_obs=m_obs, l_init=l0, s_init=s0, mask=mask)
+    return APGMProblem(m_obs=m_obs, l_init=l0, s_init=s0, mask=mask,
+                       lam0=lam0)
 
 
 @partial(jax.jit, static_argnames=("cfg", "run"))
@@ -259,6 +269,36 @@ def convex_service_hooks(make_solver_fn, problem_cls, problem_fn,
     )
 
 
+def _aot_resolve_cfg(cfg, spec):
+    cfg = cfg if cfg is not None else APGMConfig()
+    _rpca.require_cfg_type("apgm", cfg, APGMConfig)
+    return cfg
+
+
+def _aot_program(cfg, run_cfg):
+    """Bucket-shaped AOT program (see ``ialm._aot_program``): the padded
+    tail is mask-zero so every iterate stays exactly zero there; ``lam0``
+    pins the true-shape threshold unless the config fixed one."""
+    solver = make_solver(cfg)
+    drive = rt.driver(solver, cfg.iters, run_cfg)
+
+    def prog(m_obs, key, mask, warm, lam0):
+        del key  # no random init
+        problem = _problem(
+            m_obs, warm, mask,
+            lam0=None if cfg.lam is not None else lam0,
+        )
+        carry, stats = drive(problem)
+        l, s = solver.finalize(problem, carry)
+        return l, s, None, None, stats
+
+    return prog
+
+
+def _aot_warm_shapes(cfg, m, n):
+    return (("L", (m, n), "(m, n)"), ("S", (m, n), "(m, n)"))
+
+
 _rpca.register_solver(
     "apgm",
     _rpca.SolverCaps(supports_mask=True, supports_factors=False,
@@ -266,6 +306,11 @@ _rpca.register_solver(
     _registry_make,
     service=convex_service_hooks(make_solver, APGMProblem, _problem,
                                  APGMConfig),
+    aot=_rpca.AOTHooks(
+        resolve_cfg=_aot_resolve_cfg,
+        program=_aot_program,
+        warm_shapes=_aot_warm_shapes,
+    ),
 )
 
 

@@ -253,6 +253,37 @@ def _service_warm_layout(cfg, m, n_req):
     )
 
 
+def _aot_resolve_cfg(cfg, spec):
+    cfg = cfg if cfg is not None else _default_cfg(spec)
+    _rpca.require_cfg_type("cf", cfg, fz.DCFConfig)
+    return cfg
+
+
+def _aot_program(cfg, run_cfg):
+    """The bucket-shaped AOT program: mask always present (padding rides
+    it), lam calibrated on-device via the masked robust path -- value-
+    identical to the unpadded calibration because the masked medians
+    ignore mask-zero entries.  A cold start draws its random factors at
+    the bucket shape; the padded factor rows/cols never influence the
+    true block (mask-zero rows drop out of every Gram/contraction)."""
+    solver = make_solver(cfg, with_objective=run_cfg.needs_objective)
+    drive = rt.driver(solver, cfg.outer_iters, run_cfg)
+
+    def prog(m_obs, key, mask, warm, lam0):
+        del lam0  # cf calibrates on-device (robust_lam over the mask)
+        problem = make_problem(m_obs, cfg, key, warm, mask=mask)
+        carry, stats = drive(problem)
+        l, s, u, v = solver.finalize(problem, carry)
+        return l, s, u, v, stats
+
+    return prog
+
+
+def _aot_warm_shapes(cfg, m, n):
+    return (("U", (m, cfg.rank), "(m, rank)"),
+            ("V", (n, cfg.rank), "(n, rank)"))
+
+
 _rpca.register_solver(
     "cf",
     _rpca.SolverCaps(supports_mask=True, supports_factors=True,
@@ -266,6 +297,11 @@ _rpca.register_solver(
         unpack=lambda fin: fin,
         warm_layout=_service_warm_layout,
         cfg_type=fz.DCFConfig,
+    ),
+    aot=_rpca.AOTHooks(
+        resolve_cfg=_aot_resolve_cfg,
+        program=_aot_program,
+        warm_shapes=_aot_warm_shapes,
     ),
 )
 

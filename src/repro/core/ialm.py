@@ -45,12 +45,19 @@ class IALMProblem(NamedTuple):
     completion variant: the constraint ``L + S = M`` is enforced on Omega
     only -- off-mask, S absorbs the residual (the Lin et al. trick), so the
     SVT step still sees a dense argument while the hidden entries of M
-    never influence the solution."""
+    never influence the solution.
+
+    ``lam0`` optionally ships the l1 weight as an operand instead of the
+    shape-derived default -- the AOT compile cache uses it to pin the
+    *true*-shape ``1/sqrt(max(m, n))`` on a bucket-padded plane (the
+    padded shape would otherwise leak into lam).  ``None`` (the regular
+    path) keeps the in-init derivation bit-for-bit."""
 
     m_obs: Array
     l_init: Array
     s_init: Array
     mask: Array | None = None
+    lam0: Array | None = None
 
 
 class _Carry(NamedTuple):
@@ -69,11 +76,14 @@ def make_solver(cfg: IALMConfig) -> rt.Solver:
 
     def init(p: IALMProblem) -> _Carry:
         m, n = p.m_obs.shape
-        lam = (
-            jnp.asarray(cfg.lam, p.m_obs.dtype)
-            if cfg.lam is not None
-            else 1.0 / jnp.sqrt(jnp.asarray(float(max(m, n)), p.m_obs.dtype))
-        )
+        if p.lam0 is not None:  # operand override (AOT bucket padding)
+            lam = jnp.asarray(p.lam0, p.m_obs.dtype)
+        elif cfg.lam is not None:
+            lam = jnp.asarray(cfg.lam, p.m_obs.dtype)
+        else:
+            lam = 1.0 / jnp.sqrt(
+                jnp.asarray(float(max(m, n)), p.m_obs.dtype)
+            )
         # _problem zero-fills hidden entries, so p.m_obs is already
         # P_Omega(M) and every norm below is an observed-entry norm.
         norm2 = jnp.linalg.norm(p.m_obs, ord=2)
@@ -124,7 +134,7 @@ def make_solver(cfg: IALMConfig) -> rt.Solver:
     return rt.Solver(init, step, diagnostics, finalize)
 
 
-def _problem(m_obs: Array, warm, mask=None) -> IALMProblem:
+def _problem(m_obs: Array, warm, mask=None, lam0=None) -> IALMProblem:
     if mask is not None:
         # Zero-fill hidden entries up front: the solution must not depend
         # on whatever the caller stored there (sentinels, NaNs, stale
@@ -133,9 +143,11 @@ def _problem(m_obs: Array, warm, mask=None) -> IALMProblem:
         m_obs = mask * m_obs + 0.0
     if warm is None:
         z = jnp.zeros_like(m_obs)
-        return IALMProblem(m_obs=m_obs, l_init=z, s_init=z, mask=mask)
+        return IALMProblem(m_obs=m_obs, l_init=z, s_init=z, mask=mask,
+                           lam0=lam0)
     l0, s0 = warm
-    return IALMProblem(m_obs=m_obs, l_init=l0, s_init=s0, mask=mask)
+    return IALMProblem(m_obs=m_obs, l_init=l0, s_init=s0, mask=mask,
+                       lam0=lam0)
 
 
 @partial(jax.jit, static_argnames=("cfg", "run"))
@@ -187,6 +199,38 @@ def _registry_make(spec, cfg, run_cfg):
     return res.l, res.s, None, None, res.stats
 
 
+def _aot_resolve_cfg(cfg, spec):
+    cfg = cfg if cfg is not None else IALMConfig()
+    _rpca.require_cfg_type("ialm", cfg, IALMConfig)
+    return cfg
+
+
+def _aot_program(cfg, run_cfg):
+    """Bucket-shaped AOT program.  The padded tail is mask-zero, so every
+    iterate stays exactly zero there (zero rows/cols of the SVT argument
+    yield zero rows/cols of L; S absorbs a zero residual) and the true
+    block matches the unpadded solve; ``lam0`` pins the true-shape
+    threshold unless the config fixed one."""
+    solver = make_solver(cfg)
+    drive = rt.driver(solver, cfg.iters, run_cfg)
+
+    def prog(m_obs, key, mask, warm, lam0):
+        del key  # no random init
+        problem = _problem(
+            m_obs, warm, mask,
+            lam0=None if cfg.lam is not None else lam0,
+        )
+        carry, stats = drive(problem)
+        l, s = solver.finalize(problem, carry)
+        return l, s, None, None, stats
+
+    return prog
+
+
+def _aot_warm_shapes(cfg, m, n):
+    return (("L", (m, n), "(m, n)"), ("S", (m, n), "(m, n)"))
+
+
 _rpca.register_solver(
     "ialm",
     _rpca.SolverCaps(supports_mask=True, supports_factors=False,
@@ -194,6 +238,11 @@ _rpca.register_solver(
     _registry_make,
     service=convex_service_hooks(make_solver, IALMProblem, _problem,
                                  IALMConfig),
+    aot=_rpca.AOTHooks(
+        resolve_cfg=_aot_resolve_cfg,
+        program=_aot_program,
+        warm_shapes=_aot_warm_shapes,
+    ),
 )
 
 

@@ -250,6 +250,28 @@ def run(
     raise ValueError(f"unknown mode {run_cfg.mode!r}")
 
 
+def driver(
+    solver: Solver,
+    max_iters: int,
+    run_cfg: RunConfig = FIXED,
+) -> Callable[[Any], tuple[Any, SolveStats]]:
+    """Close ``(solver, budget, run mode)`` into a pure
+    ``drive(problem) -> (final_carry, stats)`` program.
+
+    This is the AOT-compilable unit behind the compile cache (DESIGN.md
+    Sec. 13): everything static lives in the closure, everything dynamic
+    rides the ``problem`` pytree, so one ``jax.jit(...).lower(...)
+    .compile()`` per run preset covers every problem of that shape.
+    Equivalent to ``lambda p: run(solver, p, max_iters, run_cfg)`` -- the
+    regular jit path traces the identical computation.
+    """
+
+    def drive(problem: Any) -> tuple[Any, SolveStats]:
+        return run(solver, problem, max_iters, run_cfg)
+
+    return drive
+
+
 def _run_scan(solver, problem, carry0, max_iters, run_cfg):
     def body(c, t):
         c = solver.step(problem, c, t)

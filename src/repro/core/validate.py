@@ -95,6 +95,44 @@ def check_warm_lowrank_sparse(
     )
 
 
+def check_compile_policy(
+    bucket_min: int, bucket_ratio: float, max_entries: int,
+    max_bytes: int | None,
+) -> None:
+    """Admission vocabulary for the AOT compile cache's bucket policy.
+
+    The bucket grid is ``bucket_min * bucket_ratio^k`` rounded up to
+    integers; a ratio <= 1 would never make progress and a non-positive
+    budget could never admit the executable just built.
+    """
+    if bucket_min < 1:
+        raise ValueError(
+            f"compile policy bucket_min must be >= 1, got {bucket_min}"
+        )
+    if not bucket_ratio > 1.0:
+        raise ValueError(
+            f"compile policy bucket_ratio must be > 1 (geometric bucket "
+            f"growth), got {bucket_ratio}"
+        )
+    if max_entries < 1:
+        raise ValueError(
+            f"compile policy max_entries must be >= 1, got {max_entries}"
+        )
+    if max_bytes is not None and max_bytes < 1:
+        raise ValueError(
+            f"compile policy max_bytes must be >= 1 or None, got "
+            f"{max_bytes}"
+        )
+
+
+def unknown_compile_policy(policy: Any) -> ValueError:
+    """Uniform error for an unrecognized ``compile_policy=`` argument."""
+    return ValueError(
+        f"compile_policy must be None, 'off', 'aot', or a CompilePolicy; "
+        f"got {policy!r}"
+    )
+
+
 def check_service_problem(m_obs: Any, m: int, n: int) -> int:
     """Service admission: row count must match, width must fit a slot.
 

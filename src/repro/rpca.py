@@ -158,6 +158,10 @@ class RPCAResult:
     stats: rt.SolveStats
     method: str
     spec: RPCASpec = field(repr=False)
+    #: Compile-cache counters snapshot (a ``compile_cache.CacheStats``)
+    #: when the solve dispatched through the AOT executable cache; None
+    #: for regular jit dispatch (including cache bypasses).
+    cache_stats: Any | None = field(default=None, repr=False)
 
     @property
     def factors(self) -> tuple[Array, Array] | None:
@@ -235,11 +239,42 @@ class ServiceHooks:
 
 
 @dataclass(frozen=True)
+class AOTHooks:
+    """How a solver exposes an AOT-compilable program to the compile
+    cache (``repro.core.compile_cache``; DESIGN.md Sec. 13).
+
+    ``resolve_cfg``  ``(cfg_or_None, spec) -> cfg``: the concrete,
+                     hashable config that keys the executable.  Defaults
+                     resolve against the *true* spec (before bucket
+                     padding), so e.g. masked-vs-unmasked presets follow
+                     the caller's semantics, not the cache's plumbing.
+    ``program``      ``(cfg, run_cfg) -> prog`` where
+                     ``prog(m_obs, key, mask, warm, lam0)`` returns
+                     ``(l, s, u, v, stats)``.  Traced once per bucket
+                     and compiled ahead of time; ``mask`` is always a
+                     dense 0/1 plane (bucket padding rides it,
+                     mask-zero), ``lam0`` is the true-shape convex
+                     threshold ``1/sqrt(max(m, n))`` shipped as an
+                     operand (ignored by solvers that calibrate
+                     on-device).  Unused operands are pruned by XLA.
+    ``warm_shapes``  ``(cfg, m, n) ->`` per-factor ``(name, shape,
+                     desc)`` records; evaluated at the true shape for
+                     eager validation and at the bucket shape for the
+                     padding targets.
+    """
+
+    resolve_cfg: Callable[[Any, RPCASpec], Any]
+    program: Callable[[Any, rt.RunConfig], Callable]
+    warm_shapes: Callable[[Any, int, int], Sequence[tuple]]
+
+
+@dataclass(frozen=True)
 class SolverEntry:
     name: str
     caps: SolverCaps
     make: Callable[[RPCASpec, Any, rt.RunConfig], tuple]
     service: ServiceHooks | None = None
+    aot: AOTHooks | None = None
 
 
 #: The solver registry: populated by the solver modules at import time.
@@ -251,16 +286,18 @@ def register_solver(
     caps: SolverCaps,
     make: Callable[[RPCASpec, Any, rt.RunConfig], tuple],
     service: ServiceHooks | None = None,
+    aot: AOTHooks | None = None,
 ) -> None:
     """Register (or re-register) a solver under ``name``.
 
     ``make(spec, cfg, run_cfg)`` runs the solve and returns
     ``(l, s, u, v, stats)`` with ``u = v = None`` for factor-free methods;
     ``cfg`` is ``None`` when the caller did not pass one (the adapter picks
-    its default).
+    its default).  ``aot`` opts the method into the shape-bucketed
+    compile cache (``solve(..., compile_policy=...)``).
     """
     SOLVERS[name] = SolverEntry(name=name, caps=caps, make=make,
-                                service=service)
+                                service=service, aot=aot)
 
 
 def _ensure_registered() -> None:
@@ -383,6 +420,7 @@ def solve(
     *,
     run: rt.RunConfig | str | None = None,
     cfg: Any = None,
+    compile_policy: Any = None,
     **spec_kwargs: Any,
 ) -> RPCAResult:
     """Solve an RPCA problem through the registry -- the one entrypoint.
@@ -399,6 +437,16 @@ def solve(
     ``cfg``             solver config (``APGMConfig`` / ``IALMConfig`` /
                         ``DCFConfig``); defaults are derived per method
                         (the factorized ones need ``spec.rank`` for that).
+    ``compile_policy``  opt into the shape-bucketed AOT executable cache:
+                        ``"aot"``, a ``compile_cache.CompilePolicy``, or
+                        ``None``/``"off"`` (default -- regular jit
+                        dispatch).  Cached solves pad into a shape bucket
+                        behind the Omega plane and dispatch a pre-compiled
+                        executable with zero retrace/recompile; specs the
+                        cache cannot express (batched, meshed, simulated
+                        clients, participation, methods without AOT hooks)
+                        silently fall back to regular dispatch
+                        (``result.cache_stats`` is then ``None``).
 
     Returns an :class:`RPCAResult` -- never a legacy result type.
     """
@@ -419,6 +467,18 @@ def solve(
         method = auto_method(spec, cfg)
     entry = get_solver(method)
     _check_caps(entry, spec)
+    if compile_policy is not None:
+        from repro.core import compile_cache as cc
+
+        policy = cc.resolve_policy(compile_policy)
+        if policy is not None:
+            out = cc.solve_cached(entry, spec, cfg, run_cfg, policy)
+            if out is not None:
+                l, s, u, v, stats, cstats = out
+                return RPCAResult(
+                    l=l, s=s, u=u, v=v, stats=stats, method=entry.name,
+                    spec=spec, cache_stats=cstats,
+                )
     l, s, u, v, stats = entry.make(spec, cfg, run_cfg)
     return RPCAResult(l=l, s=s, u=u, v=v, stats=stats, method=entry.name,
                       spec=spec)
@@ -457,7 +517,21 @@ def default_key(spec: RPCASpec) -> Array:
     return key
 
 
+def __getattr__(name: str) -> Any:
+    # Lazy re-export (PEP 562): CompilePolicy lives in repro.core (this
+    # module must not import repro.core at module level -- see the note
+    # at the top), but belongs on the front-door surface next to
+    # ``solve(..., compile_policy=...)``.
+    if name == "CompilePolicy":
+        from repro.core.compile_cache import CompilePolicy
+
+        return CompilePolicy
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
 __all__ = [
+    "AOTHooks",
+    "CompilePolicy",
     "RPCAResult",
     "RPCASpec",
     "SOLVERS",

@@ -41,6 +41,9 @@ homogeneous), which is bit-exact with the unmasked solver path for the
 """
 from __future__ import annotations
 
+import dataclasses
+import hashlib
+from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Any, NamedTuple
 
@@ -49,11 +52,29 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import rpca as _rpca
+from repro.core import compile_cache as cc
 from repro.core import runtime as rt
 from repro.core import validate
 from repro.core.factorized import DCFConfig
 
 Array = jax.Array
+
+#: Entries kept in each service's robust_lam calibration cache (tiny:
+#: a 16-byte fingerprint pair -> one float per distinct tenant plane).
+_LAM_CACHE_CAP = 128
+
+
+def _fingerprint(x: Any) -> bytes | None:
+    """Content fingerprint of one data/mask plane (shape + dtype +
+    bytes); ``None`` stays ``None`` so (M, mask) pairs key cleanly."""
+    if x is None:
+        return None
+    arr = np.ascontiguousarray(np.asarray(x))
+    h = hashlib.blake2b(digest_size=16)
+    h.update(str(arr.dtype).encode())
+    h.update(np.asarray(arr.shape, np.int64).tobytes())
+    h.update(arr.tobytes())
+    return h.digest()
 
 
 @dataclass(frozen=True)
@@ -126,13 +147,58 @@ class _Lane:
         # instead of double-buffering the (slots, m, n) residual planes of
         # the convex lanes on every call.  The problem pytree (arg 0) is
         # NOT donated -- it persists across ticks and submits write into it.
-        self._tick = jax.jit(tick, donate_argnums=(1, 2, 3, 4, 5))
-        self._write_slot = jax.jit(
-            lambda batched, single, i: jax.tree.map(
+        #
+        # All lane executables come AOT-compiled from the process-wide
+        # compile cache (DESIGN.md Sec. 13): lanes sharing a solver and
+        # slot geometry -- across services too -- reuse one tick /
+        # finalize / slot-write program instead of compiling per lane.
+        cache = cc.default_cache()
+        b = scfg.slots
+
+        def _z(dt):
+            return jnp.zeros((b,), dt)
+
+        self._tick = cache.get(
+            ("service_tick", method, cfg, scfg, m, n),
+            lambda: jax.jit(tick, donate_argnums=(1, 2, 3, 4, 5)).lower(
+                self.problems, self.carry, _z(jnp.int32), _z(bool),
+                _z(jnp.int32), _z(bool), _z(bool),
+            ).compile(),
+            cc.AOT,
+        )
+        one_p = jax.tree.map(lambda a: a[0], self.problems)
+        one_c = jax.tree.map(lambda a: a[0], self.carry)
+        self._finalize_one = cache.get(
+            ("service_finalize", method, cfg, m, n),
+            lambda: jax.jit(self.solver.finalize).lower(
+                one_p, one_c
+            ).compile(),
+            cc.AOT,
+        )
+
+    def write_slot(self, batched: Any, single: Any, idx: Array) -> Any:
+        """``batched.at[idx].set(single)`` over a pytree, through the
+        shared compile cache -- the executable is keyed purely on the
+        pytree structure + leaf signature, so the problem- and
+        carry-shaped writers of every same-geometry lane (and service)
+        each compile exactly once process-wide."""
+
+        def _write(batched, single, i):
+            return jax.tree.map(
                 lambda b_, x: b_.at[i].set(x), batched, single
             )
+
+        key = (
+            "service_write_slot",
+            jax.tree.structure((batched, single)),
+            cc.arg_signature((batched, single, idx)),
         )
-        self._finalize_one = jax.jit(self.solver.finalize)
+        exe = cc.default_cache().get(
+            key,
+            lambda: jax.jit(_write).lower(batched, single, idx).compile(),
+            cc.AOT,
+        )
+        return exe(batched, single, idx)
 
 
 class RPCAService:
@@ -172,6 +238,14 @@ class RPCAService:
         self._active = np.zeros((b,), bool)  # host-side slot occupancy
         self._slot_n = np.full((b,), n, np.int64)  # true width per slot
         self._slot_method = [method] * b  # lane owning each slot
+
+        # robust_lam calibration cache: (M fingerprint, mask fingerprint)
+        # -> calibrated lam.  Warm refreshes of unchanged tenant data skip
+        # the full-matrix sorts (PR-5: the 20-round refresh e2e is lam-
+        # calibration dominated).
+        self._lam_cache: "OrderedDict[tuple, float]" = OrderedDict()
+        self._lam_hits = 0
+        self._lam_misses = 0
 
         self._lanes: dict[str, _Lane] = {}
         self._lane(method)  # build the default lane eagerly
@@ -250,6 +324,21 @@ class RPCAService:
         slot = int(free[0])
         key = jax.random.fold_in(self._key, self._n_submitted)
         self._n_submitted += 1
+        # lam calibration cache: fingerprint the *submitted* (pre-pad)
+        # planes -- only for configs that actually sort the data for lam
+        # (the factorized family with lam=None); the convex lanes derive
+        # lam from the shape for free.
+        cfg_sub, lam_fp = lane.cfg, None
+        if isinstance(lane.cfg, DCFConfig) and lane.cfg.lam is None:
+            lam_fp = (_fingerprint(m_obs), _fingerprint(mask))
+            lam_hit = self._lam_cache.get(lam_fp)
+            if lam_hit is not None:
+                self._lam_cache.move_to_end(lam_fp)
+                self._lam_hits += 1
+                cfg_sub = dataclasses.replace(lane.cfg, lam=lam_hit)
+                lam_fp = None  # nothing to store
+            else:
+                self._lam_misses += 1
         if n_req < self.n:
             # Ragged width: pad the data (and the mask's base plane) with
             # mask-zero columns so the padded tail never influences the
@@ -267,12 +356,19 @@ class RPCAService:
                     )
                     for w, (_, _, _, ax) in zip(warm, layout)
                 )
-        problem = lane.hooks.make_problem(m_obs, lane.cfg, key, warm, mask)
+        problem = lane.hooks.make_problem(m_obs, cfg_sub, key, warm, mask)
+        if lam_fp is not None:
+            # Freshly calibrated: remember it for the next refresh of the
+            # same (M, mask) pair.  lam0 calibrates identically on the
+            # padded plane (masked medians ignore mask-zero entries).
+            self._lam_cache[lam_fp] = float(problem.lam0)
+            while len(self._lam_cache) > _LAM_CACHE_CAP:
+                self._lam_cache.popitem(last=False)
         self._slot_n[slot] = n_req
         self._slot_method[slot] = method
         idx = jnp.asarray(slot)
-        lane.problems = lane._write_slot(lane.problems, problem, idx)
-        lane.carry = lane._write_slot(
+        lane.problems = lane.write_slot(lane.problems, problem, idx)
+        lane.carry = lane.write_slot(
             lane.carry, lane.solver.init(problem), idx
         )
         self._t = self._t.at[slot].set(0)
@@ -330,6 +426,27 @@ class RPCAService:
     def pending(self) -> int:
         """Number of occupied slots still iterating."""
         return int((self._active & ~np.asarray(self._done)).sum())
+
+    def metrics(self) -> dict[str, Any]:
+        """Serving metrics: slot occupancy plus the shared compile-cache
+        counters (process-wide -- every service and the front door share
+        one cache) and this service's lam-calibration cache counters."""
+        cache = cc.default_cache()
+        return {
+            "slots": int(self.scfg.slots),
+            "active": int(self._active.sum()),
+            "pending": self.pending(),
+            "compile_cache": {
+                **cache.stats.as_dict(),
+                "entries": len(cache),
+                "bytes": cache.nbytes,
+            },
+            "lam_cache": {
+                "hits": self._lam_hits,
+                "misses": self._lam_misses,
+                "entries": len(self._lam_cache),
+            },
+        }
 
     # -- convenience --------------------------------------------------------
     def solve_all(

@@ -4,7 +4,40 @@ with their own XLA_FLAGS (see tests/test_multidevice.py)."""
 import jax
 import pytest
 
+# Process-wide XLA compile counter.  jax.monitoring emits a duration event
+# whose key contains "backend_compile" for every XLA compilation (a single
+# jit may emit several); registered once at import so counts are monotone
+# across the whole test session and fixtures can snapshot deltas.
+_XLA_COMPILES = [0]
+
+
+def _count_compiles(event: str, duration: float, **kwargs) -> None:
+    if "backend_compile" in event:
+        _XLA_COMPILES[0] += 1
+
+
+jax.monitoring.register_event_duration_secs_listener(_count_compiles)
+
 
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture
+def xla_compiles():
+    """Callable returning the cumulative XLA compile-event count.  Tests
+    assert ``counter() - before == 0`` to prove a dispatch was retrace-
+    and recompile-free."""
+    return lambda: _XLA_COMPILES[0]
+
+
+@pytest.fixture
+def fresh_cache(monkeypatch):
+    """A fresh process-default compile cache for the duration of one test
+    (counters and entries start empty; the real default is untouched)."""
+    from repro.core import compile_cache as cc
+
+    cache = cc.CompileCache()
+    monkeypatch.setattr(cc, "_DEFAULT_CACHE", cache)
+    return cache

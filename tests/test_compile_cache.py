@@ -1,0 +1,382 @@
+"""Shape-bucketed AOT executable cache (DESIGN.md Sec. 13).
+
+Covers the PR-6 acceptance invariants: a second solve at a same-bucket
+shape performs ZERO XLA compilations (counted via jax.monitoring),
+bucket-padded results numerically match unpadded solves, eviction
+respects the entry/byte budgets, and ``clear()`` restores cold behavior.
+Every test runs against a fresh process-default cache (``fresh_cache``)
+so counters are isolated; fresh-true-shape inputs are materialized
+host-side (numpy) -- an eager device slice would itself compile a gather
+and pollute the compile counter.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import rpca
+from repro.core import compile_cache as cc
+from repro.core import problems as prob
+from repro.core.factorized import DCFConfig
+from repro.core.ialm import IALMConfig
+
+# Small buckets so tiny test problems still exercise padding.
+POLICY = cc.CompilePolicy(bucket_min=32)
+
+
+def _cf_cfg(rank=4, outer_iters=10):
+    return DCFConfig.tuned(rank=rank, outer_iters=outer_iters)
+
+
+def _gen(m=48, n=40, rank=4, observed=0.8, seed=0):
+    return prob.generate_problem(
+        jax.random.PRNGKey(seed), m, n, rank, 0.1, observed_frac=observed
+    )
+
+
+def _host(x):
+    """Fresh host-side copy (keeps device slicing out of compile counts)."""
+    return None if x is None else np.asarray(x).copy()
+
+
+# ---------------------------------------------------------------------------
+# Bucket geometry + policy validation
+# ---------------------------------------------------------------------------
+def test_bucket_geometry():
+    p = cc.CompilePolicy(bucket_min=32, bucket_ratio=2.0)
+    assert cc.bucket_dim(1, p) == 32
+    assert cc.bucket_dim(32, p) == 32
+    assert cc.bucket_dim(33, p) == 64
+    assert cc.bucket_dim(64, p) == 64
+    assert cc.bucket_dim(65, p) == 128
+    assert cc.bucket_shape(45, 37, p) == (64, 64)
+    with pytest.raises(ValueError, match="dimension"):
+        cc.bucket_dim(0, p)
+
+
+def test_bucket_ratio_non_integer_progress():
+    p = cc.CompilePolicy(bucket_min=10, bucket_ratio=1.5)
+    assert cc.bucket_dim(11, p) == 15
+    assert cc.bucket_dim(16, p) == 23  # ceil(15 * 1.5)
+
+
+@pytest.mark.parametrize(
+    "kw",
+    [
+        dict(bucket_min=0),
+        dict(bucket_ratio=1.0),
+        dict(bucket_ratio=0.5),
+        dict(max_entries=0),
+        dict(max_bytes=0),
+    ],
+)
+def test_policy_validation(kw):
+    with pytest.raises(ValueError):
+        cc.CompilePolicy(**kw)
+
+
+def test_resolve_policy():
+    assert cc.resolve_policy(None) is None
+    assert cc.resolve_policy("off") is None
+    assert cc.resolve_policy("aot") is cc.AOT
+    assert cc.resolve_policy(POLICY) is POLICY
+    with pytest.raises(ValueError, match="compile_policy"):
+        cc.resolve_policy("bogus")
+    with pytest.raises(ValueError, match="compile_policy"):
+        rpca.solve(jnp.zeros((8, 8)), method="ialm", compile_policy=123)
+
+
+def test_front_door_reexport():
+    assert rpca.CompilePolicy is cc.CompilePolicy
+
+
+# ---------------------------------------------------------------------------
+# The acceptance invariant: warm dispatch compiles nothing
+# ---------------------------------------------------------------------------
+def test_second_solve_same_bucket_zero_compiles(fresh_cache, xla_compiles):
+    p = _gen(48, 40)
+    cfg = _cf_cfg()
+    res1 = rpca.solve(
+        p.m_obs, method="cf", cfg=cfg, mask=p.mask, rank=4,
+        compile_policy=POLICY,
+    )
+    assert res1.cache_stats is not None
+    assert res1.cache_stats.misses == 1
+    assert res1.cache_stats.compiles == 1
+    jax.block_until_ready(res1.l)
+
+    # Two *fresh true shapes* in the same (64, 64) bucket, materialized
+    # host-side before the counter snapshot.
+    for i, (mt, nt) in enumerate([(45, 37), (40, 33)]):
+        m2 = _host(p.m_obs)[:mt, :nt]
+        w2 = _host(p.mask)[:mt, :nt]
+        before = xla_compiles()
+        res2 = rpca.solve(
+            m2, method="cf", cfg=cfg, mask=w2, rank=4,
+            compile_policy=POLICY,
+        )
+        jax.block_until_ready(res2.l)
+        assert xla_compiles() - before == 0, "warm dispatch recompiled"
+        assert res2.cache_stats.hits == i + 1
+        assert res2.cache_stats.compiles == 1
+        assert res2.l.shape == (mt, nt)
+        assert res2.s.shape == (mt, nt)
+        assert res2.u.shape == (mt, 4) and res2.v.shape == (nt, 4)
+    assert len(fresh_cache) == 1
+
+
+def test_warm_dispatch_zero_compiles_convex(fresh_cache, xla_compiles):
+    p = _gen(40, 36)
+    cfg = IALMConfig(iters=10)
+    rpca.solve(p.m_obs, method="ialm", cfg=cfg, mask=p.mask,
+               compile_policy=POLICY)
+    # (35, 33) stays in the (64, 64) bucket -- 33 rounds up past 32.
+    m2, w2 = _host(p.m_obs)[:35, :33], _host(p.mask)[:35, :33]
+    before = xla_compiles()
+    res = rpca.solve(m2, method="ialm", cfg=cfg, mask=w2,
+                     compile_policy=POLICY)
+    jax.block_until_ready(res.l)
+    assert xla_compiles() - before == 0
+    assert res.cache_stats.hits == 1
+
+
+# ---------------------------------------------------------------------------
+# Bucket padding is semantics-free
+# ---------------------------------------------------------------------------
+def test_padded_matches_unpadded_cf_warm(fresh_cache):
+    """Warm-started cf is deterministic, so the padded executable must
+    reproduce the unpadded solve on the true block."""
+    p = _gen(48, 40)
+    cfg = _cf_cfg()
+    cold = rpca.solve(p.m_obs, method="cf", cfg=cfg, mask=p.mask, rank=4)
+    warm = (cold.u, cold.v)
+    ref = rpca.solve(p.m_obs, method="cf", cfg=cfg, mask=p.mask, rank=4,
+                     warm=warm)
+    got = rpca.solve(p.m_obs, method="cf", cfg=cfg, mask=p.mask, rank=4,
+                     warm=warm, compile_policy=POLICY)
+    assert got.cache_stats is not None
+    np.testing.assert_allclose(got.l, ref.l, rtol=0, atol=1e-6)
+    np.testing.assert_allclose(got.s, ref.s, rtol=0, atol=1e-6)
+    np.testing.assert_allclose(got.u, ref.u, rtol=0, atol=1e-6)
+    np.testing.assert_allclose(got.v, ref.v, rtol=0, atol=1e-6)
+
+
+def test_padded_matches_unpadded_ialm(fresh_cache):
+    """ialm's init is deterministic (zeros), so cold cached vs uncached
+    must agree; lam0 ships the *true-shape* threshold onto the padded
+    plane."""
+    p = _gen(40, 36)
+    cfg = IALMConfig(iters=30)
+    ref = rpca.solve(p.m_obs, method="ialm", cfg=cfg, mask=p.mask)
+    got = rpca.solve(p.m_obs, method="ialm", cfg=cfg, mask=p.mask,
+                     compile_policy=POLICY)
+    np.testing.assert_allclose(got.l, ref.l, rtol=0, atol=5e-4)
+    np.testing.assert_allclose(got.s, ref.s, rtol=0, atol=5e-4)
+
+
+def test_padded_matches_unpadded_apgm(fresh_cache):
+    from repro.core.apgm import APGMConfig
+
+    p = _gen(40, 36)
+    cfg = APGMConfig(iters=30)
+    ref = rpca.solve(p.m_obs, method="apgm", cfg=cfg, mask=p.mask)
+    got = rpca.solve(p.m_obs, method="apgm", cfg=cfg, mask=p.mask,
+                     compile_policy=POLICY)
+    np.testing.assert_allclose(got.l, ref.l, rtol=0, atol=5e-4)
+    np.testing.assert_allclose(got.s, ref.s, rtol=0, atol=5e-4)
+
+
+def test_cold_cf_recovery_through_cache(fresh_cache):
+    """Cold cf draws random factors at the bucket shape (a different
+    draw than unpadded), so assert against ground truth instead."""
+    p = _gen(48, 40, rank=4)
+    cfg = DCFConfig.tuned(rank=4)
+
+    def recovery(**kw):
+        r = rpca.solve(p.m_obs, method="cf", cfg=cfg, mask=p.mask, rank=4,
+                       **kw)
+        return float(jnp.linalg.norm(r.l - p.l0) / jnp.linalg.norm(p.l0))
+
+    ref = recovery()
+    got = recovery(compile_policy=POLICY)
+    assert got <= 1.5 * ref + 1e-3, (
+        f"cached cold recovery degraded: {got} vs uncached {ref}"
+    )
+
+
+def test_unmasked_spec_through_cache(fresh_cache):
+    """No mask on the spec: the admission's all-ones plane must be
+    numerically the unmasked path."""
+    p = _gen(40, 36, observed=1.0)
+    cfg = IALMConfig(iters=30)
+    ref = rpca.solve(p.m_obs, method="ialm", cfg=cfg)
+    got = rpca.solve(p.m_obs, method="ialm", cfg=cfg,
+                     compile_policy=POLICY)
+    np.testing.assert_allclose(got.l, ref.l, rtol=0, atol=5e-4)
+    np.testing.assert_allclose(got.s, ref.s, rtol=0, atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# Eviction + clear
+# ---------------------------------------------------------------------------
+def test_eviction_entry_budget(fresh_cache):
+    pol = cc.CompilePolicy(bucket_min=16, max_entries=2)
+    cfg = IALMConfig(iters=2)
+    for m in (16, 20, 40):  # buckets (16,16), (32,32), (64,64)
+        rpca.solve(np.ones((m, m), np.float32), method="ialm", cfg=cfg,
+                   compile_policy=pol)
+    assert len(fresh_cache) == 2
+    assert fresh_cache.stats.compiles == 3
+    assert fresh_cache.stats.evictions == 1
+
+
+def test_eviction_byte_budget(fresh_cache):
+    pol = cc.CompilePolicy(bucket_min=16, max_bytes=1)
+    cfg = IALMConfig(iters=2)
+    for m in (16, 20):
+        rpca.solve(np.ones((m, m), np.float32), method="ialm", cfg=cfg,
+                   compile_policy=pol)
+    # Over-budget, but the newest entry always stays usable.
+    assert len(fresh_cache) == 1
+    assert fresh_cache.stats.evictions >= 1
+    assert fresh_cache.nbytes > 0  # memory_analysis sized the entries
+
+
+def test_lru_order_refreshes_on_hit(fresh_cache):
+    pol = cc.CompilePolicy(bucket_min=16, max_entries=2)
+    cfg = IALMConfig(iters=2)
+    a = np.ones((16, 16), np.float32)
+    b = np.ones((20, 20), np.float32)
+    rpca.solve(a, method="ialm", cfg=cfg, compile_policy=pol)
+    rpca.solve(b, method="ialm", cfg=cfg, compile_policy=pol)
+    rpca.solve(a, method="ialm", cfg=cfg, compile_policy=pol)  # refresh a
+    rpca.solve(np.ones((40, 40), np.float32), method="ialm", cfg=cfg,
+               compile_policy=pol)  # evicts b, not a
+    before = fresh_cache.stats.compiles
+    rpca.solve(a, method="ialm", cfg=cfg, compile_policy=pol)
+    assert fresh_cache.stats.compiles == before  # a survived
+
+
+def test_clear_restores_cold(fresh_cache, xla_compiles):
+    p = _gen(40, 36)
+    cfg = IALMConfig(iters=5)
+    rpca.solve(p.m_obs, method="ialm", cfg=cfg, mask=p.mask,
+               compile_policy=POLICY)
+    res = rpca.solve(p.m_obs, method="ialm", cfg=cfg, mask=p.mask,
+                     compile_policy=POLICY)
+    assert res.cache_stats.hits == 1
+    fresh_cache.clear()
+    assert len(fresh_cache) == 0
+    before = xla_compiles()
+    res = rpca.solve(p.m_obs, method="ialm", cfg=cfg, mask=p.mask,
+                     compile_policy=POLICY)
+    assert xla_compiles() - before > 0  # genuinely recompiled
+    # Counters persist across clear(): deltas stay meaningful.
+    assert res.cache_stats.compiles == 2
+    assert res.cache_stats.misses == 2
+
+
+# ---------------------------------------------------------------------------
+# Bypass scope
+# ---------------------------------------------------------------------------
+def test_bypass_out_of_scope_specs(fresh_cache):
+    p = _gen(32, 32)
+    # Simulated-client engine: no AOT hooks -> regular dispatch.
+    res = rpca.solve(p.m_obs, method="dcf", rank=4, num_clients=4,
+                     compile_policy="aot")
+    assert res.cache_stats is None
+    # Batched specs bypass too (vmapped programs are not bucket-padded).
+    batch = jnp.stack([p.m_obs, p.m_obs])
+    res = rpca.solve(batch, method="ialm", cfg=IALMConfig(iters=2),
+                     compile_policy="aot")
+    assert res.cache_stats is None
+    assert len(fresh_cache) == 0
+    # Default is off: no cache_stats unless opted in.
+    res = rpca.solve(p.m_obs, method="ialm", cfg=IALMConfig(iters=2))
+    assert res.cache_stats is None
+
+
+# ---------------------------------------------------------------------------
+# Serving lanes share the cache
+# ---------------------------------------------------------------------------
+def _service(scfg=None):
+    from repro.serving.rpca_service import RPCAService, RPCAServiceConfig
+
+    scfg = scfg or RPCAServiceConfig(slots=3, rounds_per_tick=4,
+                                     max_rounds=40)
+    return RPCAService(48, 40, _cf_cfg(outer_iters=40), scfg)
+
+
+def test_second_service_reuses_executables(fresh_cache):
+    p = _gen(48, 40)
+    svc = _service()
+    slot = svc.submit(p.m_obs, mask=p.mask)
+    while svc.pending():
+        svc.tick()
+    assert svc.poll(slot) is not None
+    compiles = fresh_cache.stats.compiles
+    assert compiles > 0
+
+    # Same geometry, fresh service: lane build + submit + tick must be
+    # pure cache hits -- tick, finalize and both slot writers are shared
+    # process-wide.
+    svc2 = _service()
+    slot2 = svc2.submit(_host(p.m_obs), mask=_host(p.mask))
+    while svc2.pending():
+        svc2.tick()
+    resp = svc2.poll(slot2)
+    assert resp is not None
+    assert fresh_cache.stats.compiles == compiles
+
+
+def test_service_lam_calibration_cache(fresh_cache):
+    p = _gen(48, 40)
+    svc = _service()
+    slot = svc.submit(p.m_obs, mask=p.mask)
+    while svc.pending():
+        svc.tick()
+    r1 = svc.poll(slot)
+    svc.release(slot)
+    assert svc.metrics()["lam_cache"] == {
+        "hits": 0, "misses": 1, "entries": 1
+    }
+
+    # Warm refresh of the *same* (M, mask) pair: lam comes from the
+    # cache (no re-sort) and the result matches the recalibrated solve.
+    slot = svc.submit(p.m_obs, warm=(r1.u, r1.v), mask=p.mask)
+    while svc.pending():
+        svc.tick()
+    r2 = svc.poll(slot)
+    svc.release(slot)
+    assert svc.metrics()["lam_cache"]["hits"] == 1
+    assert r2.converged
+
+    # Different data is a different fingerprint -> fresh calibration.
+    svc.submit(_host(p.m_obs) * 2.0, mask=p.mask)
+    assert svc.metrics()["lam_cache"]["misses"] == 2
+    assert svc.metrics()["lam_cache"]["entries"] == 2
+
+
+def test_service_metrics_shape(fresh_cache):
+    svc = _service()
+    m = svc.metrics()
+    assert m["slots"] == 3
+    assert m["active"] == 0 and m["pending"] == 0
+    assert m["compile_cache"]["entries"] == len(fresh_cache)
+    assert m["compile_cache"]["compiles"] == fresh_cache.stats.compiles
+    assert set(m["lam_cache"]) == {"hits", "misses", "entries"}
+
+
+def test_donation_leaves_caller_arrays_valid(fresh_cache):
+    """The admission pads into fresh buffers, so donated executables must
+    never invalidate the caller's arrays -- solve twice from the same
+    device arrays and touch them afterwards."""
+    p = _gen(40, 36)
+    cfg = IALMConfig(iters=3)
+    for _ in range(2):
+        rpca.solve(p.m_obs, method="ialm", cfg=cfg, mask=p.mask,
+                   compile_policy=POLICY)
+    assert bool(jnp.isfinite(p.m_obs).all())
+    assert bool(jnp.isfinite(p.mask).all())
