@@ -42,6 +42,12 @@ TRACKED = {
     "aot/dispatch/overhead_frac": "max",
     "aot/dispatch/warm_xla_compiles": "max",
     "aot/dispatch/drift_xla_compiles": "max",
+    "consensus/wire_e4/model_ratio": "min",
+    "consensus/wire_e4/measured_ratio": "min",
+    "consensus/wire_e4/dense_bytes_client_round": "max",
+    "consensus/wire_e4/compressed_bytes_client_round": "max",
+    "consensus/quality_e4/err_ratio": "max",
+    "consensus/weak_scaling/per_client_eff": "min",
 }
 
 #: Hand-seeded bounds that ``--write-baseline`` must PRESERVE rather than
@@ -66,6 +72,17 @@ FLOOR_OVERRIDES = {
     "aot/dispatch/overhead_frac": 0.05,
     "aot/dispatch/warm_xla_compiles": 0,
     "aot/dispatch/drift_xla_compiles": 0,
+    # The consensus wire gates (ISSUE-7 acceptance).  The byte rows and
+    # model_ratio are deterministic arithmetic over the compiled HLO and
+    # stay at their measured values; the measured_ratio floor is the
+    # acceptance bound itself (>= 4x collective bytes/round reduction;
+    # measurement sits at ~5x), the quality floor the matched-recovery
+    # bound (err_compressed <= 2x err_dense; measured ~1.1x), and the
+    # weak-scaling per-client efficiency floor is conservative against
+    # host noise (measured ~0.9 at E = 64).
+    "consensus/wire_e4/measured_ratio": 4.0,
+    "consensus/quality_e4/err_ratio": 2.0,
+    "consensus/weak_scaling/per_client_eff": 0.5,
 }
 
 

@@ -17,6 +17,7 @@ sys.path.insert(0, os.path.dirname(HERE))
 from benchmarks import (  # noqa: E402
     aot_dispatch_bench,
     api_dispatch_bench,
+    consensus_bench,
     elastic_bench,
     fig1_convergence,
     fig2_phase,
@@ -41,6 +42,7 @@ BENCHES = {
     "elastic": elastic_bench,
     "api": api_dispatch_bench,
     "aot": aot_dispatch_bench,
+    "consensus": consensus_bench,
     "grad_compress": grad_compress_bench,
     "roofline": roofline_summary,
     "runtime": solver_runtime_bench,

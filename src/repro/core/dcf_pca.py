@@ -36,6 +36,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import rpca as _rpca
@@ -98,9 +99,87 @@ class _Carry(NamedTuple):
 # ---------------------------------------------------------------------------
 # Engine 1: simulated clients (paper Sec. 4.1 "Implementation")
 # ---------------------------------------------------------------------------
+def _sim_local_rounds(cfg: fz.DCFConfig, p: DCFProblem, u: Array, v: Array,
+                      eta: Array, lam_t: Array):
+    """Server broadcasts U; clients run K local iterations concurrently
+    (vmapped over the client axis).  Returns ``(u_i, v_new, diag_i,
+    n_frac)`` -- the per-client factor proposals, epilogue diagnostics
+    (None when ``cfg.fused == "off"``) and regularizer shares."""
+    e = p.blocks.shape[0]
+    if p.n_cols is None:
+        # Equal blocks: the compile-time 1/E constant keeps this path
+        # bit-exact with the pre-elastic engine.
+        n_frac = 1.0 / e
+        local = partial(fz.local_round, cfg=cfg, lam=lam_t,
+                        n_frac=n_frac)
+        if p.mask is None:
+            u_i, v_new, diag_i = jax.vmap(
+                lambda vb, mb: local(u, vb, mb, eta=eta)
+            )(v, p.blocks)
+        else:
+            u_i, v_new, diag_i = jax.vmap(
+                lambda vb, mb, wb: local(u, vb, mb, eta=eta, w=wb)
+            )(v, p.blocks, p.mask)
+    else:
+        # Ragged blocks always carry a mask (padding columns are
+        # mask-zero) and a per-client regularizer share n_i/n.
+        n_frac = p.n_cols / jnp.sum(p.n_cols)
+        local = partial(fz.local_round, cfg=cfg, lam=lam_t)
+        u_i, v_new, diag_i = jax.vmap(
+            lambda vb, mb, wb, nf: local(u, vb, mb, eta=eta, w=wb,
+                                         n_frac=nf)
+        )(v, p.blocks, p.mask, n_frac)
+    return u_i, v_new, diag_i, n_frac
+
+
+def _sim_objective(cfg: fz.DCFConfig, p: DCFProblem, u: Array, v: Array,
+                   lam_t: Array, n_frac) -> Array:
+    """Legacy (non-epilogue) global objective at the post-consensus state."""
+    if p.n_cols is None:
+        if p.mask is None:
+            return jax.vmap(
+                lambda vb, mb: fz.local_objective(
+                    u, vb, mb, cfg.rho, lam_t, n_frac
+                )
+            )(v, p.blocks).sum()
+        return jax.vmap(
+            lambda vb, mb, wb: fz.local_objective(
+                u, vb, mb, cfg.rho, lam_t, n_frac, w=wb
+            )
+        )(v, p.blocks, p.mask).sum()
+    return jax.vmap(
+        lambda vb, mb, wb, nf: fz.local_objective(
+            u, vb, mb, cfg.rho, lam_t, nf, w=wb
+        )
+    )(v, p.blocks, p.mask, n_frac).sum()
+
+
+def _sim_finalize(cfg: fz.DCFConfig, p: DCFProblem, u: Array, v: Array):
+    if p.mask is None:
+        l_blocks, s_blocks = jax.vmap(
+            lambda vb, mb: fz.finalize(
+                u, vb, mb, cfg.final_lam(p.lam0), cfg.impl
+            )
+        )(v, p.blocks)
+    else:
+        l_blocks, s_blocks = jax.vmap(
+            lambda vb, mb, wb: fz.finalize(
+                u, vb, mb, cfg.final_lam(p.lam0), cfg.impl, w=wb
+            )
+        )(v, p.blocks, p.mask)
+    return (
+        prob.merge_columns(l_blocks),
+        prob.merge_columns(s_blocks),
+        u,
+        v,
+    )
+
+
 def make_solver(cfg: fz.DCFConfig, *, with_objective: bool = False) -> rt.Solver:
     """Runtime Solver for the simulated-client engine."""
     track = cfg.track_objective or with_objective
+    if cfg.consensus_compress is not None or cfg.consensus_delay:
+        return _make_wire_solver(cfg, track)
 
     def init(p: DCFProblem) -> _Carry:
         inf = jnp.asarray(jnp.inf, jnp.float32)
@@ -117,30 +196,9 @@ def make_solver(cfg: fz.DCFConfig, *, with_objective: bool = False) -> rt.Solver
         # whose factors are then discarded -- the frozen state's objective
         # is the meaningful one).
         fused_obj = track and cfg.fused != "off" and p.participation is None
-        # Server broadcasts U; clients run K local iterations concurrently.
-        if p.n_cols is None:
-            # Equal blocks: the compile-time 1/E constant keeps this path
-            # bit-exact with the pre-elastic engine.
-            n_frac = 1.0 / e
-            local = partial(fz.local_round, cfg=cfg, lam=lam_t,
-                            n_frac=n_frac)
-            if p.mask is None:
-                u_i, v_new, diag_i = jax.vmap(
-                    lambda vb, mb: local(c.u, vb, mb, eta=eta)
-                )(c.v, p.blocks)
-            else:
-                u_i, v_new, diag_i = jax.vmap(
-                    lambda vb, mb, wb: local(c.u, vb, mb, eta=eta, w=wb)
-                )(c.v, p.blocks, p.mask)
-        else:
-            # Ragged blocks always carry a mask (padding columns are
-            # mask-zero) and a per-client regularizer share n_i/n.
-            n_frac = p.n_cols / jnp.sum(p.n_cols)
-            local = partial(fz.local_round, cfg=cfg, lam=lam_t)
-            u_i, v_new, diag_i = jax.vmap(
-                lambda vb, mb, wb, nf: local(c.u, vb, mb, eta=eta, w=wb,
-                                             n_frac=nf)
-            )(c.v, p.blocks, p.mask, n_frac)
+        u_i, v_new, diag_i, n_frac = _sim_local_rounds(
+            cfg, p, c.u, c.v, eta, lam_t
+        )
         wsum = None
         if p.participation is None:
             v = v_new
@@ -166,25 +224,7 @@ def make_solver(cfg: fz.DCFConfig, *, with_objective: bool = False) -> rt.Solver
             # stacked V and the consensus U take full weight).
             obj = diag_i[0].sum() + fz.reg_terms(u, v, cfg.rho, 1.0)
         elif track:
-            if p.n_cols is None:
-                if p.mask is None:
-                    obj = jax.vmap(
-                        lambda vb, mb: fz.local_objective(
-                            u, vb, mb, cfg.rho, lam_t, n_frac
-                        )
-                    )(v, p.blocks).sum()
-                else:
-                    obj = jax.vmap(
-                        lambda vb, mb, wb: fz.local_objective(
-                            u, vb, mb, cfg.rho, lam_t, n_frac, w=wb
-                        )
-                    )(v, p.blocks, p.mask).sum()
-            else:
-                obj = jax.vmap(
-                    lambda vb, mb, wb, nf: fz.local_objective(
-                        u, vb, mb, cfg.rho, lam_t, nf, w=wb
-                    )
-                )(v, p.blocks, p.mask, n_frac).sum()
+            obj = _sim_objective(cfg, p, u, v, lam_t, n_frac)
         else:
             obj = jnp.zeros((), jnp.float32)
         resid = jnp.linalg.norm(u - c.u) / (jnp.linalg.norm(c.u) + 1e-30)
@@ -205,26 +245,153 @@ def make_solver(cfg: fz.DCFConfig, *, with_objective: bool = False) -> rt.Solver
         return c.diag
 
     def finalize(p: DCFProblem, c: _Carry):
-        if p.mask is None:
-            l_blocks, s_blocks = jax.vmap(
-                lambda vb, mb: fz.finalize(
-                    c.u, vb, mb, cfg.final_lam(p.lam0), cfg.impl
-                )
-            )(c.v, p.blocks)
-        else:
-            l_blocks, s_blocks = jax.vmap(
-                lambda vb, mb, wb: fz.finalize(
-                    c.u, vb, mb, cfg.final_lam(p.lam0), cfg.impl, w=wb
-                )
-            )(c.v, p.blocks, p.mask)
-        return (
-            prob.merge_columns(l_blocks),
-            prob.merge_columns(s_blocks),
-            c.u,
-            c.v,
-        )
+        return _sim_finalize(cfg, p, c.u, c.v)
 
     return rt.Solver(init, step, diagnostics, finalize)
+
+
+def _make_wire_solver(cfg: fz.DCFConfig, track: bool) -> rt.Solver:
+    """Simulated-client solver with the consensus *wire* features
+    (DESIGN.md Sec. 14): top-k compressed deltas with error feedback
+    (``cfg.consensus_compress``) and/or one-round stale application
+    (``cfg.consensus_delay``).
+
+    The consensus is reformulated in delta form -- the active-set weights
+    sum to 1, so ``sum_i w_i U_i == U + sum_i w_i (U_i - U)`` -- and the
+    per-client weighted deltas are what crosses the wire.  With
+    compression each client ships only the top-k of its delta plus its
+    error-feedback residual; the dropped remainder stays in the carry and
+    rides the next round's message, so compression error never
+    accumulates (exact when k == m r).  With ``consensus_delay=1`` the
+    round's delta is parked in ``pending`` and applied at the *next*
+    round (overlapping the all-reduce with the next local sweep in the
+    SPMD engine); the fused epilogue's ||Psi||_F^2 scalar guards the
+    staleness -- growth past ``cfg.stale_guard``x trips a sticky fallback
+    to synchronous application.
+
+    The carry is a dict so the extra state rides the runtime's generic
+    pytree plumbing (batch freeze masks via ``tree_where`` included).
+    """
+    from repro.distributed import grad_compress as gcomp
+    from repro.distributed import multihost as mh
+
+    compress = cfg.consensus_compress
+    delay = cfg.consensus_delay
+
+    def init(p: DCFProblem) -> dict:
+        inf = jnp.asarray(jnp.inf, jnp.float32)
+        c = {"u": p.u_init, "v": p.v_init, "diag": rt.Diag(inf, inf)}
+        if compress is not None:
+            c["err"] = jnp.zeros((p.v_init.shape[0],) + p.u_init.shape,
+                                 jnp.float32)
+        if delay:
+            c["pending"] = jnp.zeros(p.u_init.shape, jnp.float32)
+            c["sync"] = jnp.zeros((), jnp.bool_)
+            c["guard"] = inf
+        return c
+
+    def step(p: DCFProblem, c: dict, t: Array) -> dict:
+        e = p.blocks.shape[0]
+        tg = t + p.t0
+        eta = cfg.lr(tg)
+        lam_t = cfg.lam_at(p.lam0, tg)
+        fused_obj = track and cfg.fused != "off" and p.participation is None
+        u_used = c["u"]
+        u_i, v_new, diag_i, n_frac = _sim_local_rounds(
+            cfg, p, u_used, c["v"], eta, lam_t
+        )
+        wsum = None
+        pt = None
+        if p.participation is None:
+            v = v_new
+            if p.n_cols is None:
+                w = jnp.full((e,), 1.0 / e, jnp.float32)
+            else:
+                w, _ = fz.consensus_weights(p.n_cols, None, e)
+        else:
+            pt = p.participation[jnp.mod(tg, p.participation.shape[0])]
+            v = jnp.where(pt[:, None, None] > 0, v_new, c["v"])
+            w, wsum = fz.consensus_weights(p.n_cols, pt, e)
+            u_i = jnp.where(pt[:, None, None] > 0, u_i, u_used)
+        # What crosses the wire: each client's weighted delta (their sum
+        # is the consensus step; a dropped client's w is 0, an all-dropout
+        # round sums to an exact no-op).
+        contrib = (w[:, None, None] * (u_i - u_used)).astype(jnp.float32)
+        out = dict(c)
+        if compress is None:
+            delta = contrib.sum(axis=0)
+        else:
+            k = mh.topk_k(u_used.size, compress.topk_frac)
+            flat = (contrib + c["err"]).reshape(e, -1)
+            vals, idx = jax.vmap(lambda x: gcomp.topk_sparsify(x, k))(flat)
+            recon = jax.vmap(
+                lambda vv, ii: gcomp.topk_reconstruct(vv, ii, flat.shape[1])
+            )(vals, idx)
+            err_new = (flat - recon).reshape(c["err"].shape)
+            if pt is not None:
+                # Dropped clients ship nothing and keep their residual.
+                vals = jnp.where(pt[:, None] > 0, vals, 0.0)
+                err_new = jnp.where(pt[:, None, None] > 0, err_new,
+                                    c["err"])
+            delta = gcomp.topk_reconstruct(vals, idx,
+                                           flat.shape[1]).reshape(
+                                               u_used.shape)
+            out["err"] = err_new
+        if delay == 0:
+            u = u_used + delta
+        else:
+            # Guard scalar: the fused epilogue's ||Psi||_F^2 (free since
+            # the PR-5 kernels) or, with fused="off", the consensus-step
+            # energy.  Divergence under staleness shows up as growth in
+            # either; the trip is sticky -- once synchronous, stays
+            # synchronous.
+            if diag_i is not None:
+                scalar = diag_i[1].sum()
+            else:
+                scalar = jnp.sum(delta * delta)
+            # Trip on guard-factor growth OR a non-finite scalar (a hard
+            # blowup must not slip through: NaN compares False with
+            # everything, so the growth test alone would never fire).
+            trip = jnp.logical_or(
+                ~jnp.isfinite(scalar),
+                jnp.isfinite(c["guard"])
+                & (scalar > cfg.stale_guard * c["guard"]),
+            )
+            sync = jnp.logical_or(c["sync"], trip)
+            u = u_used + c["pending"] + jnp.where(sync, delta,
+                                                  jnp.zeros_like(delta))
+            out["pending"] = jnp.where(sync, jnp.zeros_like(delta), delta)
+            out["sync"] = sync
+            out["guard"] = scalar
+        if fused_obj:
+            obj = diag_i[0].sum() + fz.reg_terms(u, v, cfg.rho, 1.0)
+        elif track:
+            obj = _sim_objective(cfg, p, u, v, lam_t, n_frac)
+        else:
+            obj = jnp.zeros((), jnp.float32)
+        resid = jnp.linalg.norm(u - u_used) / (
+            jnp.linalg.norm(u_used) + 1e-30)
+        if delay:
+            # Round 0 applies nothing (its delta is pending): a zero
+            # residual would read as instant convergence, so re-emit the
+            # previous (inf at init).
+            resid = jnp.where(t > 0, resid, c["diag"].residual)
+        if wsum is not None:
+            resid = jnp.where(wsum > 0, resid, c["diag"].residual)
+            if track:
+                obj = jnp.where(wsum > 0, obj, jnp.inf)
+        out["u"] = u
+        out["v"] = v
+        out["diag"] = rt.Diag(obj, resid)
+        return out
+
+    def finalize(p: DCFProblem, c: dict):
+        # Flush the in-flight delta: the stale pipeline must not drop the
+        # last round's consensus step.
+        u = c["u"] + c["pending"] if delay else c["u"]
+        return _sim_finalize(cfg, p, u, c["v"])
+
+    return rt.Solver(init, step, lambda p, c: c["diag"], finalize)
 
 
 def _resolve_participation(
@@ -277,6 +444,7 @@ def make_problem(
     counts ride along in ``n_cols`` (consensus weights).  ``participation``
     is a (T, E) 0/1 schedule or a Bernoulli rate (see
     :func:`_resolve_participation`)."""
+    validate.check_consensus_cfg(cfg, participation)
     if mask is not None:
         validate.check_mask(mask, m_obs.shape)
         m_obs = (mask * m_obs.astype(jnp.float32)).astype(m_obs.dtype)
@@ -425,6 +593,20 @@ def _default_cfg(spec, name: str) -> fz.DCFConfig:
     return fz.DCFConfig.tuned(rank)
 
 
+def _record_traffic(cfg: fz.DCFConfig, m: int, num_clients: int,
+                    stats: rt.SolveStats) -> None:
+    """Feed the process-wide consensus traffic counters (surfaced by
+    ``RPCAService.metrics()``) with this solve's modelled wire bytes."""
+    from repro.distributed import multihost as mh
+
+    try:
+        rounds = int(np.asarray(stats.rounds).sum())
+    except Exception:  # traced / not yet materialized: use the budget
+        rounds = cfg.outer_iters
+    mh.record_consensus(m, cfg.rank, num_clients, rounds,
+                        cfg.consensus_compress)
+
+
 def _registry_make(spec, cfg, run_cfg):
     cfg = cfg if cfg is not None else _default_cfg(spec, "dcf")
     _rpca.require_cfg_type("dcf", cfg, fz.DCFConfig)
@@ -434,6 +616,7 @@ def _registry_make(spec, cfg, run_cfg):
     res = fn(spec.m_obs, cfg, num_clients, key, run=run_cfg,
              warm=spec.warm, mask=spec.mask,
              participation=spec.participation)
+    _record_traffic(cfg, spec.m_obs.shape[-2], num_clients, res.stats)
     return res.l, res.s, res.u, res.v, res.stats
 
 
@@ -446,6 +629,10 @@ def _registry_make_sharded(spec, cfg, run_cfg):
         key=spec.key, run=run_cfg, warm=spec.warm, mask=spec.mask,
         participation=spec.participation,
     )
+    num_clients = 1
+    for a in spec.data_axes:
+        num_clients *= spec.mesh.shape[a]
+    _record_traffic(cfg, spec.m_obs.shape[0], num_clients, res.stats)
     return res.l, res.s, res.u, res.v, res.stats
 
 
@@ -461,7 +648,8 @@ _rpca.register_solver(
     "dcf_sharded",
     _rpca.SolverCaps(supports_mask=True, supports_factors=True,
                      supports_participation=True, supports_sharding=True,
-                     batchable=False, needs_rank=True, supports_lowp=True),
+                     batchable=False, needs_rank=True, supports_lowp=True,
+                     supports_multiprocess=True),
     _registry_make_sharded,
 )
 
@@ -525,7 +713,7 @@ def dcf_pca_batch(
 # ---------------------------------------------------------------------------
 # Engine 2: SPMD over a device mesh (production path)
 # ---------------------------------------------------------------------------
-def _solve_sharded(
+def _build_sharded(
     m_obs: Array,
     cfg: fz.DCFConfig,
     mesh: Mesh,
@@ -537,7 +725,7 @@ def _solve_sharded(
     warm: tuple[Array, Array] | None = None,
     mask: Array | None = None,
     participation: Array | float | None = None,
-) -> DCFResult:
+):
     """DCF-PCA where each shard along ``data_axes`` is one paper "client".
 
     ``warm=(U, V)`` takes a replicated ``(m, r)`` consensus factor and a
@@ -568,6 +756,15 @@ def _solve_sharded(
     """
     if key is None:
         key = jax.random.PRNGKey(0)
+    validate.check_consensus_cfg(cfg, participation)
+    compress = cfg.consensus_compress
+    delay = cfg.consensus_delay
+    wire = compress is not None or bool(delay)
+    if wire:
+        from repro.distributed.grad_compress import (
+            compressed_consensus_sum as gcomp_sum,
+        )
+        from repro.distributed.multihost import topk_k as mh_topk_k
     if cfg.pack_mask and mask is not None:
         # The mask plane is sharded exactly like M (P(model, data)); a
         # packed (m, n/8) plane would need its own sharding layout and
@@ -655,11 +852,11 @@ def _solve_sharded(
             n_i = jnp.float32(1.0)  # uniform weight base
             n_frac_i = n_frac  # compile-time 1/E: legacy bit-exact path
 
-        def init(p):
+        def plain_init(p):
             inf = jnp.asarray(jnp.inf, jnp.float32)
             return _Carry(u=p[0], v=p[1], diag=rt.Diag(inf, inf))
 
-        def step(p, c, t):
+        def plain_step(p, c, t):
             t = t + t0
             eta = cfg.lr(t)
             lam_t = cfg.lam_at(lam, t)
@@ -727,13 +924,141 @@ def _solve_sharded(
                     obj = jnp.where(wsum > 0, obj, jnp.inf)
             return _Carry(u=u_new, v=v_new, diag=rt.Diag(obj, resid))
 
-        solver = rt.Solver(init, step, lambda p, c: c.diag, lambda p, c: None)
+        def wire_init(p):
+            inf = jnp.asarray(jnp.inf, jnp.float32)
+            c = {"u": p[0], "v": p[1], "diag": rt.Diag(inf, inf)}
+            if compress is not None:
+                c["err"] = jnp.zeros(p[0].shape, jnp.float32)
+            if delay:
+                c["pending"] = jnp.zeros(p[0].shape, jnp.float32)
+                c["sync"] = jnp.zeros((), jnp.bool_)
+                c["guard"] = inf
+            return c
+
+        def wire_step(p, c, t):
+            # Consensus-wire variant (DESIGN.md Sec. 14): the consensus is
+            # delta-form -- each shard's weighted delta crosses the wire
+            # (top-k compressed with error feedback when configured) and
+            # may be applied one round late under consensus_delay.
+            tg = t + t0
+            eta = cfg.lr(tg)
+            lam_t = cfg.lam_at(lam, tg)
+            u_used = c["u"]
+            u_i, v_new, diag_i = fz.local_round(
+                u_used, c["v"], m_local_full, cfg=cfg, lam=lam_t,
+                n_frac=n_frac_i, eta=eta, reduce_m=reduce_m, w=w_local,
+            )
+            wsum = None
+            pt = None
+            if sched_rep is None and not ragged:
+                wgt = jnp.float32(1.0 / num_clients)
+            else:
+                pt = (
+                    sched_rep[jnp.mod(tg, sched_rep.shape[0]), idx]
+                    if sched_rep is not None
+                    else jnp.float32(1.0)
+                )
+                u_i = jnp.where(pt > 0, u_i, u_used)
+                v_new = jnp.where(pt > 0, v_new, c["v"])
+                raw_w = pt * n_i
+                wsum = jax.lax.psum(raw_w, data_axes)
+                wgt = raw_w / jnp.maximum(wsum, 1e-30)
+            contrib = (wgt * (u_i - u_used)).astype(jnp.float32)
+            out = dict(c)
+            if compress is None:
+                delta = jax.lax.psum(contrib, data_axes)
+            else:
+                # Wire-compact collective: one all-gather of the compact
+                # (k values, k int32 indices) payloads over the data axes
+                # -- E k * 8 bytes on the wire instead of the dense
+                # m r * 4 all-reduce -- and a deterministic scatter-add,
+                # identical on every shard (lock-step preserved).  Each
+                # model-axis shard compresses its own row block.
+                k = mh_topk_k(u_used.size, compress.topk_frac)
+                delta, err_new = gcomp_sum(
+                    contrib, data_axes, k, c["err"], active=pt)
+                out["err"] = err_new
+            if delay == 0:
+                u_new = u_used + delta
+                # All-dropout round: delta is an exact zero (every weight
+                # is 0 / every payload shipped zeros), so u_new == c.u.
+            else:
+                # Staleness guard: the fused epilogue's ||Psi||_F^2 psum
+                # (free since PR 5) -- or the consensus-step energy when
+                # fused="off" -- trips a sticky fallback to synchronous
+                # application on divergence.  Both scalars are psum/
+                # reduce_m-composed, so every shard agrees and the
+                # collectives stay lock-step.
+                if diag_i is not None:
+                    scalar = jax.lax.psum(diag_i[1], all_axes)
+                else:
+                    scalar = reduce_m(jnp.sum(delta * delta))
+                # Trip on guard-factor growth OR a non-finite scalar (NaN
+                # compares False, so the growth test alone never fires on
+                # a hard blowup).
+                trip = jnp.logical_or(
+                    ~jnp.isfinite(scalar),
+                    jnp.isfinite(c["guard"])
+                    & (scalar > cfg.stale_guard * c["guard"]),
+                )
+                sync = jnp.logical_or(c["sync"], trip)
+                u_new = u_used + c["pending"] + jnp.where(
+                    sync, delta, jnp.zeros_like(delta))
+                out["pending"] = jnp.where(sync, jnp.zeros_like(delta),
+                                           delta)
+                out["sync"] = sync
+                out["guard"] = scalar
+            if not track:
+                obj = jnp.zeros((), jnp.float32)
+            elif diag_i is not None and sched_rep is None:
+                obj = jax.lax.psum(
+                    diag_i[0]
+                    + fz.reg_terms(u_new, v_new, cfg.rho, n_frac_i),
+                    all_axes,
+                )
+            else:
+                obj = jax.lax.psum(
+                    fz.local_objective(
+                        u_new, v_new, m_local_full, cfg.rho, lam_t,
+                        n_frac_i, w=w_local,
+                    ),
+                    all_axes,
+                )
+            du2 = reduce_m(jnp.sum((u_new - u_used) ** 2))
+            u2 = reduce_m(jnp.sum(u_used**2))
+            resid = jnp.sqrt(du2) / (jnp.sqrt(u2) + 1e-30)
+            if delay:
+                # Round 0 applies nothing (its delta is pending): re-emit
+                # the previous residual instead of a convergence-faking 0.
+                resid = jnp.where(t > 0, resid, c["diag"].residual)
+            if wsum is not None:
+                resid = jnp.where(wsum > 0, resid, c["diag"].residual)
+                if track:
+                    obj = jnp.where(wsum > 0, obj, jnp.inf)
+            out["u"] = u_new
+            out["v"] = v_new
+            out["diag"] = rt.Diag(obj, resid)
+            return out
+
+        if wire:
+            solver = rt.Solver(wire_init, wire_step,
+                               lambda p, c: c["diag"], lambda p, c: None)
+        else:
+            solver = rt.Solver(plain_init, plain_step,
+                               lambda p, c: c.diag, lambda p, c: None)
         carry, stats = rt.run(solver, (u, v), cfg.outer_iters, run_cfg)
+        if wire:
+            # Flush the in-flight stale delta; the last consensus step
+            # must not be dropped.
+            u_fin = carry["u"] + carry["pending"] if delay else carry["u"]
+            v_fin = carry["v"]
+        else:
+            u_fin, v_fin = carry.u, carry.v
         l_blk, s_blk = fz.finalize(
-            carry.u, carry.v, m_local_full, cfg.final_lam(lam), cfg.impl,
+            u_fin, v_fin, m_local_full, cfg.final_lam(lam), cfg.impl,
             w=w_local,
         )
-        return l_blk, s_blk, carry.u, carry.v, stats
+        return l_blk, s_blk, u_fin, v_fin, stats
 
     specs_out = (
         P(row_spec, data_axes),  # L
@@ -746,14 +1071,23 @@ def _solve_sharded(
     )
     # Pack the (static-keyed) operand dict so the mask x warm combinations
     # share one shard_map body; absent keys are simply not in the pytree.
-    args = {"m": jax.device_put(m_obs, m_sharding),
-            "u": jax.device_put(u0, u_sharding)}
+    multiproc = len({d.process_index for d in mesh.devices.flat}) > 1
+
+    def _put(x, sharding):
+        # A cross-process sharding needs host-side operands: every process
+        # holds the full array (the solve entrypoints are SPMD -- each
+        # process ran the same padding/calibration on the same input) and
+        # device_put places only its addressable shards.
+        return jax.device_put(np.asarray(x) if multiproc else x, sharding)
+
+    args = {"m": _put(m_obs, m_sharding),
+            "u": _put(u0, u_sharding)}
     specs = {"m": P(row_spec, data_axes), "u": P(row_spec, None)}
     if mask is not None:
-        args["w"] = jax.device_put(mask, m_sharding)
+        args["w"] = _put(mask, m_sharding)
         specs["w"] = P(row_spec, data_axes)
     if warm is not None:
-        args["v"] = jax.device_put(
+        args["v"] = _put(
             v_warm, NamedSharding(mesh, P(data_axes, None))
         )
         specs["v"] = P(data_axes, None)
@@ -761,7 +1095,7 @@ def _solve_sharded(
         # The schedule is replicated: every shard indexes the same (T, E)
         # table, so the round's participation set (and hence the weighted
         # consensus and the early-exit predicate) agrees mesh-wide.
-        args["sched"] = jax.device_put(
+        args["sched"] = _put(
             sched, NamedSharding(mesh, P(None, None))
         )
         specs["sched"] = P(None, None)
@@ -785,10 +1119,39 @@ def _solve_sharded(
                           packed.get("sched"))
 
     fn = shard_map_compat(solve, mesh, (specs,), specs_out)
+    return fn, args, n, ragged
+
+
+def _solve_sharded(
+    m_obs: Array,
+    cfg: fz.DCFConfig,
+    mesh: Mesh,
+    **kwargs,
+) -> DCFResult:
+    """Execute the sharded solve (see :func:`_build_sharded`)."""
+    fn, args, n, ragged = _build_sharded(m_obs, cfg, mesh, **kwargs)
     l, s, u, v, stats = jax.jit(fn)(args)
     if ragged:  # trim the zero-padded tail columns / V rows
         l, s, v = l[:, :n], s[:, :n], v[:n]
     return DCFResult(l=l, s=s, u=u, v=v, stats=stats)
+
+
+def sharded_solve_hlo(
+    m_obs: Array,
+    cfg: fz.DCFConfig,
+    mesh: Mesh,
+    **kwargs,
+) -> str:
+    """Optimized HLO text of the jitted sharded solve, without running it.
+
+    This is the *measured* side of the consensus wire model: the bench
+    (``benchmarks/consensus_bench.py``) feeds it to
+    ``roofline.hlo_costs.analyze_hlo`` and reads the collective bytes the
+    compiled program actually moves per solve -- dense all-reduce vs
+    top-k all-gather -- rather than trusting the analytic byte model.
+    """
+    fn, args, _, _ = _build_sharded(m_obs, cfg, mesh, **kwargs)
+    return jax.jit(fn).lower(args).compile().as_text()
 
 
 def dcf_pca_sharded(

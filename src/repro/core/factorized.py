@@ -122,6 +122,20 @@ class DCFConfig:
     # estimates the MAD to well under a percent -- the right trade for
     # short refresh/serving solves where calibration would dominate.
     lam_sample: int | None = None
+    # Communication-optimal consensus wire (DESIGN.md Sec. 14).  With a
+    # CompressConfig (its ``topk_frac`` must be set), each client ships
+    # only the top-k entries of its weighted U delta per round, with an
+    # error-feedback residual carried in the solver state so what the
+    # top-k drops rides the next round's message.  ``None`` keeps the
+    # dense factor wire bit-exact.
+    consensus_compress: "CompressConfig | None" = None  # noqa: F821
+    # Stale-consensus overlap: 1 applies each round's consensus delta one
+    # round late (the all-reduce overlaps the next local sweep), guarded
+    # by the fused epilogue's ||Psi||_F^2 scalar -- growth past
+    # ``stale_guard``x the previous round's value trips a sticky fallback
+    # to synchronous application.  0 = synchronous (default, bit-exact).
+    consensus_delay: int = 0
+    stale_guard: float = 4.0
 
     def resolved_lam(self, m: int, n: int) -> float:
         if self.lam is not None:

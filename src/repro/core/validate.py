@@ -133,6 +133,50 @@ def unknown_compile_policy(policy: Any) -> ValueError:
     )
 
 
+def check_consensus_cfg(cfg: Any, participation: Any = None) -> None:
+    """Consensus wire knobs (DESIGN.md Sec. 14), checked eagerly at every
+    DCF entrypoint.
+
+    ``consensus_compress`` must carry a concrete ``topk_frac`` in (0, 1]
+    (a CompressConfig without one describes gradient compression, not a
+    consensus wire format).  ``consensus_delay`` is 0 or 1 -- deeper
+    pipelines would need a delta queue -- and composes with neither
+    participation schedules nor rates: a stale delta from a client that
+    has since dropped out has no well-defined consensus weight, so the
+    combination fails here instead of silently misweighting rounds.
+    """
+    cc = getattr(cfg, "consensus_compress", None)
+    if cc is not None:
+        frac = getattr(cc, "topk_frac", None)
+        if frac is None:
+            raise ValueError(
+                "cfg.consensus_compress needs CompressConfig.topk_frac set "
+                "(the kept fraction of the U delta per consensus round)"
+            )
+        if not 0.0 < float(frac) <= 1.0:
+            raise ValueError(
+                f"consensus_compress.topk_frac must be in (0, 1], got "
+                f"{frac}"
+            )
+    delay = getattr(cfg, "consensus_delay", 0)
+    if delay not in (0, 1):
+        raise ValueError(
+            f"consensus_delay must be 0 (synchronous) or 1 (one-round "
+            f"stale overlap), got {delay}"
+        )
+    if delay and participation is not None:
+        raise ValueError(
+            "consensus_delay=1 does not compose with participation "
+            "schedules: a stale delta from a since-dropped client has no "
+            "well-defined consensus weight"
+        )
+    if delay and not getattr(cfg, "stale_guard", 4.0) > 1.0:
+        raise ValueError(
+            f"stale_guard must be > 1 (a divergence trip threshold on the "
+            f"round's guard scalar), got {cfg.stale_guard}"
+        )
+
+
 def check_service_problem(m_obs: Any, m: int, n: int) -> int:
     """Service admission: row count must match, width must fit a slot.
 

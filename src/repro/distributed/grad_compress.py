@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import factorized as fz
+from repro.distributed.multihost import topk_k
 
 Array = jax.Array
 
@@ -44,6 +45,9 @@ class CompressConfig:
     lam_mult: float = 2.5  # threshold = lam_mult * robust sigma
     eta: float = 0.5
     min_dim: int = 64  # leaves smaller than this skip compression
+    #: Ship only the top-k fraction of each consensus U delta (with an
+    #: error-feedback residual); ``None`` keeps the dense factor wire.
+    topk_frac: float | None = None
 
     def dcf(self) -> fz.DCFConfig:
         return fz.DCFConfig(
@@ -84,6 +88,60 @@ def _robust_sigma(g: Array, axes, eps: float = 1e-6) -> Array:
     return jax.lax.pmean(jnp.maximum(1.4826 * sigma, eps * rms), axes)
 
 
+def topk_sparsify(g: Array, k: int) -> tuple[Array, Array]:
+    """Top-``k``-by-magnitude entries of ``g`` as (values f32, flat int32
+    indices) -- the wire payload of one compressed consensus message."""
+    flat = g.astype(jnp.float32).ravel()
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    idx = idx.astype(jnp.int32)
+    return flat[idx], idx
+
+
+def topk_reconstruct(vals: Array, idx: Array, size: int) -> Array:
+    """Scatter-add a (values, indices) payload back to a dense flat
+    vector.  Duplicate indices accumulate, so concatenated payloads from
+    E clients reconstruct the *sum* of their sparse messages."""
+    return jnp.zeros((size,), jnp.float32).at[idx.ravel()].add(vals.ravel())
+
+
+def compressed_consensus_sum(
+    contrib: Array,  # this shard's dense (already weighted) contribution
+    axes,  # mesh axis name(s) to sum over
+    k: int,
+    err: Array,  # error-feedback residual, same shape as contrib
+    active: Array | None = None,  # scalar >0 when this shard participates
+) -> tuple[Array, Array]:
+    """Error-feedback top-k replacement for ``psum(contrib, axes)``.
+
+    Each shard ships the top-k of ``contrib + err`` as a compact
+    (k f32 values, k int32 indices) payload; one all-gather moves the
+    E payloads and every shard scatter-adds the *same* concatenated
+    sequence, so the reconstructed sum is bit-identical across shards
+    (lock-step safe, like a real psum).  What the top-k dropped stays in
+    the returned residual and rides the next round's message -- the
+    error-feedback invariant (DESIGN.md Sec. 14):
+
+        shipped_t + err_t = contrib_t + err_{t-1}
+
+    An inactive shard (``active == 0``) ships zero values (the collective
+    still runs -- SPMD -- but contributes nothing) and keeps its residual
+    untouched.  Returns ``(sum, err_new)``; exact when ``k == size``.
+    """
+    g = contrib.astype(jnp.float32) + err
+    vals, idx = topk_sparsify(g, k)
+    err_new = g - topk_reconstruct(vals, idx, g.size).reshape(g.shape)
+    if active is not None:
+        vals = jnp.where(active > 0, vals, jnp.zeros_like(vals))
+        err_new = jnp.where(active > 0, err_new, err)
+    vals_g = jax.lax.all_gather(vals, axes)  # (E, k)
+    idx_g = jax.lax.all_gather(idx, axes)
+    while vals_g.ndim > 2:  # tuple axes gather one leading dim per axis
+        vals_g = vals_g.reshape(-1, vals.shape[0])
+        idx_g = idx_g.reshape(-1, idx.shape[0])
+    total = topk_reconstruct(vals_g, idx_g, g.size).reshape(g.shape)
+    return total.astype(contrib.dtype), err_new
+
+
 def consensus_compress(
     g_local: Array,  # (m, k) this worker's gradient
     axes,  # mesh axis name(s) of the DP dimension
@@ -103,15 +161,25 @@ def consensus_compress(
     u = u / (jnp.linalg.norm(u, axis=0, keepdims=True) + 1e-12)
     v = jnp.zeros((k, ccfg.rank), jnp.float32)
 
+    k_keep = (None if ccfg.topk_frac is None
+              else topk_k(m * ccfg.rank, ccfg.topk_frac))
+
     def round_(carry, t):
-        u, v = carry
+        u, v, err = carry
         u_i, v, _ = fz.local_round(
             u, v, g_local.astype(jnp.float32), cfg=cfg, lam=lam,
             n_frac=1.0 / n_workers, eta=cfg.lr(t),
         )
-        return (jax.lax.pmean(u_i, axes), v), None
+        if k_keep is None:
+            return (jax.lax.pmean(u_i, axes), v, err), None
+        # pmean(u_i) == u + sum_i (u_i - u)/E, shipped top-k compressed.
+        delta, err = compressed_consensus_sum(
+            (u_i - u) / n_workers, axes, k_keep, err)
+        return (u + delta, v, err), None
 
-    (u, v), _ = jax.lax.scan(round_, (u, v), jnp.arange(ccfg.rounds))
+    err0 = jnp.zeros_like(u)
+    (u, v, _), _ = jax.lax.scan(round_, (u, v, err0),
+                                jnp.arange(ccfg.rounds))
     v_mean = jax.lax.pmean(v, axes)  # (k, r)
     return (u @ v_mean.T).astype(g_local.dtype)
 
@@ -152,10 +220,23 @@ def aggregate_tree(grads, axes, ccfg: CompressConfig, key: Array):
 
 
 def compression_ratio(shape: tuple[int, ...], ccfg: CompressConfig) -> float:
-    """Static per-step comm bytes: compressed / all-reduce."""
+    """Static per-step comm bytes: compressed / all-reduce.
+
+    Counts what actually crosses the wire per worker: per consensus
+    round either the dense f32 U factor (``m r * 4`` bytes) or, with
+    ``topk_frac`` set, the top-k payload at ``k * (4 + 4)`` bytes --
+    4 for the f32 value AND 4 for the int32 flat index.  Forgetting the
+    index bytes would overstate the top-k savings exactly 2x.  The final
+    V pmean (``k r`` f32) ships either way; the all-reduce reference is
+    the dense ``m k`` f32 gradient.
+    """
     if len(shape) < 2 or min(shape[-2:]) < ccfg.min_dim \
             or ccfg.rank >= min(shape[-2:]):
         return 1.0
     m, k = shape[-2:]
-    compressed = ccfg.rounds * m * ccfg.rank + k * ccfg.rank
-    return compressed / (m * k)
+    if ccfg.topk_frac is None:
+        round_bytes = m * ccfg.rank * 4
+    else:
+        round_bytes = topk_k(m * ccfg.rank, ccfg.topk_frac) * (4 + 4)
+    compressed = ccfg.rounds * round_bytes + k * ccfg.rank * 4
+    return compressed / (m * k * 4)

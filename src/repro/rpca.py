@@ -206,6 +206,11 @@ class SolverCaps:
     # solvers iterate f32 factors over it, while the convex SVD solvers
     # carry data-dtype (L, S) iterates and would fail deep inside the scan.
     supports_lowp: bool = False
+    # Runs over a mesh whose devices span OS processes (a jax.distributed
+    # runtime): the solver must be pure SPMD with lock-step collectives
+    # and host-side control flow identical on every process.  Only
+    # meaningful with supports_sharding.
+    supports_multiprocess: bool = False
 
 
 @dataclass(frozen=True)
@@ -357,6 +362,14 @@ def _check_caps(entry: SolverEntry, spec: RPCASpec) -> None:
         )
     if spec.mesh is not None and not caps.supports_sharding:
         raise _unsupported(entry.name, "device meshes", "supports_sharding")
+    if spec.mesh is not None and not caps.supports_multiprocess:
+        # Device set spanning OS processes (a jax.distributed runtime):
+        # only pure-SPMD solvers with lock-step collectives may run here.
+        if len({d.process_index for d in spec.mesh.devices.flat}) > 1:
+            raise _unsupported(
+                entry.name, "multi-process meshes (jax.distributed)",
+                "supports_multiprocess",
+            )
     if spec.batched and not caps.batchable:
         raise _unsupported(
             entry.name, "batched problems (leading problem axis)",

@@ -430,7 +430,12 @@ class RPCAService:
     def metrics(self) -> dict[str, Any]:
         """Serving metrics: slot occupancy plus the shared compile-cache
         counters (process-wide -- every service and the front door share
-        one cache) and this service's lam-calibration cache counters."""
+        one cache), this service's lam-calibration cache counters, and
+        the process-wide DCF consensus traffic counters (modelled bytes
+        shipped per consensus round and the achieved compression ratio;
+        see ``distributed.multihost.consensus_traffic``)."""
+        from repro.distributed import multihost as mh
+
         cache = cc.default_cache()
         return {
             "slots": int(self.scfg.slots),
@@ -446,6 +451,7 @@ class RPCAService:
                 "misses": self._lam_misses,
                 "entries": len(self._lam_cache),
             },
+            "consensus": mh.consensus_traffic(),
         }
 
     # -- convenience --------------------------------------------------------

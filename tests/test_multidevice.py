@@ -239,3 +239,40 @@ def test_collective_bytes_counting():
         print("OK", dict(c.collective))
     """)
     assert "OK" in out
+
+
+def test_sharded_engine_compressed_and_stale_wire():
+    """Consensus wire knobs on the sharded engine (DESIGN.md Sec. 14):
+    top-k + error-feedback compression and one-round-stale overlap both
+    recover, and full-k compression reproduces the dense trajectory."""
+    out = run_py("""
+        import jax
+        from repro.core import *
+        from repro.core.factorized import DCFConfig
+        from repro.distributed.grad_compress import CompressConfig
+        key = jax.random.PRNGKey(11)
+        p = generate_problem(key, 128, 160, rank=6, sparsity=0.05)
+        mesh = compat_mesh((8,), ("data",))
+        dense = DCFConfig.tuned(6, outer_iters=60)
+        r_d = dcf_pca_sharded(p.m_obs, dense, mesh)
+        e_d = float(relative_error(r_d.l, r_d.s, p.l0, p.s0))
+        comp = DCFConfig.tuned(
+            6, outer_iters=60,
+            consensus_compress=CompressConfig(topk_frac=0.1))
+        r_c = dcf_pca_sharded(p.m_obs, comp, mesh)
+        e_c = float(relative_error(r_c.l, r_c.s, p.l0, p.s0))
+        assert e_d < 1e-4, e_d
+        assert e_c <= 2.0 * e_d, (e_c, e_d)
+        full = DCFConfig.tuned(
+            6, outer_iters=60,
+            consensus_compress=CompressConfig(topk_frac=1.0))
+        r_f = dcf_pca_sharded(p.m_obs, full, mesh)
+        e_f = float(relative_error(r_f.l, r_f.s, p.l0, p.s0))
+        assert abs(e_f - e_d) < 1e-5, (e_f, e_d)
+        stale = DCFConfig.tuned(6, outer_iters=60, consensus_delay=1)
+        r_s = dcf_pca_sharded(p.m_obs, stale, mesh)
+        e_s = float(relative_error(r_s.l, r_s.s, p.l0, p.s0))
+        assert e_s <= 2.0 * e_d, (e_s, e_d)
+        print("OK", e_d, e_c, e_s)
+    """)
+    assert "OK" in out
