@@ -86,7 +86,12 @@ def make_solver(cfg: IALMConfig) -> rt.Solver:
             )
         # _problem zero-fills hidden entries, so p.m_obs is already
         # P_Omega(M) and every norm below is an observed-entry norm.
-        norm2 = jnp.linalg.norm(p.m_obs, ord=2)
+        # Zero-matrix guard (RPCA-SAN: service lanes init on empty slot
+        # planes; 0/0 here put NaNs in y and inf in mu).  max(x, tiny) is
+        # bit-exact x for any real problem, and the zero case yields the
+        # correct fixed point y = 0.
+        tiny = jnp.asarray(1e-30, p.m_obs.dtype)
+        norm2 = jnp.maximum(jnp.linalg.norm(p.m_obs, ord=2), tiny)
         # Standard IALM initialization (Lin et al. 2010).
         j2 = jnp.maximum(norm2, jnp.max(jnp.abs(p.m_obs)) / lam)
         mu0 = cfg.mu_factor / norm2

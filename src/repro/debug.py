@@ -1,0 +1,95 @@
+"""Runtime sanitizer mode (the dynamic half of `tools/analysis`).
+
+The static passes catch what is provable from source; this module turns
+on jax's runtime tripwires for everything that isn't:
+
+* ``jax_debug_nans``        — raise at the first NaN-producing primitive
+                              instead of silently propagating through a
+                              solve (catches bad lam / division blowups).
+* ``jax_check_tracer_leaks`` — a tracer escaping its trace (stashed on a
+                              module or closure) raises instead of
+                              surfacing later as a cryptic error; the
+                              dynamic complement of R001's mutable-
+                              capture check.
+* transfer guard            — implicit device<->host transfers inside
+                              the solve path log (or raise, in strict
+                              mode); the dynamic complement of R002/R003
+                              (a stray ``float(x)`` in a hot loop is
+                              both a sync point and a desync hazard
+                              under multi-process meshes).
+
+Activation::
+
+    RPCA_SANITIZE=1       # log-level transfer guard + nan/tracer checks
+    RPCA_SANITIZE=strict  # transfer guard hard-fails on implicit transfers
+    RPCA_SANITIZE=0       # (or unset) no-op
+
+``tests/conftest.py`` calls :func:`enable_from_env` at session start, so
+``RPCA_SANITIZE=1 pytest ...`` sanitizes the whole suite process-wide;
+CI runs a tier-1 subset under it on every push.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+_ACTIVE: dict | None = None
+
+
+def _truthy(val: str) -> bool:
+    return val.strip().lower() in ("1", "true", "on", "yes", "strict")
+
+
+def sanitize_mode() -> str | None:
+    """``"strict"``, ``"log"`` or ``None`` from ``RPCA_SANITIZE``."""
+    raw = os.environ.get("RPCA_SANITIZE", "")
+    if not _truthy(raw):
+        return None
+    return "strict" if raw.strip().lower() == "strict" else "log"
+
+
+def enable(mode: str = "log") -> dict:
+    """Turn the sanitizers on process-wide; returns the previous config
+    values so :func:`disable` can restore them.  Idempotent."""
+    global _ACTIVE
+    if _ACTIVE is not None:
+        return _ACTIVE
+    # "log" keeps CPU test runs green (host staging of scalars/np inputs
+    # is routine there) while still surfacing every implicit transfer in
+    # the log; "strict" = disallow is the TPU/multi-host setting where an
+    # implicit transfer is a genuine bug.
+    guard = "disallow" if mode == "strict" else "log"
+    prev = {
+        "jax_debug_nans": jax.config.jax_debug_nans,
+        "jax_check_tracer_leaks": jax.config.jax_check_tracer_leaks,
+        "jax_transfer_guard": jax.config.jax_transfer_guard,
+    }
+    jax.config.update("jax_debug_nans", True)
+    jax.config.update("jax_check_tracer_leaks", True)
+    jax.config.update("jax_transfer_guard", guard)
+    _ACTIVE = prev
+    return prev
+
+
+def disable() -> None:
+    """Restore the pre-:func:`enable` config (no-op when inactive)."""
+    global _ACTIVE
+    if _ACTIVE is None:
+        return
+    for key, val in _ACTIVE.items():
+        jax.config.update(key, val)
+    _ACTIVE = None
+
+
+def active() -> bool:
+    return _ACTIVE is not None
+
+
+def enable_from_env() -> bool:
+    """Enable iff ``RPCA_SANITIZE`` asks for it; True when activated."""
+    mode = sanitize_mode()
+    if mode is None:
+        return False
+    enable(mode)
+    return True

@@ -1,9 +1,34 @@
-"""Pallas-TPU version-compatibility aliases.
+"""Pallas-TPU version-compatibility aliases + shared kernel knobs.
 
 jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``
 (jax >= 0.5-era); resolve whichever this jax ships so the kernels run
 under both (interpret mode on CPU included).
 """
+import os
+
+import jax
 from jax.experimental.pallas import tpu as _pltpu
 
 CompilerParams = getattr(_pltpu, "CompilerParams", None) or _pltpu.TPUCompilerParams
+
+
+def should_interpret(interpret: "bool | None") -> bool:
+    """Canonical interpret-mode resolution for EVERY kernel entry point.
+
+    Order: explicit caller arg > ``RPCA_INTERPRET`` env (``1``/``true``/
+    ``on`` forces interpret, ``0``/``false``/``off`` forces compiled) >
+    backend default (interpret everywhere except real TPU).
+
+    ``interpret`` is a jit ``static_argnames`` participant at every call
+    site, so this resolves at trace time: one executable per resolved
+    value, and the env override is captured per (shape, static-args)
+    trace -- flip it before the first call of a process, not mid-stream.
+    """
+    if interpret is not None:
+        return interpret
+    env = os.environ.get("RPCA_INTERPRET", "").strip().lower()
+    if env in ("1", "true", "on", "yes"):
+        return True
+    if env in ("0", "false", "off", "no"):
+        return False
+    return jax.default_backend() != "tpu"

@@ -120,8 +120,7 @@ def flash_attention(
     q_steps = qb.shape[1] // bq_
     kv_steps = kb.shape[1] // bk_
 
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    interpret = compat.should_interpret(interpret)
 
     kernel = functools.partial(
         _flash_kernel, scale=scale, causal=causal, bq=bq_, bk=bk_,

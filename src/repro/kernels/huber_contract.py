@@ -148,10 +148,9 @@ def _contract_u_masked_kernel(u_ref, v_ref, m_ref, w_ref, lam_ref, out_ref):
                             preferred_element_type=jnp.float32)
 
 
-def _should_interpret(interpret: bool | None) -> bool:
-    if interpret is None:
-        return jax.default_backend() != "tpu"
-    return interpret
+# Canonical resolution lives in kernels.compat (env-aware, one pattern
+# for every entry point); this alias keeps existing importers working.
+_should_interpret = compat.should_interpret
 
 
 @functools.partial(

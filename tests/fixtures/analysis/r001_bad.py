@@ -1,0 +1,29 @@
+"""R001 bad fixture: retrace hazards a jit boundary must not have."""
+import functools
+
+import jax
+
+_WARM_CACHE = {}  # mutable module state
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def contract(
+    x,
+    bm: int = 256,
+    bn: int = 256,  # EXPECT: RPCA-R001  (int param not in static_argnames)
+    interpret: bool = False,  # EXPECT: RPCA-R001  (bool param not static)
+):
+    return x * bm * bn * (1 if interpret else 2)
+
+
+@jax.jit
+def lookup(x):
+    scale = _WARM_CACHE.get("scale", 1.0)  # EXPECT: RPCA-R001  (mutable capture)
+    return x * scale
+
+
+def solve(x, mode: str = "fast"):  # EXPECT: RPCA-R001  ('mode' via inline jit below)
+    return x if mode == "fast" else -x
+
+
+solve_jit = jax.jit(solve)

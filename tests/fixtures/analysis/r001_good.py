@@ -1,0 +1,27 @@
+"""R001 good fixture: every plain-Python param is static; no mutable
+module state is captured."""
+import functools
+
+import jax
+
+LANE = 128  # immutable module constant: fine to close over
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def contract(x, bm: int = 256, bn: int = 256, interpret: bool = False):
+    return x * bm * bn * LANE * (1 if interpret else 2)
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def solve(x, mode: str = "fast", tol: float = 1e-6, scale: "float | None" = None):
+    # float / float|None params trace fine as weak-typed operands
+    del tol, scale
+    return x if mode == "fast" else -x
+
+
+def step(x, rank=None):
+    # unannotated params are never flagged (could be arrays)
+    return x if rank is None else x[:rank]
+
+
+step_jit = jax.jit(step)

@@ -1,0 +1,36 @@
+"""R002 bad fixture: donated buffers read after the donating call."""
+import jax
+import jax.numpy as jnp
+
+
+def step(carry, x):
+    return carry + x, x
+
+
+_step = jax.jit(step, donate_argnums=(0,))
+
+
+def tick(carry, x):
+    new_carry, y = _step(carry, x)
+    return new_carry + carry, y  # EXPECT: RPCA-R002  (carry donated above)
+
+
+def tick_inline(carry, x):
+    out = jax.jit(step, donate_argnums=(0,))(carry, x)
+    norm = jnp.linalg.norm(carry)  # EXPECT: RPCA-R002  (read after donation)
+    return out, norm
+
+
+def tick_loop(carries, x):
+    acc = x
+    for c in carries:
+        out, _ = _step(acc, c)
+        acc = out
+    return acc
+
+
+def tick_loop_bad(carry, xs):
+    for x in xs:
+        out, _ = _step(carry, x)
+        carry = carry + out  # EXPECT: RPCA-R002  (loop-carried dead read)
+    return carry

@@ -1,0 +1,34 @@
+"""R002 good fixture: every donated name is rebound before any read."""
+import jax
+
+
+def step(carry, x):
+    return carry + x, x
+
+
+_step = jax.jit(step, donate_argnums=(0,))
+
+
+def tick(carry, x):
+    carry, y = _step(carry, x)  # tuple-unpack rebinding revives 'carry'
+    return carry + y
+
+
+def tick_branchy(carry, x, fast):
+    if fast:
+        carry, _ = _step(carry, x)
+    else:
+        carry, _ = _step(carry, 2 * x)
+    return carry  # rebound on both paths
+
+
+def tick_loop(carry, xs):
+    for x in xs:
+        carry, _ = _step(carry, x)  # rebound each iteration
+    return carry
+
+
+def build(carry, x):
+    # assigning the jitted callable and never calling it is fine
+    fn = jax.jit(step, donate_argnums=(0,))
+    return fn, carry, x

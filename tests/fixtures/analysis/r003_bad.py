@@ -1,0 +1,26 @@
+"""R003 bad fixture: collectives under data-dependent host control flow."""
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+
+
+def build(mesh, specs):
+    def body(m_local, u):
+        err = jnp.sum(jnp.abs(m_local - u))
+        if err > 1.0:  # per-shard value in a Python if
+            u = jax.lax.pmean(u, "clients")  # EXPECT: RPCA-R003
+        k = 0
+        while jnp.any(u > 0):  # tainted while
+            k += 1
+            total = jax.lax.psum(u, "clients")  # EXPECT: RPCA-R003
+            u = u - total
+        return u
+
+    return shard_map(body, mesh, in_specs=specs, out_specs=specs)
+
+
+def driver(x):
+    idx = jax.lax.axis_index("clients")
+    if idx == 0:  # axis_index diverges per process
+        x = jax.lax.psum(x, "clients")  # EXPECT: RPCA-R003
+    return x

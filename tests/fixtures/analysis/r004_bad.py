@@ -1,0 +1,22 @@
+"""R004 bad fixture: a pallas_call whose double-buffered working set
+provably exceeds the 16 MiB VMEM budget."""
+import jax
+from jax.experimental import pallas as pl
+
+BM = 2048
+BN = 2048
+
+
+def kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def contract(x):
+    # 2048x2048 f32 = 16 MiB per block, x2 in/out, x2 double-buffered
+    return pl.pallas_call(  # EXPECT: RPCA-R004
+        kernel,
+        grid=(8, 8),
+        in_specs=[pl.BlockSpec((BM, BN), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)

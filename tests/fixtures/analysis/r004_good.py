@@ -1,0 +1,27 @@
+"""R004 good fixture: tiles sized like the repo's kernels -- resident
+accumulator + modest double-buffered tiles, well under budget."""
+import jax
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 256
+DEFAULT_BN = 256
+R_PAD = 128
+
+
+def kernel(x_ref, u_ref, v_ref):
+    v_ref[...] = x_ref[...] @ u_ref[...]
+
+
+def contract(x, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN):
+    n_p = 8192
+    return pl.pallas_call(
+        kernel,
+        grid=(32, 32),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, R_PAD), lambda i, j: (i, 0)),
+        ],
+        # grid-resident accumulator: constant index map => single copy
+        out_specs=pl.BlockSpec((8192, R_PAD), lambda i, j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_p, R_PAD), x.dtype),
+    )(x)

@@ -1,0 +1,21 @@
+"""R005 bad fixture: SolverCaps claims the adapter does not implement."""
+from repro import rpca as _rpca
+
+
+def _solve(m_obs, rank):
+    return m_obs, m_obs, None, None, {}
+
+
+def _registry_make(spec, cfg, run_cfg):
+    # never touches spec.mask / spec.num_clients despite the claims below
+    l, s, u, v, stats = _solve(spec.m_obs, 4)
+    return l, s, u, v, stats
+
+
+_rpca.register_solver(  # EXPECT: RPCA-R005
+    "bad_solver",
+    _rpca.SolverCaps(supports_mask=True, supports_clients=True,
+                     supports_factors=True, supports_service=True,
+                     supports_multiprocess=True),
+    _registry_make,
+)

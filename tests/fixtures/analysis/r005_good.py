@@ -1,0 +1,34 @@
+"""R005 good fixture: every SolverCaps claim is backed by the adapter."""
+from repro import rpca as _rpca
+
+
+def _resolve_num_clients(spec):
+    return spec.num_clients or 1
+
+
+def _solve(m_obs, mask, num_clients, participation, rank):
+    u = m_obs[:, :rank]
+    v = m_obs[:rank, :]
+    return m_obs, m_obs, u, v, {}
+
+
+def _registry_make(spec, cfg, run_cfg):
+    rank = _rpca.require_rank("good_solver", spec)
+    return _solve(spec.m_obs, spec.mask, _resolve_num_clients(spec),
+                  spec.participation, rank)
+
+
+def _service_hooks():
+    return _rpca.ServiceHooks(make_solver=None, empty_problems=None,
+                              make_problem=None, unpack=None,
+                              warm_layout=None, cfg_type=None)
+
+
+_rpca.register_solver(
+    "good_solver",
+    _rpca.SolverCaps(supports_mask=True, supports_clients=True,
+                     supports_participation=True, supports_factors=True,
+                     needs_rank=True, supports_service=True),
+    _registry_make,
+    service=_service_hooks(),
+)

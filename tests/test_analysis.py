@@ -1,0 +1,180 @@
+"""Golden-file + seeded-violation tests for the static-analysis suite.
+
+Each rule has a good/bad fixture pair under tests/fixtures/analysis/:
+the bad fixture carries `# EXPECT: RPCA-RXXX` markers on the exact lines
+the rule must flag, and the good fixture must be silent under ALL rules.
+On top of that, the committed tree itself must be clean, and seeding a
+lock-step / donation violation into a scratch copy of dcf_pca.py must
+produce a finding with the right rule ID and line.
+"""
+from pathlib import Path
+
+import pytest
+
+from tools.analysis import ALL_RULES, Baseline, analyze
+from tools.analysis.rules import RULES_BY_ID
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = REPO / "tests" / "fixtures" / "analysis"
+RULE_IDS = ("RPCA-R001", "RPCA-R002", "RPCA-R003", "RPCA-R004", "RPCA-R005")
+
+
+def expected_findings(path: Path) -> set[tuple[str, int]]:
+    """(rule, line) pairs from `# EXPECT: RPCA-RXXX` markers."""
+    out = set()
+    for lineno, text in enumerate(path.read_text().splitlines(), start=1):
+        if "EXPECT:" in text:
+            marker = text.split("EXPECT:", 1)[1].strip().split()[0]
+            out.add((marker, lineno))
+    return out
+
+
+@pytest.mark.parametrize("rule_id", RULE_IDS)
+def test_bad_fixture_fails_with_exact_lines(rule_id):
+    num = rule_id.split("-R")[1]
+    path = FIXTURES / f"r{num}_bad.py"
+    expected = expected_findings(path)
+    assert expected, f"{path} has no EXPECT markers"
+    new, suppressed = analyze([path], [RULES_BY_ID[rule_id]], Baseline([]))
+    assert not suppressed
+    got = {(f.rule, f.line) for f in new}
+    assert got == expected, (
+        f"{rule_id} findings {sorted(got)} != expected {sorted(expected)}"
+    )
+
+
+@pytest.mark.parametrize("rule_id", RULE_IDS)
+def test_good_fixture_is_clean_under_all_rules(rule_id):
+    num = rule_id.split("-R")[1]
+    path = FIXTURES / f"r{num}_good.py"
+    new, _ = analyze([path], ALL_RULES, Baseline([]))
+    assert new == [], [f.format() for f in new]
+
+
+def test_src_repro_is_clean_post_fix():
+    """The PR's acceptance gate: the committed tree has zero new findings
+    (CI runs the same check via `python -m tools.analysis src/repro`)."""
+    baseline = Baseline.load(REPO / "tools" / "analysis" / "baseline.json")
+    new, _ = analyze([REPO / "src" / "repro"], ALL_RULES, baseline)
+    assert new == [], [f.format() for f in new]
+
+
+def test_noqa_suppression_end_to_end(tmp_path):
+    lines = (FIXTURES / "r004_bad.py").read_text().splitlines()
+    patched = "\n".join(
+        l.replace("# EXPECT: RPCA-R004", "# noqa: RPCA-R004 fixture copy")
+        for l in lines
+    )
+    scratch = tmp_path / "r004_noqa.py"
+    scratch.write_text(patched)
+    new, suppressed = analyze([scratch], ALL_RULES, Baseline([]))
+    assert new == []
+    assert {f.rule for f in suppressed} == {"RPCA-R004"}
+
+
+def test_baseline_suppresses_by_symbol_not_line(tmp_path):
+    path = FIXTURES / "r001_bad.py"
+    new, _ = analyze([path], [RULES_BY_ID["RPCA-R001"]], Baseline([]))
+    assert new
+    entries = [{"rule": f.rule, "file": f.path, "symbol": f.symbol,
+                "why": "test"} for f in new]
+    new2, suppressed = analyze([path], [RULES_BY_ID["RPCA-R001"]],
+                               Baseline(entries))
+    assert new2 == []
+    assert len(suppressed) == len(new)
+
+
+# ---------------------------------------------------------------------------
+# Seeded violations in a scratch copy of the real solver module
+# ---------------------------------------------------------------------------
+DCF = REPO / "src" / "repro" / "core" / "dcf_pca.py"
+
+
+def _clean_scratch(tmp_path) -> list[str]:
+    src = DCF.read_text()
+    return src.splitlines()
+
+
+def test_seeded_lockstep_violation_in_dcf(tmp_path):
+    """Conditioning a psum on shard data inside the shard_map body of
+    dcf_pca.py must produce RPCA-R003 at the collective's line."""
+    lines = _clean_scratch(tmp_path)
+    anchor = lines.index('        m_local_full = packed["m"]')
+    inject = [
+        "        if m_local_full.sum() > 0:",
+        '            jax.lax.psum(1.0, "clients")',
+    ]
+    seeded = lines[:anchor + 1] + inject + lines[anchor + 1:]
+    scratch = tmp_path / "dcf_pca_seeded.py"
+    scratch.write_text("\n".join(seeded))
+    psum_line = anchor + 3  # 1-based line of the injected psum
+
+    new, _ = analyze([scratch], ALL_RULES, Baseline([]))
+    hits = [(f.rule, f.line) for f in new]
+    assert ("RPCA-R003", psum_line) in hits, hits
+
+
+def test_seeded_donation_violation_in_dcf(tmp_path):
+    """Reading a donated buffer after the donating call in a scratch copy
+    of dcf_pca.py must produce RPCA-R002 at the read's line."""
+    lines = _clean_scratch(tmp_path)
+    inject = [
+        "",
+        "",
+        "def _seeded_tick(carry, x):",
+        "    out = jax.jit(_solve, donate_argnums=(0,))(carry, x)",
+        "    return carry + out",
+    ]
+    seeded = lines + inject
+    scratch = tmp_path / "dcf_pca_seeded.py"
+    scratch.write_text("\n".join(seeded))
+    read_line = len(lines) + 5  # the `return carry + out` line, 1-based
+
+    new, _ = analyze([scratch], ALL_RULES, Baseline([]))
+    hits = [(f.rule, f.line) for f in new]
+    assert ("RPCA-R002", read_line) in hits, hits
+
+
+def test_unseeded_scratch_copy_is_clean(tmp_path):
+    """Control: the untouched dcf_pca.py source has no findings, so the
+    two tests above are detecting exactly the seeded lines."""
+    scratch = tmp_path / "dcf_pca_copy.py"
+    scratch.write_text(DCF.read_text())
+    new, _ = analyze([scratch], ALL_RULES, Baseline([]))
+    assert new == [], [f.format() for f in new]
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+def test_cli_exit_codes(tmp_path):
+    import subprocess
+    import sys
+
+    bad = FIXTURES / "r004_bad.py"
+    ok = subprocess.run(
+        [sys.executable, "-m", "tools.analysis", "--no-baseline", str(bad)],
+        capture_output=True, text=True, cwd=REPO,
+    )
+    assert ok.returncode == 1
+    assert "RPCA-R004" in ok.stdout
+
+    good = FIXTURES / "r004_good.py"
+    ok = subprocess.run(
+        [sys.executable, "-m", "tools.analysis", "--no-baseline", str(good)],
+        capture_output=True, text=True, cwd=REPO,
+    )
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+
+
+def test_cli_list_rules():
+    import subprocess
+    import sys
+
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.analysis", "--list-rules", "x"],
+        capture_output=True, text=True, cwd=REPO,
+    )
+    assert proc.returncode == 0
+    for rid in RULE_IDS:
+        assert rid in proc.stdout

@@ -95,6 +95,7 @@ def test_front_door_reexport():
 # ---------------------------------------------------------------------------
 # The acceptance invariant: warm dispatch compiles nothing
 # ---------------------------------------------------------------------------
+@pytest.mark.sanitizer_incompatible("debug_nans adds de-opt compiles")
 def test_second_solve_same_bucket_zero_compiles(fresh_cache, xla_compiles):
     p = _gen(48, 40)
     cfg = _cf_cfg()
@@ -127,6 +128,7 @@ def test_second_solve_same_bucket_zero_compiles(fresh_cache, xla_compiles):
     assert len(fresh_cache) == 1
 
 
+@pytest.mark.sanitizer_incompatible("debug_nans adds de-opt compiles")
 def test_warm_dispatch_zero_compiles_convex(fresh_cache, xla_compiles):
     p = _gen(40, 36)
     cfg = IALMConfig(iters=10)

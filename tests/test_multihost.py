@@ -171,6 +171,7 @@ def test_stale_consensus_parity():
     assert e_s <= 2.0 * e_d, (e_s, e_d)
 
 
+@pytest.mark.sanitizer_incompatible("seeds a divergent run; NaN/inf is the point")
 def test_stale_guard_trips_on_divergence():
     """A seeded divergent run (raw preconditioning, absurd fixed step)
     must trip the staleness guard back to synchronous application."""

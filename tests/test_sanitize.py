@@ -1,0 +1,128 @@
+"""Runtime sanitizer mode (repro.debug) + canonical interpret resolution.
+
+The sanitizer is the dynamic half of tools/analysis: RPCA_SANITIZE=1
+must flip on debug_nans / tracer-leak checks / the transfer guard
+process-wide, and disable() must restore the previous config exactly.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import debug
+from repro.kernels import compat, huber_contract, shrinkage
+
+
+class TestSanitizeMode:
+    def test_mode_parsing(self, monkeypatch):
+        cases = {
+            "1": "log", "true": "log", "on": "log", "yes": "log",
+            "strict": "strict",
+            "0": None, "false": None, "off": None, "": None,
+        }
+        for raw, want in cases.items():
+            monkeypatch.setenv("RPCA_SANITIZE", raw)
+            assert debug.sanitize_mode() == want, raw
+        monkeypatch.delenv("RPCA_SANITIZE")
+        assert debug.sanitize_mode() is None
+
+    def test_enable_disable_roundtrip(self):
+        before = (
+            jax.config.jax_debug_nans,
+            jax.config.jax_check_tracer_leaks,
+            jax.config.jax_transfer_guard,
+        )
+        was_active = debug.active()
+        debug.enable("log")
+        try:
+            assert debug.active()
+            assert jax.config.jax_debug_nans is True
+            assert jax.config.jax_check_tracer_leaks is True
+        finally:
+            if not was_active:
+                debug.disable()
+        if not was_active:
+            after = (
+                jax.config.jax_debug_nans,
+                jax.config.jax_check_tracer_leaks,
+                jax.config.jax_transfer_guard,
+            )
+            assert after == before
+            assert not debug.active()
+
+    def test_enable_is_idempotent(self):
+        was_active = debug.active()
+        first = debug.enable("log")
+        second = debug.enable("log")
+        assert first is second  # second call returns the SAME saved state
+        if not was_active:
+            debug.disable()
+
+    def test_enable_from_env(self, monkeypatch):
+        if debug.active():
+            pytest.skip("session already sanitized via RPCA_SANITIZE")
+        monkeypatch.delenv("RPCA_SANITIZE", raising=False)
+        assert debug.enable_from_env() is False
+        monkeypatch.setenv("RPCA_SANITIZE", "1")
+        try:
+            assert debug.enable_from_env() is True
+            assert debug.active()
+        finally:
+            debug.disable()
+
+    def test_debug_nans_raises_under_sanitizer(self, sanitizer):
+        with pytest.raises(FloatingPointError):
+            jnp.divide(jnp.zeros(()), jnp.zeros(())).block_until_ready()
+
+    def test_solver_path_is_nan_free_under_sanitizer(self, sanitizer, rng):
+        """A real solve under the sanitizer: no NaNs anywhere in the apgm
+        pipeline (this is the CI sanitizer leg's contract in miniature)."""
+        from repro import rpca
+        from repro.core import generate_problem
+
+        p = generate_problem(rng, 24, 24, 2, 0.05)
+        res = rpca.solve(p.m_obs, method="apgm")
+        assert bool(jnp.isfinite(res.l).all())
+
+
+class TestInterpretResolution:
+    """Satellite: one canonical _should_interpret for every kernel entry
+    point (it is a jit static_argnames participant, so R001-adjacent)."""
+
+    def test_single_canonical_binding(self):
+        assert huber_contract._should_interpret is compat.should_interpret
+        # shrinkage imports the alias from huber_contract
+        assert shrinkage._should_interpret is compat.should_interpret
+
+    def test_explicit_arg_wins(self, monkeypatch):
+        monkeypatch.setenv("RPCA_INTERPRET", "0")
+        assert compat.should_interpret(True) is True
+        monkeypatch.setenv("RPCA_INTERPRET", "1")
+        assert compat.should_interpret(False) is False
+
+    def test_env_override(self, monkeypatch):
+        monkeypatch.setenv("RPCA_INTERPRET", "1")
+        assert compat.should_interpret(None) is True
+        monkeypatch.setenv("RPCA_INTERPRET", "off")
+        assert compat.should_interpret(None) is False
+
+    def test_backend_default(self, monkeypatch):
+        monkeypatch.delenv("RPCA_INTERPRET", raising=False)
+        want = jax.default_backend() != "tpu"
+        assert compat.should_interpret(None) is want
+
+    def test_flash_attention_uses_canonical_path(self, monkeypatch, rng):
+        """flash_attention used to inline its own `interpret is None`
+        check; it must now honor the canonical env override."""
+        from repro.kernels import flash_attention as fa
+
+        seen = []
+        real = compat.should_interpret
+
+        def spy(interpret):
+            seen.append(interpret)
+            return real(interpret)
+
+        monkeypatch.setattr(compat, "should_interpret", spy)
+        q = jax.random.normal(rng, (1, 16, 1, 8))
+        fa.flash_attention(q, q, q)
+        assert None in seen

@@ -1,0 +1,47 @@
+"""Repo-native static-analysis suite (DESIGN.md Sec. 15).
+
+Five AST passes over ``src/repro`` enforcing the PR 5-7 invariants:
+
+==========  ================================================================
+RPCA-R001   retrace-hazard: jitted functions whose bool/int/str params are
+            missing from ``static_argnames``, or that close over mutable
+            module state (kills the PR-6 zero-recompile guarantee).
+RPCA-R002   donation-aliasing: a name passed at a ``donate_argnums``
+            position must not be read after the call (donated buffers are
+            invalidated; reuse silently corrupts).
+RPCA-R003   collective lock-step: inside ``shard_map`` bodies, ``psum`` /
+            ``pmean`` / all-gather under host ``if``/``while`` on
+            non-replicated values deadlocks multi-process meshes (PR 7).
+RPCA-R004   Pallas VMEM budget: worst-case VMEM working set of each
+            ``pl.pallas_call`` in ``kernels/`` must fit the per-backend
+            budget (generalizes the ``RESIDENT_OUT_V_BYTES`` guard).
+RPCA-R005   registry-contract: each ``SolverCaps`` claim must match the
+            solver's actual implementation (``supports_mask`` => reads
+            ``spec.mask``, ...).
+==========  ================================================================
+
+Usage::
+
+    python -m tools.analysis src/repro            # gate vs committed baseline
+    python -m tools.analysis --no-baseline PATH   # raw findings
+    python -m tools.analysis --write-baseline P   # (re)generate suppressions
+"""
+from __future__ import annotations
+
+from tools.analysis.core import (
+    Baseline,
+    Finding,
+    ModuleInfo,
+    Rule,
+    analyze,
+)
+from tools.analysis.rules import ALL_RULES
+
+__all__ = [
+    "ALL_RULES",
+    "Baseline",
+    "Finding",
+    "ModuleInfo",
+    "Rule",
+    "analyze",
+]

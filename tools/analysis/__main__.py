@@ -1,0 +1,79 @@
+"""CLI for the repo static-analysis suite.
+
+Exit codes: 0 = clean (or all findings baselined), 1 = new findings,
+2 = usage error.  CI runs ``python -m tools.analysis src/repro`` as an
+empty-delta gate against ``tools/analysis/baseline.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from tools.analysis.core import Baseline, analyze
+from tools.analysis.rules import ALL_RULES, RULES_BY_ID
+
+DEFAULT_BASELINE = Path(__file__).parent / "baseline.json"
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.analysis",
+        description="RPCA repo static analysis (rules RPCA-R001..R005)",
+    )
+    parser.add_argument("paths", nargs="+", help="files or directories")
+    parser.add_argument("--rules", default=None,
+                        help="comma-separated rule IDs (default: all)")
+    parser.add_argument("--baseline", default=str(DEFAULT_BASELINE),
+                        help="suppression baseline JSON")
+    parser.add_argument("--no-baseline", action="store_true",
+                        help="ignore the baseline; report raw findings")
+    parser.add_argument("--write-baseline", action="store_true",
+                        help="write current findings as the new baseline "
+                             "(fill in the 'why' fields before committing)")
+    parser.add_argument("--list-rules", action="store_true")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for rule in ALL_RULES:
+            print(f"{rule.id}  {rule.name}: {rule.doc}")
+        return 0
+
+    if args.rules:
+        try:
+            rules = [RULES_BY_ID[r.strip()] for r in args.rules.split(",")]
+        except KeyError as e:
+            print(f"unknown rule {e}; known: {sorted(RULES_BY_ID)}",
+                  file=sys.stderr)
+            return 2
+    else:
+        rules = list(ALL_RULES)
+
+    baseline = Baseline([]) if args.no_baseline else \
+        Baseline.load(Path(args.baseline))
+    new, suppressed = analyze(args.paths, rules, baseline)
+
+    if args.write_baseline:
+        Baseline.dump(new + suppressed, Path(args.baseline))
+        print(f"wrote {args.baseline} "
+              f"({len(new) + len(suppressed)} suppressions)")
+        return 0
+
+    for f in new:
+        print(f.format())
+    if suppressed:
+        print(f"[{len(suppressed)} finding(s) suppressed by baseline/noqa]",
+              file=sys.stderr)
+    if new:
+        print(f"\n{len(new)} new finding(s). Fix them, add an inline "
+              f"'# noqa: <rule-id>' with a reason, or baseline them in "
+              f"{args.baseline} with a one-line justification.",
+              file=sys.stderr)
+        return 1
+    print(f"static-analysis clean: {len(ALL_RULES) if not args.rules else len(rules)} "
+          f"rule(s), 0 new finding(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

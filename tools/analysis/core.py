@@ -1,0 +1,383 @@
+"""Shared machinery for the repo-native static-analysis passes.
+
+The suite (DESIGN.md Sec. 15) machine-enforces invariants the runtime test
+suite can only sample: every rule is a pure AST pass over the target tree
+(nothing is imported or executed), emits :class:`Finding` records with a
+stable rule ID and ``file:line`` location, and is gated in CI against a
+committed suppression baseline -- the build fails on any *new* finding.
+
+Vocabulary
+----------
+``Finding``     one violation: rule ID, file, line, enclosing symbol,
+                message.  Baseline matching is line-number-independent
+                (rule, file, symbol) so unrelated edits don't churn it.
+``Rule``        a registered pass: ``id``, ``name``, ``doc`` and
+                ``check(module) -> list[Finding]``.
+``ModuleInfo``  one parsed source file plus the shared lookups every rule
+                needs (qualnames, module constants, parent links).
+``Baseline``    the committed suppression list (``baseline.json``): each
+                entry carries a one-line justification and suppresses
+                matching findings.  ``# noqa: RPCA-RXXX`` on the flagged
+                line is the inline equivalent for fixtures/tests.
+"""
+from __future__ import annotations
+
+import ast
+import json
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Callable, Iterable
+
+#: Sentinel for "could not be resolved statically".  Rules must treat
+#: unresolved values conservatively (skip, don't guess) to keep the
+#: false-positive rate near zero -- a noisy pass gets turned off.
+UNRESOLVED = object()
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation at a concrete source location."""
+
+    rule: str  # stable rule ID, e.g. "RPCA-R001"
+    path: str  # posix path as given to the analyzer (repo-relative in CI)
+    line: int  # 1-based line of the offending node
+    symbol: str  # enclosing function/class qualname, or "<module>"
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} [{self.symbol}] {self.message}"
+
+    def key(self) -> tuple[str, str, str]:
+        """Baseline identity: line numbers excluded so edits above a
+        suppressed site don't invalidate the suppression."""
+        return (self.rule, self.path, self.symbol)
+
+
+@dataclass(frozen=True)
+class Rule:
+    id: str
+    name: str
+    doc: str
+    check: Callable[["ModuleInfo"], "list[Finding]"]
+
+
+class ModuleInfo:
+    """One parsed module + the lookups shared by every rule."""
+
+    def __init__(self, path: Path, display_path: str, source: str):
+        self.path = path
+        self.display_path = display_path
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=str(path))
+        self._parents: dict[ast.AST, ast.AST] = {}
+        self._qualnames: dict[ast.AST, str] = {}
+        self._index()
+        self.constants = self._module_constants()
+
+    # -- structure ---------------------------------------------------------
+    def _index(self) -> None:
+        def walk(node: ast.AST, parent: ast.AST | None, scope: list[str]):
+            if parent is not None:
+                self._parents[node] = parent
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                scope = scope + [node.name]
+                self._qualnames[node] = ".".join(scope)
+            for child in ast.iter_child_nodes(node):
+                walk(child, node, scope)
+
+        walk(self.tree, None, [])
+
+    def parent(self, node: ast.AST) -> ast.AST | None:
+        return self._parents.get(node)
+
+    def qualname(self, node: ast.AST) -> str:
+        """Qualname of the innermost enclosing def/class (or ``<module>``)."""
+        cur: ast.AST | None = node
+        while cur is not None:
+            q = self._qualnames.get(cur)
+            if q is not None:
+                return q
+            cur = self._parents.get(cur)
+        return "<module>"
+
+    def functions(self) -> list[ast.FunctionDef]:
+        return [n for n in ast.walk(self.tree)
+                if isinstance(n, ast.FunctionDef)]
+
+    def module_functions(self) -> dict[str, ast.FunctionDef]:
+        """Top-level function defs by name."""
+        return {n.name: n for n in self.tree.body
+                if isinstance(n, ast.FunctionDef)}
+
+    # -- constants ---------------------------------------------------------
+    def _module_constants(self) -> dict[str, Any]:
+        """Top-level ``NAME = <literal>`` bindings, constant-folded."""
+        env: dict[str, Any] = {}
+        for stmt in self.tree.body:
+            if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+                tgt = stmt.targets[0]
+                if isinstance(tgt, ast.Name):
+                    val = const_eval(stmt.value, env)
+                    if val is not UNRESOLVED:
+                        env[tgt.id] = val
+            elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+                if isinstance(stmt.target, ast.Name):
+                    val = const_eval(stmt.value, env)
+                    if val is not UNRESOLVED:
+                        env[stmt.target.id] = val
+        return env
+
+    def mutable_globals(self) -> dict[str, int]:
+        """Top-level names bound to mutable literals (list/dict/set
+        displays or ``list()``/``dict()``/``set()`` calls) -> def line.
+        These are the retrace/stale-capture hazards of R001: a jitted
+        function that closes over one bakes its trace-time contents in."""
+        out: dict[str, int] = {}
+        for stmt in self.tree.body:
+            if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+                tgt = stmt.targets[0]
+                if not isinstance(tgt, ast.Name):
+                    continue
+                v = stmt.value
+                mutable = isinstance(v, (ast.List, ast.Dict, ast.Set)) or (
+                    isinstance(v, ast.Call)
+                    and isinstance(v.func, ast.Name)
+                    and v.func.id in ("list", "dict", "set")
+                )
+                if mutable:
+                    out[tgt.id] = stmt.lineno
+        return out
+
+    def noqa(self, line: int, rule_id: str) -> bool:
+        """Inline suppression: ``# noqa: RPCA-RXXX`` on the flagged line."""
+        if 1 <= line <= len(self.lines):
+            text = self.lines[line - 1]
+            return "noqa:" in text and rule_id in text
+        return False
+
+
+# ---------------------------------------------------------------------------
+# Constant folding over a tiny expression subset
+# ---------------------------------------------------------------------------
+def const_eval(node: ast.AST, env: dict[str, Any] | None = None) -> Any:
+    """Evaluate literals / names-from-``env`` / simple arithmetic.
+
+    Returns :data:`UNRESOLVED` when any sub-expression cannot be resolved.
+    ``env`` maps plain names AND dotted names (``"bitmask.PACK"``) to
+    values.
+    """
+    env = env or {}
+    if isinstance(node, ast.Constant):
+        return node.value
+    if isinstance(node, ast.Name):
+        return env.get(node.id, UNRESOLVED)
+    if isinstance(node, ast.Attribute):
+        dotted = dotted_name(node)
+        if dotted is not None and dotted in env:
+            return env[dotted]
+        return UNRESOLVED
+    if isinstance(node, (ast.Tuple, ast.List)):
+        vals = [const_eval(e, env) for e in node.elts]
+        if any(v is UNRESOLVED for v in vals):
+            return UNRESOLVED
+        return tuple(vals)
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        v = const_eval(node.operand, env)
+        return UNRESOLVED if v is UNRESOLVED else -v
+    if isinstance(node, ast.BinOp):
+        left = const_eval(node.left, env)
+        right = const_eval(node.right, env)
+        if UNRESOLVED in (left, right):
+            return UNRESOLVED
+        try:
+            if isinstance(node.op, ast.Add):
+                return left + right
+            if isinstance(node.op, ast.Sub):
+                return left - right
+            if isinstance(node.op, ast.Mult):
+                return left * right
+            if isinstance(node.op, ast.FloorDiv):
+                return left // right
+            if isinstance(node.op, ast.Div):
+                return left / right
+            if isinstance(node.op, ast.Mod):
+                return left % right
+            if isinstance(node.op, ast.LShift):
+                return left << right
+            if isinstance(node.op, ast.RShift):
+                return left >> right
+            if isinstance(node.op, ast.Pow):
+                return left ** right
+        except Exception:
+            return UNRESOLVED
+    return UNRESOLVED
+
+
+def dotted_name(node: ast.AST) -> str | None:
+    """``a.b.c`` -> ``"a.b.c"`` for pure Name/Attribute chains."""
+    parts: list[str] = []
+    cur = node
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if isinstance(cur, ast.Name):
+        parts.append(cur.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+# ---------------------------------------------------------------------------
+# jax.jit site parsing (shared by R001 / R002)
+# ---------------------------------------------------------------------------
+@dataclass
+class JitSite:
+    """One resolved ``jax.jit`` application."""
+
+    node: ast.AST  # the jit expression (decorator or call)
+    fn: ast.AST | None  # the wrapped function expression, if present
+    static_argnames: set[str] = field(default_factory=set)
+    static_argnums: set[int] = field(default_factory=set)
+    donate_argnums: set[int] = field(default_factory=set)
+
+
+_JIT_NAMES = {"jax.jit", "jit", "api.jit"}
+_PARTIAL_NAMES = {"partial", "functools.partial"}
+
+
+def _is_jit_ref(node: ast.AST) -> bool:
+    d = dotted_name(node)
+    return d in _JIT_NAMES
+
+
+def _fill_kwargs(site: JitSite, keywords: list[ast.keyword],
+                 env: dict[str, Any]) -> None:
+    for kw in keywords:
+        val = const_eval(kw.value, env)
+        if kw.arg == "static_argnames" and val is not UNRESOLVED:
+            site.static_argnames |= (
+                {val} if isinstance(val, str) else set(val)
+            )
+        elif kw.arg == "static_argnums" and val is not UNRESOLVED:
+            nums = (val,) if isinstance(val, int) else val
+            site.static_argnums |= set(nums)
+        elif kw.arg == "donate_argnums" and val is not UNRESOLVED:
+            nums = (val,) if isinstance(val, int) else val
+            site.donate_argnums |= set(nums)
+
+
+def parse_jit(node: ast.AST, env: dict[str, Any] | None = None) -> JitSite | None:
+    """Recognize a jit application expression.
+
+    Handles the repo's three spellings:
+      * ``jax.jit`` (bare decorator)
+      * ``jax.jit(fn, static_argnames=..., donate_argnums=...)``
+      * ``functools.partial(jax.jit, static_argnames=...)`` (decorator)
+    """
+    env = env or {}
+    if _is_jit_ref(node):
+        return JitSite(node=node, fn=None)
+    if not isinstance(node, ast.Call):
+        return None
+    if _is_jit_ref(node.func):
+        site = JitSite(node=node, fn=node.args[0] if node.args else None)
+        _fill_kwargs(site, node.keywords, env)
+        return site
+    if dotted_name(node.func) in _PARTIAL_NAMES and node.args:
+        if _is_jit_ref(node.args[0]):
+            site = JitSite(node=node, fn=None)
+            _fill_kwargs(site, node.keywords, env)
+            return site
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Baseline
+# ---------------------------------------------------------------------------
+class Baseline:
+    """The committed suppression list: findings whose (rule, file, symbol)
+    matches an entry are reported as suppressed, not as failures.  Every
+    entry must carry a one-line ``why`` (DESIGN.md Sec. 15 policy)."""
+
+    def __init__(self, entries: list[dict[str, str]]):
+        self.entries = entries
+        self._keys = {
+            (e["rule"], e["file"], e["symbol"]) for e in entries
+        }
+
+    @classmethod
+    def load(cls, path: Path) -> "Baseline":
+        if not path.exists():
+            return cls([])
+        data = json.loads(path.read_text())
+        return cls(data.get("suppressions", []))
+
+    def matches(self, finding: Finding) -> bool:
+        return finding.key() in self._keys
+
+    @staticmethod
+    def dump(findings: Iterable[Finding], path: Path) -> None:
+        entries = []
+        seen = set()
+        for f in sorted(findings, key=lambda f: f.key()):
+            if f.key() in seen:
+                continue
+            seen.add(f.key())
+            entries.append({
+                "rule": f.rule,
+                "file": f.path,
+                "symbol": f.symbol,
+                "why": "TODO: one-line justification",
+            })
+        path.write_text(
+            json.dumps({"suppressions": entries}, indent=2) + "\n"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+def iter_sources(paths: Iterable[str | Path]) -> list[tuple[Path, str]]:
+    """Expand files/directories into (path, display_path) python sources."""
+    out: list[tuple[Path, str]] = []
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            for f in sorted(p.rglob("*.py")):
+                out.append((f, f.as_posix()))
+        elif p.suffix == ".py":
+            out.append((p, p.as_posix()))
+    return out
+
+
+def analyze(
+    paths: Iterable[str | Path],
+    rules: Iterable[Rule],
+    baseline: Baseline | None = None,
+) -> tuple[list[Finding], list[Finding]]:
+    """Run ``rules`` over ``paths``; returns ``(new, suppressed)``.
+
+    A finding is suppressed by the baseline or by an inline
+    ``# noqa: <rule-id>`` on its line; everything else is new (= the CI
+    gate fails).
+    """
+    baseline = baseline or Baseline([])
+    new: list[Finding] = []
+    suppressed: list[Finding] = []
+    for path, display in iter_sources(paths):
+        try:
+            mod = ModuleInfo(path, display, path.read_text())
+        except (SyntaxError, UnicodeDecodeError) as e:
+            new.append(Finding("RPCA-R000", display, 1, "<module>",
+                               f"unparseable source: {e}"))
+            continue
+        for rule in rules:
+            for f in rule.check(mod):
+                if mod.noqa(f.line, f.rule) or baseline.matches(f):
+                    suppressed.append(f)
+                else:
+                    new.append(f)
+    new.sort(key=lambda f: (f.path, f.line, f.rule))
+    suppressed.sort(key=lambda f: (f.path, f.line, f.rule))
+    return new, suppressed

@@ -1,0 +1,98 @@
+"""Baseline-gated mypy pass over ``src/repro/core``.
+
+CI installs mypy from requirements-dev.txt and runs
+``python -m tools.analysis.mypy_gate``; the build fails only on *new*
+errors relative to the committed ``mypy_baseline.txt`` (same empty-delta
+policy as the AST passes).  When mypy is not importable (local container
+without dev deps) the gate skips with exit 0 — the static AST suite does
+not depend on it.
+
+Baseline keys are ``file:error-code:message`` with line numbers stripped,
+so unrelated edits don't churn the file.  Regenerate with
+``python -m tools.analysis.mypy_gate --write-baseline`` after fixing or
+consciously accepting errors.
+"""
+from __future__ import annotations
+
+import argparse
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[2]
+BASELINE = Path(__file__).parent / "mypy_baseline.txt"
+TARGET = "src/repro/core"
+
+_LINE_RE = re.compile(r"^(?P<file>[^:]+):(?P<line>\d+):(?:\d+:)?\s*"
+                      r"(?P<sev>error|note):\s*(?P<msg>.*)$")
+
+
+def _mypy_available() -> bool:
+    try:
+        import mypy  # noqa: F401
+        return True
+    except ImportError:
+        return False
+
+
+def _run_mypy() -> list[str]:
+    """Normalized error keys (file:code:message, line numbers stripped)."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "mypy", "--config-file", "mypy.ini", TARGET],
+        capture_output=True, text=True, cwd=REPO,
+    )
+    keys = []
+    for raw in proc.stdout.splitlines():
+        m = _LINE_RE.match(raw.strip())
+        if m and m.group("sev") == "error":
+            keys.append(f"{m.group('file')}:{m.group('msg')}")
+    return keys
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(prog="python -m tools.analysis.mypy_gate")
+    parser.add_argument("--write-baseline", action="store_true")
+    args = parser.parse_args(argv)
+
+    if not _mypy_available():
+        print("mypy_gate: mypy not installed; skipping (CI installs it "
+              "from requirements-dev.txt)")
+        return 0
+
+    keys = _run_mypy()
+    if args.write_baseline:
+        BASELINE.write_text("\n".join(sorted(set(keys))) + ("\n" if keys else ""))
+        print(f"mypy_gate: wrote {len(set(keys))} baseline entries")
+        return 0
+
+    bootstrap = False
+    baseline = set()
+    if BASELINE.exists():
+        raw = BASELINE.read_text().splitlines()
+        bootstrap = any(l.startswith("# BOOTSTRAP") for l in raw)
+        baseline = {l for l in raw if l.strip() and not l.startswith("#")}
+    new = [k for k in keys if k not in baseline]
+    if bootstrap:
+        # first-run mode: report, never fail -- commit a generated
+        # baseline (--write-baseline) to arm the gate
+        for k in new:
+            print(f"  (bootstrap) {k}")
+        print(f"mypy_gate: BOOTSTRAP mode, {len(new)} error(s) reported "
+              f"but not failing; regenerate and commit the baseline to arm")
+        return 0
+    fixed = baseline - set(keys)
+    if fixed:
+        print(f"mypy_gate: {len(fixed)} baselined error(s) no longer fire "
+              f"-- consider regenerating the baseline")
+    if new:
+        print(f"mypy_gate: {len(new)} NEW type error(s) vs baseline:")
+        for k in new:
+            print(f"  {k}")
+        return 1
+    print(f"mypy_gate: clean ({len(keys)} total, all baselined)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,13 @@
+"""Rule registry: import each pass module and collect its RULE."""
+from __future__ import annotations
+
+from tools.analysis.rules.r001_retrace import RULE as R001
+from tools.analysis.rules.r002_donation import RULE as R002
+from tools.analysis.rules.r003_lockstep import RULE as R003
+from tools.analysis.rules.r004_vmem import RULE as R004
+from tools.analysis.rules.r005_registry import RULE as R005
+
+ALL_RULES = (R001, R002, R003, R004, R005)
+RULES_BY_ID = {r.id: r for r in ALL_RULES}
+
+__all__ = ["ALL_RULES", "RULES_BY_ID", "R001", "R002", "R003", "R004", "R005"]

@@ -1,0 +1,189 @@
+"""RPCA-R001 — retrace-hazard.
+
+Invariant (PR 6, DESIGN.md Sec. 13): every jit boundary is retrace-stable.
+The AOT executable cache's zero-recompile guarantee holds only if
+
+  1. every parameter whose *annotation* says it is plain Python data
+     (``bool``/``int``/``str``, possibly Optional) is listed in
+     ``static_argnames``/``static_argnums`` — otherwise each distinct value
+     retraces (weak-type churn) or fails to hash, and
+  2. the jitted function does not close over *mutable module state*
+     (module-level ``list``/``dict``/``set``): jit captures the trace-time
+     contents, so later mutation silently serves stale compiled results.
+
+Heuristic boundaries (kept deliberately conservative — an unannotated
+parameter or an ``int | Array`` union is NOT flagged):
+
+* a param is a hazard iff its annotation is ``bool``/``int``/``str`` or a
+  ``Optional``/``|``-union whose every member is one of those or ``None``;
+* mutable-capture only fires on module-level names assigned a
+  list/dict/set display or constructor call at module top level.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.analysis.core import (
+    Finding,
+    ModuleInfo,
+    Rule,
+    dotted_name,
+    parse_jit,
+)
+
+_HAZARD_TYPES = {"bool", "int", "str"}
+_NONE_TYPES = {"None", "NoneType"}
+
+
+def _annotation_names(node: ast.AST) -> list[str] | None:
+    """Flatten an annotation into member type names, or None if it holds
+    anything we can't name (subscripts, attributes, strings with brackets).
+    """
+    if isinstance(node, ast.Name):
+        return [node.id]
+    if isinstance(node, ast.Constant):
+        if node.value is None:
+            return ["None"]
+        if isinstance(node.value, str):
+            # string annotation: re-parse it
+            try:
+                sub = ast.parse(node.value, mode="eval").body
+            except SyntaxError:
+                return None
+            return _annotation_names(sub)
+        return None
+    if isinstance(node, ast.BinOp) and isinstance(node.op, ast.BitOr):
+        left = _annotation_names(node.left)
+        right = _annotation_names(node.right)
+        if left is None or right is None:
+            return None
+        return left + right
+    if isinstance(node, ast.Subscript):
+        base = dotted_name(node.value)
+        if base in ("Optional", "typing.Optional", "t.Optional"):
+            inner = _annotation_names(node.slice)
+            if inner is None:
+                return None
+            return inner + ["None"]
+        if base in ("Union", "typing.Union", "t.Union"):
+            sl = node.slice
+            elts = sl.elts if isinstance(sl, ast.Tuple) else [sl]
+            out: list[str] = []
+            for e in elts:
+                sub = _annotation_names(e)
+                if sub is None:
+                    return None
+                out.extend(sub)
+            return out
+        return None
+    return None
+
+
+def _is_static_hazard(annotation: ast.AST | None) -> bool:
+    """True iff the annotation names only bool/int/str (+ None)."""
+    if annotation is None:
+        return False
+    names = _annotation_names(annotation)
+    if not names:
+        return False
+    hazard = False
+    for n in names:
+        if n in _HAZARD_TYPES:
+            hazard = True
+        elif n in _NONE_TYPES:
+            continue
+        else:
+            return False  # union contains an array-ish member: traceable
+    return hazard
+
+
+def _param_table(fn: ast.FunctionDef) -> list[tuple[int, ast.arg]]:
+    """(position, arg) for positional + kw-only params, skipping self."""
+    args = fn.args
+    params = list(args.posonlyargs) + list(args.args)
+    out = [(i, a) for i, a in enumerate(params)]
+    base = len(params)
+    out += [(base + i, a) for i, a in enumerate(args.kwonlyargs)]
+    return [(i, a) for i, a in out if a.arg not in ("self", "cls")]
+
+
+def _check_fn(mod: ModuleInfo, fn: ast.FunctionDef, site,
+              findings: list[Finding]) -> None:
+    qual = mod.qualname(fn)
+    # 1. unhashed plain-Python params
+    for pos, arg in _param_table(fn):
+        if arg.arg in site.static_argnames or pos in site.static_argnums:
+            continue
+        if _is_static_hazard(arg.annotation):
+            ann = ast.unparse(arg.annotation) if arg.annotation else "?"
+            findings.append(Finding(
+                "RPCA-R001", mod.display_path, arg.lineno, qual,
+                f"param '{arg.arg}: {ann}' of jitted '{fn.name}' is "
+                f"plain Python data but not in static_argnames -- every "
+                f"distinct value retraces (breaks the AOT zero-recompile "
+                f"guarantee); add it to static_argnames or pass an array",
+            ))
+    # 2. mutable module-state capture
+    mutables = mod.mutable_globals()
+    if not mutables:
+        return
+    local_names = {a.arg for _, a in _param_table(fn)}
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) and node is not fn:
+            # nested defs get their own locals; still same closure -- keep
+            # walking, but collect their params as locals too
+            local_names |= {a.arg for a in node.args.args}
+    # any name assigned anywhere in the body shadows the global
+    # (conservative: treats use-before-assign as local, which only ever
+    # *suppresses* a finding -- never a false positive)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            local_names.add(node.id)
+    reported: set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+            name = node.id
+            if name in mutables and name not in local_names and name not in reported:
+                reported.add(name)
+                findings.append(Finding(
+                    "RPCA-R001", mod.display_path, node.lineno, qual,
+                    f"jitted '{fn.name}' reads mutable module state "
+                    f"'{name}' (defined line {mutables[name]}) -- jit "
+                    f"captures its trace-time contents, so later mutation "
+                    f"is silently ignored by compiled executables",
+                ))
+
+
+def check(mod: ModuleInfo) -> list[Finding]:
+    findings: list[Finding] = []
+    env = dict(mod.constants)
+
+    # decorated defs
+    for fn in mod.functions():
+        for dec in fn.decorator_list:
+            site = parse_jit(dec, env)
+            if site is not None:
+                _check_fn(mod, fn, site, findings)
+                break
+
+    # inline jax.jit(fn, ...) where fn is a module/local def we can see
+    defs = {f.name: f for f in mod.functions()}
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        site = parse_jit(node, env)
+        if site is None or site.fn is None:
+            continue
+        if isinstance(site.fn, ast.Name) and site.fn.id in defs:
+            target = defs[site.fn.id]
+            if not any(parse_jit(d, env) for d in target.decorator_list):
+                _check_fn(mod, target, site, findings)
+    return findings
+
+
+RULE = Rule(
+    id="RPCA-R001",
+    name="retrace-hazard",
+    doc="jit params typed bool/int/str must be static; no mutable module-state capture",
+    check=check,
+)

@@ -1,0 +1,249 @@
+"""RPCA-R002 — donation-aliasing.
+
+Invariant (PR 6): a buffer donated to a jit-compiled call
+(``donate_argnums``) is *invalidated* at the call — XLA may write the
+output into its storage.  Reading the donor name afterwards is undefined
+behaviour (silently corrupt values on TPU, DeletedBuffer errors on some
+backends), so the repo convention is that every donated name must be
+rebound (usually via tuple-unpack of the call result) before any further
+read.
+
+The pass is intra-function data flow:
+
+1. find calls whose callee is known to donate: either an inline
+   ``jax.jit(fn, donate_argnums=...)(args...)`` or a call through a name
+   that was assigned a jit-with-donation object earlier in the same
+   function/module (including ``.lower(...).compile()`` chains — the AOT
+   path — and attribute targets like ``self._tick``);
+2. the names passed at donated positions become *dead* after the call;
+3. a subsequent Load of a dead name is a finding. Rebinding (Store,
+   including via tuple-unpack targets, ``for`` targets, or ``with`` as-
+   targets) revives the name.
+
+Control flow is handled conservatively: branches are analyzed with a
+copy of the dead set and merged by union (dead in either branch => dead
+after); loop bodies are processed twice so a kill on iteration one is
+seen by a read at the top of iteration two.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.analysis.core import (
+    Finding,
+    ModuleInfo,
+    Rule,
+    dotted_name,
+    parse_jit,
+)
+
+
+def _strip_lower_compile(node: ast.AST) -> ast.AST:
+    """Unwrap ``<expr>.lower(...).compile(...)`` / ``.compile()`` chains
+    so the AOT spelling ``jax.jit(f, donate_argnums=...).lower(a).compile()``
+    still reveals the donating jit site underneath."""
+    while isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute) \
+            and node.func.attr in ("lower", "compile"):
+        node = node.func.value
+    return node
+
+
+class _FnState:
+    """Per-function donation environment."""
+
+    def __init__(self) -> None:
+        # name (plain or dotted, e.g. "self._tick") -> donated positions
+        self.donators: dict[str, frozenset[int]] = {}
+
+
+def _target_names(tgt: ast.AST) -> list[str]:
+    """All plain names bound by an assignment target (tuple-unpack aware)."""
+    out: list[str] = []
+    for node in ast.walk(tgt):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            out.append(node.id)
+    return out
+
+
+class _Flow:
+    def __init__(self, mod: ModuleInfo, fn: ast.FunctionDef,
+                 state: _FnState, env: dict):
+        self.mod = mod
+        self.fn = fn
+        self.state = state
+        self.env = env
+        self.findings: list[Finding] = []
+        # dead name -> (donation call line, callee description)
+        self.dead: dict[str, tuple[int, str]] = {}
+
+    # -- donation sites ----------------------------------------------------
+    def _donated_positions(self, call: ast.Call) -> tuple[frozenset[int], str] | None:
+        """If ``call`` donates, return (positions, description)."""
+        core = _strip_lower_compile(call.func)
+        # direct: jax.jit(fn, donate_argnums=...)(args)
+        site = parse_jit(core, self.env)
+        if site is not None and site.donate_argnums:
+            return frozenset(site.donate_argnums), "jax.jit(...)"
+        # through a name assigned earlier
+        d = dotted_name(call.func)
+        if d is not None and d in self.state.donators:
+            return self.state.donators[d], d
+        return None
+
+    def _record_donator_assign(self, target: ast.AST, value: ast.AST) -> None:
+        core = _strip_lower_compile(value)
+        site = parse_jit(core, self.env)
+        if site is not None and site.donate_argnums:
+            d = dotted_name(target)
+            if d is not None:
+                self.state.donators[d] = frozenset(site.donate_argnums)
+
+    # -- expression scan ---------------------------------------------------
+    def _scan_expr(self, node: ast.AST) -> None:
+        """Visit an expression: flag reads of dead names, then apply any
+        donation kill from calls inside it."""
+        if node is None:
+            return
+        kills: list[tuple[str, int, str]] = []
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Name) and isinstance(sub.ctx, ast.Load):
+                if sub.id in self.dead:
+                    line, callee = self.dead[sub.id]
+                    self.findings.append(Finding(
+                        "RPCA-R002", self.mod.display_path, sub.lineno,
+                        self.mod.qualname(self.fn),
+                        f"'{sub.id}' was donated to {callee} at line {line} "
+                        f"and read afterwards -- donated buffers are "
+                        f"invalidated by XLA; rebind the name from the "
+                        f"call's result before reuse",
+                    ))
+                    # report once per (name, donation)
+                    del self.dead[sub.id]
+            if isinstance(sub, ast.Call):
+                got = self._donated_positions(sub)
+                if got is None:
+                    continue
+                positions, desc = got
+                for pos, arg in enumerate(sub.args):
+                    if pos in positions and isinstance(arg, ast.Name):
+                        kills.append((arg.id, sub.lineno, desc))
+        for name, line, desc in kills:
+            self.dead[name] = (line, desc)
+
+    # -- statement walk ----------------------------------------------------
+    def run(self) -> None:
+        self._block(self.fn.body)
+
+    def _block(self, stmts: list[ast.stmt]) -> None:
+        for stmt in stmts:
+            self._stmt(stmt)
+
+    def _revive(self, targets: list[ast.AST]) -> None:
+        for tgt in targets:
+            for name in _target_names(tgt):
+                self.dead.pop(name, None)
+
+    def _stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            value = stmt.value
+            if value is not None:
+                self._scan_expr(value)
+            if isinstance(stmt, ast.Assign):
+                for tgt in stmt.targets:
+                    self._record_donator_assign(tgt, stmt.value)
+                self._revive(list(stmt.targets))
+            elif isinstance(stmt, ast.AnnAssign):
+                if stmt.value is not None:
+                    self._record_donator_assign(stmt.target, stmt.value)
+                self._revive([stmt.target])
+            else:  # AugAssign reads its target too
+                if isinstance(stmt.target, ast.Name) and stmt.target.id in self.dead:
+                    line, callee = self.dead[stmt.target.id]
+                    self.findings.append(Finding(
+                        "RPCA-R002", self.mod.display_path, stmt.lineno,
+                        self.mod.qualname(self.fn),
+                        f"'{stmt.target.id}' was donated to {callee} at "
+                        f"line {line} and read afterwards (augmented "
+                        f"assignment) -- rebind it from the call's result",
+                    ))
+                self._revive([stmt.target])
+        elif isinstance(stmt, ast.Expr):
+            self._scan_expr(stmt.value)
+        elif isinstance(stmt, ast.Return):
+            self._scan_expr(stmt.value)
+        elif isinstance(stmt, ast.If):
+            self._scan_expr(stmt.test)
+            before = dict(self.dead)
+            self._block(stmt.body)
+            after_body = self.dead
+            self.dead = dict(before)
+            self._block(stmt.orelse)
+            # union-merge: dead in either branch stays dead
+            self.dead = {**after_body, **self.dead}
+        elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self._scan_expr(stmt.iter)
+            # two passes: a donation killed on iteration 1 must be seen
+            # by a read at the loop head on iteration 2
+            for _ in range(2):
+                self._revive([stmt.target])
+                self._block(stmt.body)
+            self._block(stmt.orelse)
+        elif isinstance(stmt, ast.While):
+            for _ in range(2):
+                self._scan_expr(stmt.test)
+                self._block(stmt.body)
+            self._block(stmt.orelse)
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self._scan_expr(item.context_expr)
+                if item.optional_vars is not None:
+                    self._revive([item.optional_vars])
+            self._block(stmt.body)
+        elif isinstance(stmt, ast.Try):
+            self._block(stmt.body)
+            for handler in stmt.handlers:
+                self._block(handler.body)
+            self._block(stmt.orelse)
+            self._block(stmt.finalbody)
+        elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+            pass  # nested scopes analyzed separately
+        elif isinstance(stmt, (ast.Assert, ast.Raise, ast.Delete)):
+            for sub in ast.iter_child_nodes(stmt):
+                self._scan_expr(sub)
+            if isinstance(stmt, ast.Delete):
+                self._revive(list(stmt.targets))
+        # Pass/Break/Continue/Import/Global/Nonlocal: nothing to do
+
+
+def check(mod: ModuleInfo) -> list[Finding]:
+    findings: list[Finding] = []
+    env = dict(mod.constants)
+    # module-level donator assignments are visible to every function
+    module_state = _FnState()
+    for stmt in mod.tree.body:
+        if isinstance(stmt, ast.Assign):
+            flow = _Flow(mod, ast.FunctionDef(name="<module>", body=[]),
+                         module_state, env)
+            for tgt in stmt.targets:
+                flow._record_donator_assign(tgt, stmt.value)
+    for fn in mod.functions():
+        state = _FnState()
+        state.donators.update(module_state.donators)
+        flow = _Flow(mod, fn, state, env)
+        flow.run()
+        # the two-pass loop analysis can report the same read twice
+        seen: set[tuple[int, str]] = set()
+        for f in flow.findings:
+            if (f.line, f.message) not in seen:
+                seen.add((f.line, f.message))
+                findings.append(f)
+    return findings
+
+
+RULE = Rule(
+    id="RPCA-R002",
+    name="donation-aliasing",
+    doc="names passed at donate_argnums positions must not be read after the call",
+    check=check,
+)

@@ -1,0 +1,215 @@
+"""RPCA-R004 — Pallas VMEM budget.
+
+Invariant (PR 5, `kernels/ops.py`): a Pallas kernel's worst-case VMEM
+working set must fit the per-backend on-chip budget.  `ops.py` hand-codes
+this for one case (``RESIDENT_OUT_V_BYTES`` caps the grid-resident
+``out_v`` accumulator at 4 MiB); this pass generalizes it to *every*
+``pl.pallas_call`` site under ``kernels/``.
+
+Model (mirrors the Mosaic double-buffered pipeline):
+
+* every ``BlockSpec(shape, index_map)`` contributes
+  ``prod(shape) * dtype_bytes`` — **x2** when the index map varies with
+  the grid (double buffering), **x1** when the index map is constant
+  (``lambda i, j: (0, 0)`` => grid-resident, single copy);
+* ``memory_space=pl.ANY`` / SMEM specs are skipped (not VMEM tiles);
+* scratch shapes (``scratch_shapes=[pltpu.VMEM(...)]``) count x1;
+* the sum must stay under ``VMEM_BUDGET_BYTES`` (16 MiB, the TPU v4/v5
+  per-core VMEM floor; CPU interpret mode has no limit but the kernel
+  must stay portable).
+
+Shapes are resolved by constant-folding against module constants and the
+enclosing function's defaulted params (``bm=DEFAULT_BM``).  Anything
+unresolvable is skipped silently — this pass only fails on *provable*
+overflows, never on uncertainty.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.analysis.core import (
+    UNRESOLVED,
+    Finding,
+    ModuleInfo,
+    Rule,
+    const_eval,
+    dotted_name,
+)
+
+#: Per-backend worst-case budget.  16 MiB = TPU v4/v5e per-core VMEM
+#: (compiler-managed; going over spills or fails to lower).
+VMEM_BUDGET_BYTES = 16 << 20
+
+_DTYPE_BYTES = {
+    "float32": 4, "f32": 4, "jnp.float32": 4,
+    "bfloat16": 2, "bf16": 2, "jnp.bfloat16": 2,
+    "float16": 2, "jnp.float16": 2,
+    "int32": 4, "jnp.int32": 4, "uint32": 4, "jnp.uint32": 4,
+    "int8": 1, "jnp.int8": 1, "uint8": 1, "jnp.uint8": 1,
+    "float64": 8, "jnp.float64": 8,
+}
+#: dtype assumed when a BlockSpec's operand dtype can't be traced --
+#: conservative for this repo, whose data plane is f32 (bf16 narrower).
+_DEFAULT_DTYPE_BYTES = 4
+
+
+def _fn_param_env(fn: ast.FunctionDef, env: dict) -> dict:
+    """Extend ``env`` with defaulted parameter values (``bm=256`` or
+    ``bm=DEFAULT_BM``)."""
+    out = dict(env)
+    args = fn.args
+    pos = args.posonlyargs + args.args
+    for arg, default in zip(pos[len(pos) - len(args.defaults):], args.defaults):
+        v = const_eval(default, env)
+        if v is not UNRESOLVED:
+            out[arg.arg] = v
+    for arg, default in zip(args.kwonlyargs, args.kw_defaults):
+        if default is not None:
+            v = const_eval(default, env)
+            if v is not UNRESOLVED:
+                out[arg.arg] = v
+    return out
+
+
+def _index_map_is_constant(spec_call: ast.Call) -> bool:
+    """True when the BlockSpec's index map ignores its grid args (returns
+    only constants) => the block is grid-resident (single VMEM copy)."""
+    # index_map is the 2nd positional or the `index_map=` kwarg
+    lam = None
+    if len(spec_call.args) >= 2:
+        lam = spec_call.args[1]
+    for kw in spec_call.keywords:
+        if kw.arg == "index_map":
+            lam = kw.value
+    if not isinstance(lam, ast.Lambda):
+        return False
+    body = lam.body
+    elts = body.elts if isinstance(body, (ast.Tuple, ast.List)) else [body]
+    lam_params = {a.arg for a in lam.args.args}
+    for e in elts:
+        for sub in ast.walk(e):
+            if isinstance(sub, ast.Name) and sub.id in lam_params:
+                return False
+    return True
+
+
+def _spec_block_elems(spec_call: ast.Call, env: dict):
+    """(n_elements, resident: bool) for a BlockSpec call, or None to skip
+    (unresolvable / not a VMEM tile)."""
+    for kw in spec_call.keywords:
+        if kw.arg == "memory_space":
+            d = dotted_name(kw.value) or ""
+            if d.endswith(("ANY", "SMEM")):
+                return None  # not a VMEM-pipelined tile
+    shape_node = None
+    if spec_call.args:
+        shape_node = spec_call.args[0]
+    for kw in spec_call.keywords:
+        if kw.arg in ("block_shape", "shape"):
+            shape_node = kw.value
+    if shape_node is None:
+        return None
+    shape = const_eval(shape_node, env)
+    if shape is UNRESOLVED or not isinstance(shape, tuple):
+        return None
+    n = 1
+    for d in shape:
+        if d is None:
+            continue  # None dims are squeezed, not tiled
+        if not isinstance(d, int):
+            return None
+        n *= d
+    return n, _index_map_is_constant(spec_call)
+
+
+def _iter_spec_calls(node: ast.AST):
+    """All ``pl.BlockSpec(...)`` calls in an expression subtree."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            d = dotted_name(sub.func) or ""
+            if d.split(".")[-1] == "BlockSpec":
+                yield sub
+
+
+def _scratch_bytes(node: ast.AST, env: dict) -> int:
+    """Bytes from ``scratch_shapes=[pltpu.VMEM(shape, dtype), ...]``;
+    unresolvable entries contribute 0."""
+    total = 0
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            d = dotted_name(sub.func) or ""
+            if d.split(".")[-1] in ("VMEM", "vmem"):
+                if sub.args:
+                    shape = const_eval(sub.args[0], env)
+                    if shape is not UNRESOLVED and isinstance(shape, tuple):
+                        n = 1
+                        ok = True
+                        for dim in shape:
+                            if not isinstance(dim, int):
+                                ok = False
+                                break
+                            n *= dim
+                        if ok:
+                            dt = _DEFAULT_DTYPE_BYTES
+                            if len(sub.args) > 1:
+                                dn = dotted_name(sub.args[1]) or ""
+                                dt = _DTYPE_BYTES.get(
+                                    dn, _DTYPE_BYTES.get(
+                                        dn.split(".")[-1],
+                                        _DEFAULT_DTYPE_BYTES))
+                            total += n * dt
+    return total
+
+
+def check(mod: ModuleInfo) -> list[Finding]:
+    # only kernel code carries pallas_call sites worth budgeting
+    if "/kernels/" not in mod.display_path and \
+            not mod.display_path.startswith("kernels/") and \
+            "pallas_call" not in mod.source:
+        return []
+    findings: list[Finding] = []
+    for fn in mod.functions():
+        env = _fn_param_env(fn, mod.constants)
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            d = dotted_name(node.func) or ""
+            if d.split(".")[-1] != "pallas_call":
+                continue
+            total = 0
+            resolved_any = False
+            per_block: list[str] = []
+            for spec in _iter_spec_calls(node):
+                got = _spec_block_elems(spec, env)
+                if got is None:
+                    continue
+                n, resident = got
+                copies = 1 if resident else 2
+                b = n * _DEFAULT_DTYPE_BYTES * copies
+                total += b
+                resolved_any = True
+                per_block.append(
+                    f"{n}el x4B x{copies}{'(resident)' if resident else ''}")
+            for kw in node.keywords:
+                if kw.arg == "scratch_shapes":
+                    total += _scratch_bytes(kw.value, env)
+            if resolved_any and total > VMEM_BUDGET_BYTES:
+                findings.append(Finding(
+                    "RPCA-R004", mod.display_path, node.lineno,
+                    mod.qualname(node),
+                    f"pallas_call worst-case VMEM working set "
+                    f"~{total / (1 << 20):.1f} MiB exceeds the "
+                    f"{VMEM_BUDGET_BYTES >> 20} MiB budget "
+                    f"({' + '.join(per_block)}) -- shrink block shapes or "
+                    f"make large outputs grid-resident like "
+                    f"RESIDENT_OUT_V_BYTES in kernels/ops.py",
+                ))
+    return findings
+
+
+RULE = Rule(
+    id="RPCA-R004",
+    name="pallas-vmem-budget",
+    doc="pallas_call block working sets must fit the per-backend VMEM budget",
+    check=check,
+)

@@ -1,0 +1,212 @@
+"""RPCA-R005 — registry-contract.
+
+Invariant (PR 4): a ``SolverCaps`` record is a *promise* the front door
+(`repro.rpca.solve`) validates eagerly — ``supports_mask=True`` routes
+masked specs to the solver, ``supports_clients=True`` forwards
+``spec.num_clients``, etc.  A claim the adapter doesn't actually
+implement turns uniform validation into silent misbehaviour (the spec
+field is accepted, then dropped on the floor).
+
+Checked contracts, per ``register_solver(name, SolverCaps(...), make, ...)``
+site (all checks are *syntactic reachability* — the make adapter or any
+module-local function it transitively calls must mention the token):
+
+=========================  ==============================================
+supports_mask=True         references ``mask``
+supports_clients=True      references ``num_clients``
+supports_participation     references ``participation``
+supports_sharding=True     references ``mesh``
+needs_rank=True            references ``rank`` / calls ``require_rank``
+supports_service=True      the registration passes ``service=``
+supports_factors=True      make's return tuple must not pin ``None`` at
+                           the (u, v) positions 2 and 3
+supports_factors=False     make's return tuple must pin ``None`` there
+supports_multiprocess      only meaningful with ``supports_sharding``
+=========================  ==============================================
+
+Unresolvable cases (make passed as a non-name expression, dynamic caps)
+are skipped, never guessed.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.analysis.core import Finding, ModuleInfo, Rule, dotted_name
+
+_CAP_TOKEN = {
+    "supports_mask": ("mask",),
+    "supports_clients": ("num_clients",),
+    "supports_participation": ("participation",),
+    "supports_sharding": ("mesh",),
+    "needs_rank": ("rank", "require_rank"),
+}
+
+
+def _collect_tokens(fn: ast.FunctionDef, mod_fns: dict[str, ast.FunctionDef],
+                    seen: set[str] | None = None) -> set[str]:
+    """All identifiers mentioned in ``fn`` and in module-local functions
+    it transitively calls: attribute names, plain names, call names and
+    keyword-argument names."""
+    seen = seen if seen is not None else set()
+    if fn.name in seen:
+        return set()
+    seen.add(fn.name)
+    tokens: set[str] = set()
+    callees: set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Attribute):
+            tokens.add(node.attr)
+        elif isinstance(node, ast.Name):
+            tokens.add(node.id)
+        elif isinstance(node, ast.keyword) and node.arg:
+            tokens.add(node.arg)
+        if isinstance(node, ast.Call):
+            d = dotted_name(node.func)
+            if d is not None:
+                last = d.split(".")[-1]
+                tokens.add(last)
+                if last in mod_fns:
+                    callees.add(last)
+            if isinstance(node.func, ast.Name) and node.func.id in mod_fns:
+                callees.add(node.func.id)
+    for c in callees:
+        tokens |= _collect_tokens(mod_fns[c], mod_fns, seen)
+    return tokens
+
+
+def _return_pins_none_factors(fn: ast.FunctionDef) -> bool | None:
+    """Does every return of ``fn`` pin literal None at tuple positions
+    2 and 3 (the u, v slots)?  None when returns aren't statically
+    5-tuples."""
+    verdicts: list[bool] = []
+
+    def visit(node: ast.AST) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                continue  # returns in nested scopes are not fn's returns
+            if isinstance(child, ast.Return) and isinstance(child.value, ast.Tuple):
+                elts = child.value.elts
+                if len(elts) == 5:
+                    verdicts.append(
+                        isinstance(elts[2], ast.Constant)
+                        and elts[2].value is None
+                        and isinstance(elts[3], ast.Constant)
+                        and elts[3].value is None
+                    )
+            visit(child)
+
+    visit(fn)
+    if not verdicts:
+        return None
+    return all(verdicts)
+
+
+def _caps_kwargs(call: ast.Call) -> dict[str, bool] | None:
+    """Literal bool kwargs of a SolverCaps(...) constructor call."""
+    d = dotted_name(call.func) or ""
+    if d.split(".")[-1] != "SolverCaps":
+        return None
+    out: dict[str, bool] = {}
+    for kw in call.keywords:
+        if kw.arg and isinstance(kw.value, ast.Constant) \
+                and isinstance(kw.value.value, bool):
+            out[kw.arg] = kw.value.value
+    return out
+
+
+#: defaults mirrored from repro.rpca.SolverCaps -- keep in sync
+_CAP_DEFAULTS = {
+    "supports_mask": True,
+    "supports_factors": False,
+    "supports_clients": False,
+    "supports_participation": False,
+    "supports_sharding": False,
+    "batchable": True,
+    "needs_rank": False,
+    "supports_service": False,
+    "supports_lowp": False,
+    "supports_multiprocess": False,
+}
+
+
+def check(mod: ModuleInfo) -> list[Finding]:
+    findings: list[Finding] = []
+    mod_fns = mod.module_functions()
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        d = dotted_name(node.func) or ""
+        if d.split(".")[-1] != "register_solver":
+            continue
+        if len(node.args) < 3:
+            continue
+        name_node, caps_node, make_node = node.args[0], node.args[1], node.args[2]
+        solver = name_node.value if isinstance(name_node, ast.Constant) else "?"
+        if not isinstance(caps_node, ast.Call):
+            continue
+        caps = _caps_kwargs(caps_node)
+        if caps is None:
+            continue
+        eff = dict(_CAP_DEFAULTS)
+        eff.update(caps)
+        symbol = f"register_solver[{solver}]"
+
+        if not isinstance(make_node, ast.Name) or make_node.id not in mod_fns:
+            continue  # make adapter defined elsewhere: out of scope
+        make_fn = mod_fns[make_node.id]
+        tokens = _collect_tokens(make_fn, mod_fns)
+
+        for cap, needles in _CAP_TOKEN.items():
+            if eff.get(cap) and not any(n in tokens for n in needles):
+                findings.append(Finding(
+                    "RPCA-R005", mod.display_path, node.lineno, symbol,
+                    f"caps claim {cap}=True but adapter "
+                    f"'{make_node.id}' (and its local callees) never "
+                    f"references {' / '.join(needles)} -- the front door "
+                    f"will accept the spec field and silently drop it",
+                ))
+
+        pins_none = _return_pins_none_factors(make_fn)
+        if pins_none is not None:
+            if eff["supports_factors"] and pins_none:
+                findings.append(Finding(
+                    "RPCA-R005", mod.display_path, node.lineno, symbol,
+                    f"caps claim supports_factors=True but "
+                    f"'{make_node.id}' returns None at the (u, v) "
+                    f"positions of every (l, s, u, v, stats) tuple",
+                ))
+            if not eff["supports_factors"] and not pins_none:
+                findings.append(Finding(
+                    "RPCA-R005", mod.display_path, node.lineno, symbol,
+                    f"caps claim supports_factors=False but "
+                    f"'{make_node.id}' returns non-None factors at the "
+                    f"(u, v) positions -- callers asking for factors "
+                    f"would be refused a capability that exists",
+                ))
+
+        if eff["supports_service"]:
+            has_service = any(kw.arg == "service" for kw in node.keywords)
+            if not has_service:
+                findings.append(Finding(
+                    "RPCA-R005", mod.display_path, node.lineno, symbol,
+                    "caps claim supports_service=True but the "
+                    "registration passes no service= hooks",
+                ))
+
+        if eff["supports_multiprocess"] and not eff["supports_sharding"]:
+            findings.append(Finding(
+                "RPCA-R005", mod.display_path, node.lineno, symbol,
+                "supports_multiprocess=True is only meaningful with "
+                "supports_sharding=True (the multi-host gate keys off "
+                "spec.mesh)",
+            ))
+    return findings
+
+
+RULE = Rule(
+    id="RPCA-R005",
+    name="registry-contract",
+    doc="SolverCaps claims must match the registered adapter's implementation",
+    check=check,
+)
