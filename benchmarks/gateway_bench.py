@@ -1,0 +1,128 @@
+"""Gateway serving benchmark: paged width-bucketed lanes vs one
+homogeneous slot table (DESIGN.md Sec. 16).
+
+Two row families:
+
+``padding``  the deterministic slot-plane byte model over a mixed-width
+             tenant arrival mix -- ``paged_plane_bytes`` (each request
+             pays its page-span width class), ``homog_plane_bytes``
+             (every request pays the full ``(m, n_max)`` plane, the
+             pre-gateway ``RPCAService`` cost), and their ``reduction``
+             ratio.  Pure arithmetic over the mix -- the PR-9 acceptance
+             gate (>= 2x) is asserted in-bench and tracked by the perf
+             guard.
+
+``serve``    the measured async path: the same mix driven through
+             ``RPCAGateway.solve_all`` -- wall, solves/sec, solver
+             rounds/sec, and the gateway's own p50/p99 submit->result
+             latency.  Wall rows are informational (host-noise), the
+             padding model carries the trajectory.
+
+``RPCA_BENCH_FAST=1`` shrinks the mix proportionally (same width
+fractions -> same reduction ratio); the committed baseline bytes
+correspond to the fast-scale mix, matching CI's ``RPCA_BENCH_FAST=1``
+bench step (like every byte row in ``BENCH_baseline.json``).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.factorized import DCFConfig
+from repro.serving.gateway import GatewayConfig, RPCAGateway
+
+#: Width mix as fractions of n_max (a page is n_max/8): two 1-page
+#: tenants, two 2-page, two 3-page, one 4-page, one full-width.  The
+#: byte model over this mix reduces padded bytes by 8 / 3 ~ 2.67x.
+MIX_FRACTIONS = (1 / 8, 1 / 8, 1 / 4, 1 / 4, 3 / 8, 3 / 8, 1 / 2, 1.0)
+
+#: PR-9 acceptance: the paged pool must at least halve padded bytes on
+#: the mixed-size workload.
+MIN_REDUCTION = 2.0
+
+
+def _mix(n_max: int) -> list[int]:
+    return [max(1, int(round(f * n_max))) for f in MIX_FRACTIONS]
+
+
+def _gen(m: int, n_cols: int, rank: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    low = rng.standard_normal((m, rank)) @ rng.standard_normal((rank, n_cols))
+    sparse = (rng.random((m, n_cols)) < 0.05) * 3.0
+    return (low + sparse).astype(np.float32)
+
+
+def padding_model(m: int, n_max: int, page_cols: int,
+                  widths: list[int]) -> dict:
+    """Slot-plane bytes for the mix: page-span width classes vs one
+    homogeneous ``(m, n_max)`` plane per request (f32 data planes)."""
+    item = 4 * m
+    paged = sum(
+        min(n_max, -(-w // page_cols) * page_cols) * item for w in widths
+    )
+    homog = len(widths) * n_max * item
+    return {
+        "bench": "gateway",
+        "name": "padding",
+        "paged_plane_bytes": paged,
+        "homog_plane_bytes": homog,
+        "reduction": homog / paged,
+    }
+
+
+def run(m=512, n_max=256, rank=8, seed=0):
+    page_cols = n_max // 8
+    widths = _mix(n_max)
+    pad_row = padding_model(m, n_max, page_cols, widths)
+    assert pad_row["reduction"] >= MIN_REDUCTION, (
+        f"paged mix reduces padded bytes only "
+        f"{pad_row['reduction']:.2f}x (< {MIN_REDUCTION}x acceptance)"
+    )
+
+    cfg = DCFConfig.tuned(rank=rank)
+    gcfg = GatewayConfig(
+        page_cols=page_cols,
+        pool_pages=4 * len(widths),
+        max_queue=2 * len(widths),
+        slots=4,
+        rounds_per_tick=8,
+        max_rounds=200,
+    )
+    gw = RPCAGateway(m, n_max, cfg, gcfg)
+    mats = [_gen(m, w, rank, seed + i) for i, w in enumerate(widths)]
+    t0 = time.perf_counter()
+    resps = gw.solve_all(mats)
+    wall_ms = (time.perf_counter() - t0) * 1e3
+    assert all(r.l.shape == mat.shape for r, mat in zip(resps, mats))
+
+    mets = gw.metrics()
+    serve_row = {
+        "bench": "gateway",
+        "name": "serve",
+        "wall_ms": wall_ms,
+        "solves_per_s": len(mats) / (wall_ms / 1e3),
+        "rounds_total": mets["rounds_total"],
+        "p50_ms": mets["latency"]["p50_ms"],
+        "p99_ms": mets["latency"]["p99_ms"],
+        "shed": mets["shed"],
+    }
+    return [pad_row, serve_row]
+
+
+def main(full=False, fast=None):
+    import os
+
+    if fast is None:
+        fast = os.environ.get("RPCA_BENCH_FAST", "") == "1"
+    rows = run(m=128, n_max=64, rank=4) if fast else run()
+    for r in rows:
+        extras = {k: v for k, v in r.items() if k not in ("bench", "name")}
+        print(f"gateway/{r['name']},"
+              + ",".join(f"{k}={v:.4g}" if isinstance(v, float) else
+                         f"{k}={v}" for k, v in extras.items()))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -42,6 +42,9 @@ TRACKED = {
     "aot/dispatch/overhead_frac": "max",
     "aot/dispatch/warm_xla_compiles": "max",
     "aot/dispatch/drift_xla_compiles": "max",
+    "gateway/padding/reduction": "min",
+    "gateway/padding/paged_plane_bytes": "max",
+    "gateway/padding/homog_plane_bytes": "max",
     "consensus/wire_e4/model_ratio": "min",
     "consensus/wire_e4/measured_ratio": "min",
     "consensus/wire_e4/dense_bytes_client_round": "max",
@@ -72,6 +75,12 @@ FLOOR_OVERRIDES = {
     "aot/dispatch/overhead_frac": 0.05,
     "aot/dispatch/warm_xla_compiles": 0,
     "aot/dispatch/drift_xla_compiles": 0,
+    # The gateway padding gate (ISSUE-9 acceptance).  The byte rows are
+    # a deterministic model over the committed width mix and stay at
+    # their computed values; the reduction floor is the acceptance bound
+    # itself (>= 2x fewer padded slot-plane bytes than one homogeneous
+    # table; the committed mix models ~2.67x).
+    "gateway/padding/reduction": 2.0,
     # The consensus wire gates (ISSUE-7 acceptance).  The byte rows and
     # model_ratio are deterministic arithmetic over the compiled HLO and
     # stay at their measured values; the measured_ratio floor is the

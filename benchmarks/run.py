@@ -23,6 +23,7 @@ from benchmarks import (  # noqa: E402
     fig2_phase,
     fig4_local_iters,
     fused_round_bench,
+    gateway_bench,
     grad_compress_bench,
     kernel_micro,
     masked_rpca_bench,
@@ -42,6 +43,7 @@ BENCHES = {
     "elastic": elastic_bench,
     "api": api_dispatch_bench,
     "aot": aot_dispatch_bench,
+    "gateway": gateway_bench,
     "consensus": consensus_bench,
     "grad_compress": grad_compress_bench,
     "roofline": roofline_summary,

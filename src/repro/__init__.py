@@ -7,6 +7,11 @@ Public surface:
                  :class:`~repro.rpca.RPCAResult`.
 ``repro.core``   solver internals (runtime, problems, metrics, the four
                  solver modules and their legacy entrypoints).
+``repro.serving``  the serving plane -- ``RPCAGateway`` (async
+                 continuous-batching front end) over ``RPCAService``
+                 (the slot table), with the ``CapacityError`` /
+                 ``QueueFull`` admission taxonomy.  Lazy (PEP 562):
+                 importing ``repro`` does not pull in the serving stack.
 """
 from repro import rpca
 from repro.rpca import (
@@ -28,4 +33,34 @@ __all__ = [
     "auto_method",
     "register_solver",
     "solve",
+    "CapacityError",
+    "QueueFull",
+    "GatewayConfig",
+    "RPCAGateway",
+    "RPCAService",
+    "RPCAServiceConfig",
 ]
+
+_SERVING_EXPORTS = {
+    "CapacityError": ("repro.core.validate", "CapacityError"),
+    "QueueFull": ("repro.core.validate", "QueueFull"),
+    "GatewayConfig": ("repro.serving.gateway", "GatewayConfig"),
+    "RPCAGateway": ("repro.serving.gateway", "RPCAGateway"),
+    "RPCAService": ("repro.serving.rpca_service", "RPCAService"),
+    "RPCAServiceConfig": ("repro.serving.rpca_service", "RPCAServiceConfig"),
+}
+
+
+def __getattr__(name: str):
+    target = _SERVING_EXPORTS.get(name)
+    if target is None:
+        raise AttributeError(f"module 'repro' has no attribute {name!r}")
+    import importlib
+
+    value = getattr(importlib.import_module(target[0]), target[1])
+    globals()[name] = value  # cache: subsequent lookups skip __getattr__
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_SERVING_EXPORTS))

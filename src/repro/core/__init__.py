@@ -35,6 +35,7 @@ from repro.core.problems import (
     split_columns,
     unpack_mask,
 )
+from repro.core.validate import CapacityError, QueueFull
 from repro.core.runtime import (
     CHUNKED,
     EARLY,
@@ -79,6 +80,8 @@ __all__ = [
     "Solver",
     "driver",
     "solve_batch",
+    "CapacityError",
+    "QueueFull",
     "CacheStats",
     "CompileCache",
     "CompilePolicy",

@@ -16,6 +16,42 @@ from __future__ import annotations
 from typing import Any, Sequence
 
 
+class CapacityError(RuntimeError):
+    """Transient admission failure: a bounded serving resource (slot
+    table, page pool, submission queue) is full *right now*.
+
+    Deliberately NOT a ``ValueError``: "at capacity" is retryable once
+    in-flight work drains, while the ``ValueError`` vocabulary below
+    marks requests that can *never* be valid.  Callers that conflate the
+    two either retry hopeless requests forever or shed valid load.
+    """
+
+
+class QueueFull(CapacityError):
+    """Gateway backpressure signal: the submission queue (or its paged
+    staging pool) is at its admission limit.  The typed replacement for
+    the legacy ``RPCAService.submit() -> None``-on-capacity contract --
+    load-shedding callers catch this and back off / divert."""
+
+
+def service_at_capacity(slots: int) -> CapacityError:
+    """Uniform at-capacity signal for the slot-table service."""
+    return CapacityError(
+        f"service at capacity: all {slots} slots are occupied; retry "
+        f"after a tick/poll/release cycle frees one"
+    )
+
+
+def gateway_queue_full(depth: int, limit: int,
+                       what: str = "submission queue") -> QueueFull:
+    """Uniform backpressure signal for the async gateway's admission
+    control (queue depth or staging-pool exhaustion)."""
+    return QueueFull(
+        f"gateway {what} is full ({depth}/{limit}); shed load or retry "
+        f"after in-flight solves complete"
+    )
+
+
 def check_mask(mask: Any, data_shape: tuple[int, ...]) -> None:
     """Observation mask must match the data shape exactly and be float.
 

@@ -43,6 +43,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import warnings
 from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Any, NamedTuple
@@ -238,6 +239,10 @@ class RPCAService:
         self._active = np.zeros((b,), bool)  # host-side slot occupancy
         self._slot_n = np.full((b,), n, np.int64)  # true width per slot
         self._slot_method = [method] * b  # lane owning each slot
+        # lam-cache fingerprint held by each slot (None = the slot's cfg
+        # does not calibrate); release() evicts the entry when the last
+        # slot holding a fingerprint departs.
+        self._slot_lam_fp: list[tuple | None] = [None] * b
 
         # robust_lam calibration cache: (M fingerprint, mask fingerprint)
         # -> calibrated lam.  Warm refreshes of unchanged tenant data skip
@@ -280,20 +285,52 @@ class RPCAService:
         return lane
 
     # -- request lifecycle --------------------------------------------------
-    def submit(
+    def validate_submission(
         self,
         m_obs: Array,
         warm: tuple[Array, Array] | None = None,
         mask: Array | None = None,
         method: str | None = None,
-    ) -> int | None:
-        """Place a problem into a free slot; returns the slot id or ``None``
-        when the batch is full (caller retries after a tick + poll cycle).
-        ``None`` is reserved for *capacity*: a problem that can never fit
-        (wrong row count, too many columns, mis-shaped mask or warm
-        factors, a method without service support) raises ``ValueError``
-        eagerly instead, so callers can tell "retry later" from "never
-        valid".
+    ) -> tuple[str, int]:
+        """Run the *never-valid* admission checks without consuming a
+        slot: method service support, row count / width fit, mask shape,
+        warm-factor shapes.  Returns the resolved ``(method, n_req)``.
+
+        The async gateway calls this at ``submit()`` time so a doomed
+        request raises ``ValueError`` at the caller instead of queueing
+        and failing its future at admission.
+        """
+        method = method or self._default_method
+        lane = self._lane(method)  # validates method before shape checks
+        n_req = validate.check_service_problem(m_obs, self.m, self.n)
+        validate.check_mask(mask, m_obs.shape)
+        if warm is not None:
+            warm = validate.check_warm_pair(warm)
+            layout = lane.hooks.warm_layout(lane.cfg, self.m, n_req)
+            for w, (name, shape, desc, _) in zip(warm, layout):
+                validate.check_factor(w, shape, name, desc)
+        return method, n_req
+
+    def free_slots(self) -> int:
+        """Host-side free-slot count (no device sync)."""
+        return int((~self._active).sum())
+
+    def try_submit(
+        self,
+        m_obs: Array,
+        warm: tuple[Array, Array] | None = None,
+        mask: Array | None = None,
+        method: str | None = None,
+    ) -> int:
+        """Place a problem into a free slot; returns the slot id.
+
+        Admission is typed: a problem that can never fit (wrong row
+        count, too many columns, mis-shaped mask or warm factors, a
+        method without service support) raises ``ValueError`` eagerly,
+        while a *full* slot table raises
+        :class:`~repro.core.validate.CapacityError` -- transient, retry
+        after a tick + poll + release cycle.  The async gateway maps the
+        latter to queue backpressure (``QueueFull``).
 
         ``method`` picks the registered solver for *this* request (default:
         the service's default lane).  ``warm`` is lane-shaped: ``(U, V)``
@@ -309,36 +346,33 @@ class RPCAService:
         ``(m, n)`` slot pytree behind a mask-zero plane (the PR-2 Omega
         plumbing) and :meth:`poll` trims the response back to ``n_req``.
         """
-        method = method or self._default_method
-        lane = self._lane(method)  # validates method before shape checks
-        n_req = validate.check_service_problem(m_obs, self.m, self.n)
-        validate.check_mask(mask, m_obs.shape)
+        method, n_req = self.validate_submission(m_obs, warm, mask, method)
+        lane = self._lanes[method]
         layout = lane.hooks.warm_layout(lane.cfg, self.m, n_req)
         if warm is not None:
             warm = validate.check_warm_pair(warm)
-            for w, (name, shape, desc, _) in zip(warm, layout):
-                validate.check_factor(w, shape, name, desc)
         free = np.flatnonzero(~self._active)
         if free.size == 0:
-            return None
+            raise validate.service_at_capacity(self.scfg.slots)
         slot = int(free[0])
         key = jax.random.fold_in(self._key, self._n_submitted)
         self._n_submitted += 1
         # lam calibration cache: fingerprint the *submitted* (pre-pad)
         # planes -- only for configs that actually sort the data for lam
         # (the factorized family with lam=None); the convex lanes derive
-        # lam from the shape for free.
-        cfg_sub, lam_fp = lane.cfg, None
+        # lam from the shape for free.  ``fp_key`` is remembered per slot
+        # (hit or miss) so release() can refcount-evict the entry.
+        cfg_sub, fp_key, lam_fp = lane.cfg, None, None
         if isinstance(lane.cfg, DCFConfig) and lane.cfg.lam is None:
-            lam_fp = (_fingerprint(m_obs), _fingerprint(mask))
-            lam_hit = self._lam_cache.get(lam_fp)
+            fp_key = (_fingerprint(m_obs), _fingerprint(mask))
+            lam_hit = self._lam_cache.get(fp_key)
             if lam_hit is not None:
-                self._lam_cache.move_to_end(lam_fp)
+                self._lam_cache.move_to_end(fp_key)
                 self._lam_hits += 1
                 cfg_sub = dataclasses.replace(lane.cfg, lam=lam_hit)
-                lam_fp = None  # nothing to store
             else:
                 self._lam_misses += 1
+                lam_fp = fp_key  # freshly calibrated below: store it
         if n_req < self.n:
             # Ragged width: pad the data (and the mask's base plane) with
             # mask-zero columns so the padded tail never influences the
@@ -366,6 +400,7 @@ class RPCAService:
                 self._lam_cache.popitem(last=False)
         self._slot_n[slot] = n_req
         self._slot_method[slot] = method
+        self._slot_lam_fp[slot] = fp_key
         idx = jnp.asarray(slot)
         lane.problems = lane.write_slot(lane.problems, problem, idx)
         lane.carry = lane.write_slot(
@@ -377,6 +412,34 @@ class RPCAService:
         self._hit = self._hit.at[slot].set(False)
         self._active[slot] = True
         return slot
+
+    def submit(
+        self,
+        m_obs: Array,
+        warm: tuple[Array, Array] | None = None,
+        mask: Array | None = None,
+        method: str | None = None,
+    ) -> int | None:
+        """Legacy admission shim: like :meth:`try_submit`, but returns
+        ``None`` when the batch is full instead of raising.
+
+        .. deprecated::
+            The ``None``-on-capacity return conflates "no result" with a
+            typed, retryable condition; it is kept for existing callers
+            (with a ``DeprecationWarning`` on the capacity path only).
+            New code calls :meth:`try_submit` and handles
+            :class:`~repro.core.validate.CapacityError`.
+        """
+        try:
+            return self.try_submit(m_obs, warm, mask=mask, method=method)
+        except validate.CapacityError:
+            warnings.warn(
+                "RPCAService.submit() returning None at capacity is "
+                "deprecated; call try_submit() and handle CapacityError",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            return None
 
     def tick(self) -> None:
         """Advance every in-flight problem by ``rounds_per_tick`` rounds.
@@ -421,7 +484,26 @@ class RPCAService:
         )
 
     def release(self, slot: int) -> None:
+        """Free ``slot`` for reuse and drop its per-slot bookkeeping.
+
+        Also evicts the slot's fingerprint-keyed ``robust_lam``
+        calibration-cache entry -- unless another occupied slot shares
+        the same (M, mask) fingerprint -- so a long-lived service (or
+        the gateway above it) never accumulates entries for departed
+        tenants.  A tenant that later resubmits bit-identical data
+        simply recalibrates once; the cache exists for *in-tenancy* warm
+        refreshes, not as an unbounded tenant directory.
+        """
+        if not (0 <= slot < self.scfg.slots) or not self._active[slot]:
+            raise ValueError(f"slot {slot} is not occupied")
         self._active[slot] = False
+        fp = self._slot_lam_fp[slot]
+        self._slot_lam_fp[slot] = None
+        if fp is not None and not any(
+            self._slot_lam_fp[i] == fp
+            for i in np.flatnonzero(self._active)
+        ):
+            self._lam_cache.pop(fp, None)
 
     def pending(self) -> int:
         """Number of occupied slots still iterating."""
@@ -437,10 +519,17 @@ class RPCAService:
         from repro.distributed import multihost as mh
 
         cache = cc.default_cache()
+        methods = np.asarray(self._slot_method)
         return {
             "slots": int(self.scfg.slots),
             "active": int(self._active.sum()),
             "pending": self.pending(),
+            # per-lane occupancy over the shared slot table; release()
+            # decrements the owning lane's count.
+            "lanes": {
+                name: int((self._active & (methods == name)).sum())
+                for name in self._lanes
+            },
             "compile_cache": {
                 **cache.stats.as_dict(),
                 "entries": len(cache),
@@ -477,9 +566,11 @@ class RPCAService:
         while queue or in_flight:
             while queue:
                 qi, mat = queue[0]
-                slot = self.submit(mat, warm.get(qi), mask=masks.get(qi),
-                                   method=methods.get(qi))
-                if slot is None:
+                try:
+                    slot = self.try_submit(mat, warm.get(qi),
+                                           mask=masks.get(qi),
+                                           method=methods.get(qi))
+                except validate.CapacityError:
                     break
                 queue.pop(0)
                 in_flight[slot] = qi

@@ -340,25 +340,36 @@ def test_service_lam_calibration_cache(fresh_cache):
     while svc.pending():
         svc.tick()
     r1 = svc.poll(slot)
-    svc.release(slot)
     assert svc.metrics()["lam_cache"] == {
         "hits": 0, "misses": 1, "entries": 1
     }
 
-    # Warm refresh of the *same* (M, mask) pair: lam comes from the
-    # cache (no re-sort) and the result matches the recalibrated solve.
-    slot = svc.submit(p.m_obs, warm=(r1.u, r1.v), mask=p.mask)
+    # Warm refresh of the *same* (M, mask) pair, submitted while the
+    # prior epoch's slot is still held (the streaming overlap pattern):
+    # lam comes from the cache (no re-sort), and releasing the old slot
+    # keeps the entry alive because the refresh slot shares the
+    # fingerprint (release() eviction is refcounted).
+    slot2 = svc.submit(p.m_obs, warm=(r1.u, r1.v), mask=p.mask)
+    svc.release(slot)
     while svc.pending():
         svc.tick()
-    r2 = svc.poll(slot)
-    svc.release(slot)
+    r2 = svc.poll(slot2)
     assert svc.metrics()["lam_cache"]["hits"] == 1
+    assert svc.metrics()["lam_cache"]["entries"] == 1
     assert r2.converged
 
     # Different data is a different fingerprint -> fresh calibration.
-    svc.submit(_host(p.m_obs) * 2.0, mask=p.mask)
+    slot3 = svc.submit(_host(p.m_obs) * 2.0, mask=p.mask)
     assert svc.metrics()["lam_cache"]["misses"] == 2
     assert svc.metrics()["lam_cache"]["entries"] == 2
+
+    # release() evicts a departed tenant's entry once no occupied slot
+    # shares its fingerprint -- long-lived services don't accumulate a
+    # tenant directory.
+    svc.release(slot2)
+    assert svc.metrics()["lam_cache"]["entries"] == 1
+    svc.release(slot3)
+    assert svc.metrics()["lam_cache"]["entries"] == 0
 
 
 def test_service_metrics_shape(fresh_cache):

@@ -1,0 +1,403 @@
+"""Async gateway + paged plane pool (DESIGN.md Sec. 16).
+
+Covers the PR-9 acceptance invariants: pool pack/span/trim round-trips
+bit-exactly (ragged widths included), the all-slots-single-page gateway
+configuration is bit-exact with driving ``RPCAService`` directly, the
+stride scheduler is deterministic under a seeded arrival schedule,
+admission control sheds with the typed ``QueueFull`` signal at the queue
+and pool limits, and the metrics surface reports occupancy / queue depth
+/ padding waste / latency.  The service-level admission retypes ride
+along: ``try_submit`` raises ``CapacityError``, the legacy ``submit``
+shim warns, ``release`` refcount-evicts lam-cache entries and decrements
+lane occupancy.
+
+No pytest-asyncio in the image: async tests drive their own loop via
+``asyncio.run``.
+"""
+import asyncio
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import CapacityError, DCFConfig, QueueFull
+from repro.core.ialm import IALMConfig
+from repro.serving.gateway import GatewayConfig, RPCAGateway
+from repro.serving.pages import PagePool
+from repro.serving.rpca_service import RPCAService, RPCAServiceConfig
+
+M, N, RANK = 24, 16, 3
+CFG = DCFConfig.tuned(rank=RANK)
+
+
+def _gen(n_cols, seed=0, m=M):
+    rng = np.random.default_rng(seed)
+    low = rng.standard_normal((m, RANK)) @ rng.standard_normal((RANK, n_cols))
+    sparse = (rng.random((m, n_cols)) < 0.05) * 3.0
+    return (low + sparse).astype(np.float32)
+
+
+def _scfg(slots=4):
+    return RPCAServiceConfig(slots=slots, rounds_per_tick=8, max_rounds=96)
+
+
+def _gcfg(**kw):
+    kw.setdefault("slots", 4)
+    kw.setdefault("rounds_per_tick", 8)
+    kw.setdefault("max_rounds", 96)
+    return GatewayConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# PagePool: pack / span / trim
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n_cols", [1, 7, 8, 9, 16, 31, 40])
+def test_pool_roundtrip_ragged(n_cols):
+    """Planes round-trip bit-exactly through put/get at every width,
+    page-multiple or not."""
+    pool = PagePool(m=12, page_cols=8, num_pages=8)
+    plane = _gen(n_cols, seed=n_cols, m=12)
+    h = pool.put(plane)
+    assert pool.pages_for(n_cols) == -(-n_cols // 8)
+    out = pool.get(h)
+    assert out.shape == plane.shape and out.dtype == plane.dtype
+    np.testing.assert_array_equal(out, plane)
+    pool.free(h)
+    assert pool.used_pages == 0
+
+
+def test_pool_interleaved_lifecycle():
+    """Frees return pages for reuse; surviving entries stay intact when
+    neighbours churn (no aliasing across the free list)."""
+    pool = PagePool(m=6, page_cols=4, num_pages=6)
+    a = _gen(10, seed=1, m=6)  # 3 pages
+    b = _gen(9, seed=2, m=6)  # 3 pages
+    ha, hb = pool.put(a), pool.put(b)
+    assert pool.free_pages == 0
+    pool.free(ha)
+    c = _gen(11, seed=3, m=6)  # reuses a's pages
+    hc = pool.put(c)
+    np.testing.assert_array_equal(pool.get(hb), b)
+    np.testing.assert_array_equal(pool.get(hc), c)
+    with pytest.raises(ValueError, match="not live"):
+        pool.get(ha)
+
+
+def test_pool_capacity_typed():
+    pool = PagePool(m=4, page_cols=4, num_pages=2)
+    pool.put(_gen(8, m=4))
+    assert not pool.fits(1)
+    with pytest.raises(CapacityError, match="page pool"):
+        pool.put(_gen(1, m=4))
+
+
+def test_pool_never_valid_rejected():
+    pool = PagePool(m=4, page_cols=4, num_pages=2)
+    with pytest.raises(ValueError, match="rows"):
+        pool.put(np.zeros((5, 4), np.float32))
+    with pytest.raises(ValueError, match="columns"):
+        pool.put(np.zeros((4, 0), np.float32))
+    with pytest.raises(ValueError, match="columns"):
+        pool.put(np.zeros((4, 9), np.float32))  # > num_pages * page_cols
+    with pytest.raises(ValueError, match="losslessly"):
+        pool.put(np.zeros((4, 4), np.float64))  # f64 -> f32 pool quantizes
+
+
+def test_pool_table_and_waste():
+    """The CSR page table matches the hyadmin layout and the waste
+    accounting matches hand-computed bytes."""
+    pool = PagePool(m=10, page_cols=8, num_pages=8)
+    h1 = pool.put(_gen(13, seed=4, m=10))  # 2 pages, last holds 5 cols
+    h2 = pool.put(_gen(8, seed=5, m=10))  # 1 page, exactly full
+    t = pool.table()
+    assert t.handles == (h1, h2)
+    np.testing.assert_array_equal(t.page_indptr, [0, 2, 3])
+    assert len(t.page_indices) == 3
+    assert len(set(t.page_indices.tolist())) == 3  # distinct pages
+    np.testing.assert_array_equal(t.last_page_cols, [5, 8])
+    # gather via the table reproduces entry h1
+    pages = [pool._pages[pid] for pid in t.page_indices[0:2]]
+    rebuilt = np.concatenate(pages, axis=1)[:, :13]
+    np.testing.assert_array_equal(rebuilt, pool.get(h1))
+
+    s = pool.stats()
+    assert s["live_bytes"] == 10 * (13 + 8) * 4
+    assert s["allocated_bytes"] == 10 * 8 * 3 * 4
+    assert s["waste_ratio"] == pytest.approx(24 / 21)
+    pool.free(h1)
+    pool.free(h2)
+    assert pool.stats()["waste_ratio"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Gateway: bit-exactness, scheduling, backpressure
+# ---------------------------------------------------------------------------
+def test_gateway_single_page_bitexact():
+    """page_cols = n (the default): every request spans one page, lands
+    in one full-width lane, and the gateway reproduces RPCAService
+    bit-for-bit -- same key, same admission order, same planes."""
+    key = jax.random.PRNGKey(7)
+    mats = [_gen(N, seed=1), _gen(10, seed=2), _gen(N, seed=3)]
+    mask = (np.random.default_rng(9).random((M, N)) < 0.8).astype(np.float32)
+
+    svc = RPCAService(M, N, CFG, _scfg(), key=key)
+    direct = svc.solve_all(list(mats), masks={0: mask})
+
+    gw = RPCAGateway(M, N, CFG, _gcfg(), key=key)
+    via = gw.solve_all(list(mats), masks={0: mask})
+
+    for d, g in zip(direct, via):
+        assert g.method == d.method and g.rounds == d.rounds
+        assert g.converged == d.converged
+        np.testing.assert_array_equal(np.asarray(g.l), np.asarray(d.l))
+        np.testing.assert_array_equal(np.asarray(g.s), np.asarray(d.s))
+        np.testing.assert_array_equal(np.asarray(g.u), np.asarray(d.u))
+        np.testing.assert_array_equal(np.asarray(g.v), np.asarray(d.v))
+
+
+def test_gateway_paged_mixed_width_recovery():
+    """page_cols < n: requests land in page-span width lanes and still
+    recover their low-rank planes (quality, not bit-exactness -- each
+    width class is its own solve geometry)."""
+    rng = np.random.default_rng(1)
+
+    async def go():
+        gcfg = _gcfg(page_cols=8, pool_pages=16, max_queue=8,
+                     max_rounds=200)  # narrow widths need the full budget
+        async with RPCAGateway(M, 32, CFG, gcfg) as gw:
+            truths, tickets = [], []
+            for i, n_req in enumerate((8, 12, 32)):
+                low = rng.standard_normal((M, RANK)) @ \
+                    rng.standard_normal((RANK, n_req))
+                truths.append(low.astype(np.float32))
+                tickets.append(await gw.submit(truths[-1]))
+            resps = [await t for t in tickets]
+            assert sorted(gw._services) == [8, 16, 32]  # page-span lanes
+            for truth, resp in zip(truths, resps):
+                assert resp.l.shape == truth.shape
+                rel = np.linalg.norm(np.asarray(resp.l) - truth)
+                rel /= np.linalg.norm(truth)
+                assert rel < 5e-2
+
+    asyncio.run(go())
+
+
+def test_gateway_backpressure_sheds_typed():
+    """Past max_queue, submit raises QueueFull (a CapacityError), the
+    shed counter advances, and accepted work still completes."""
+
+    async def go():
+        gcfg = _gcfg(slots=2, max_queue=3, pool_pages=8)
+        async with RPCAGateway(M, N, CFG, gcfg) as gw:
+            accepted, shed = [], 0
+            for i in range(9):  # no awaits in between: nothing admits yet
+                try:
+                    accepted.append(await gw.submit(_gen(N, seed=i)))
+                except QueueFull as e:
+                    shed += 1
+                    assert isinstance(e, CapacityError)
+            assert shed == 6 and len(accepted) == 3
+            mets = gw.metrics()
+            assert mets["shed"] == 6 and mets["queue_depth"] == 3
+            for t in accepted:
+                assert (await t).l.shape == (M, N)
+            assert gw.metrics()["completed"] == 3
+
+    asyncio.run(go())
+
+
+def test_gateway_pool_exhaustion_sheds():
+    """The staging pool is the second admission-control surface: when it
+    cannot hold the plane, submit sheds with QueueFull too."""
+
+    async def go():
+        gcfg = _gcfg(page_cols=8, pool_pages=2, max_queue=64)
+        async with RPCAGateway(M, 32, CFG, gcfg) as gw:
+            await gw.submit(_gen(16, seed=0))  # 2 pages: pool now full
+            with pytest.raises(QueueFull, match="page pool"):
+                await gw.submit(_gen(8, seed=1))
+            assert gw.metrics()["shed"] == 1
+
+    asyncio.run(go())
+
+
+def test_gateway_fairness_deterministic():
+    """Stride scheduling: with cf weighted 2x over ialm and every
+    request enqueued before the loop runs, the admission order is the
+    exact stride interleave -- and identical across runs."""
+    mats_cf = [_gen(N, seed=i) for i in range(4)]
+    mats_ia = [_gen(N, seed=10 + i) for i in range(2)]
+
+    async def go():
+        gcfg = _gcfg(slots=8, max_queue=16,
+                     lane_weights=(("cf", 2.0), ("ialm", 1.0)))
+        async with RPCAGateway(M, N, CFG, gcfg,
+                               cfgs={"ialm": IALMConfig()}) as gw:
+            tickets = [await gw.submit(m) for m in mats_cf]  # ids 0..3
+            tickets += [await gw.submit(m, method="ialm")
+                        for m in mats_ia]  # ids 4..5
+            for t in tickets:
+                await t
+            return list(gw.admissions)
+
+    first = asyncio.run(go())
+    # cf admits twice per ialm admission (ties break on the lane key):
+    # cf0, ialm0, cf1, cf2, ialm1, cf3.
+    assert first == [0, 4, 1, 2, 5, 3]
+    assert asyncio.run(go()) == first
+
+
+def test_gateway_priority_preempts_fifo():
+    """Higher priority wins admission over earlier submissions."""
+
+    async def go():
+        gcfg = _gcfg(slots=1, max_queue=8)
+        async with RPCAGateway(M, N, CFG, gcfg) as gw:
+            low = [await gw.submit(_gen(N, seed=i)) for i in range(2)]
+            high = await gw.submit(_gen(N, seed=9), priority=1)
+            for t in [*low, high]:
+                await t
+            # the priority-1 request admitted first despite arriving last
+            assert gw.admissions == [high.id, low[0].id, low[1].id]
+
+    asyncio.run(go())
+
+
+def test_gateway_never_valid_raises_eagerly():
+    """Doomed requests fail at submit() with ValueError -- before
+    queueing, without touching the shed counter or ticket ids."""
+
+    async def go():
+        async with RPCAGateway(M, N, CFG, _gcfg()) as gw:
+            with pytest.raises(ValueError):
+                await gw.submit(_gen(N, m=M + 1))  # wrong row count
+            with pytest.raises(ValueError, match="service"):
+                await gw.submit(_gen(N), method="dcf")  # no service caps
+            with pytest.raises(ValueError):
+                await gw.submit(_gen(N), mask=np.ones((M, N - 1)))
+            mets = gw.metrics()
+            assert mets["submitted"] == 0 and mets["shed"] == 0
+            assert gw.metrics()["pool"]["entries"] == 0  # nothing staged
+
+    asyncio.run(go())
+
+    gw = RPCAGateway(M, N, CFG, _gcfg())
+    with pytest.raises(RuntimeError, match="not running"):
+        asyncio.run(gw.submit(_gen(N)))
+    with pytest.raises(ValueError, match="page_cols"):
+        RPCAGateway(M, N, CFG, _gcfg(page_cols=N + 1))
+
+
+def test_gateway_warm_refresh_and_mixed_methods():
+    """Warm-started refreshes converge in fewer rounds through the
+    gateway, and per-request methods route to their lanes."""
+
+    async def go():
+        async with RPCAGateway(M, N, CFG, _gcfg(),
+                               cfgs={"ialm": IALMConfig()}) as gw:
+            mat = _gen(N, seed=5)
+            cold = await (await gw.submit(mat))
+            warm = await (await gw.submit(mat, warm=(cold.u, cold.v)))
+            assert warm.converged
+            assert warm.rounds < cold.rounds
+            ia = await (await gw.submit(_gen(N, seed=6), method="ialm"))
+            assert ia.method == "ialm" and ia.v is None
+            lanes = gw.metrics()["lanes"]
+            assert f"cf@{N}" in lanes and f"ialm@{N}" in lanes
+
+    asyncio.run(go())
+
+
+def test_gateway_metrics_and_snapshot_hook():
+    """The observability surface: occupancy + padding accounting while
+    solves are in flight, latency percentiles after completion, and the
+    periodic snapshot hook."""
+    snaps = []
+
+    async def go():
+        gcfg = _gcfg(page_cols=8, pool_pages=16, max_queue=8,
+                     tol=1e-12, snapshot_every=1)  # tol: keep in flight
+        async with RPCAGateway(M, 32, CFG, gcfg,
+                               snapshot_hook=snaps.append) as gw:
+            t1 = await gw.submit(_gen(5, seed=1))  # width-8 lane, 5 live
+            t2 = await gw.submit(_gen(32, seed=2))
+            while gw.metrics()["in_flight"] < 2:
+                await asyncio.sleep(0)
+            mets = gw.metrics()
+            pad = mets["padding"]
+            assert pad["allocated_bytes"] == (8 + 32) * M * 4
+            assert pad["live_bytes"] == (5 + 32) * M * 4
+            assert pad["waste_ratio"] == pytest.approx(40 / 37)
+            # vs one homogeneous (slots, m, 32) table for the same two
+            assert pad["homogeneous_bytes"] == 2 * 32 * M * 4
+            assert pad["homogeneous_ratio"] == pytest.approx(64 / 40)
+            occ = {k: v["occupied"] for k, v in mets["lanes"].items()}
+            assert occ.get("cf@8") == 1 and occ.get("cf@32") == 1
+            await t1
+            await t2
+            mets = gw.metrics()
+            assert mets["latency"]["count"] == 2
+            assert mets["latency"]["p99_ms"] >= mets["latency"]["p50_ms"] > 0
+            assert mets["rounds_total"] > 0
+            assert mets["pool"]["entries"] == 0  # unstaged at admission
+
+    asyncio.run(go())
+    assert snaps and all("queue_depth" in s for s in snaps)
+
+
+def test_gateway_dense_fallback_for_foreign_dtypes():
+    """A plane whose dtype cannot round-trip through the f32 pool stages
+    dense instead of quantizing -- and still solves."""
+
+    async def go():
+        async with RPCAGateway(M, N, CFG, _gcfg()) as gw:
+            resp = await (await gw.submit(_gen(N, seed=8).astype(np.float64)))
+            assert resp.l.shape == (M, N)
+            assert gw.metrics()["pool"]["entries"] == 0
+
+    asyncio.run(go())
+
+
+def test_gateway_aclose_cancels_queued():
+    """aclose() cancels queued futures and returns staged pages."""
+
+    async def go():
+        gcfg = _gcfg(slots=1, max_queue=4, tol=1e-12)
+        gw = RPCAGateway(M, N, CFG, gcfg)
+        await gw.start()
+        tickets = [await gw.submit(_gen(N, seed=i)) for i in range(3)]
+        await gw.aclose()
+        assert sum(t._future.cancelled() for t in tickets) >= 2
+        assert gw._pool.used_pages == 0
+
+    asyncio.run(go())
+
+
+# ---------------------------------------------------------------------------
+# Service admission retyping (the satellites under the gateway)
+# ---------------------------------------------------------------------------
+def test_service_try_submit_capacity_typed():
+    svc = RPCAService(M, N, CFG, _scfg(slots=2))
+    svc.try_submit(_gen(N, seed=0))
+    svc.try_submit(_gen(N, seed=1))
+    assert svc.free_slots() == 0
+    with pytest.raises(CapacityError, match="capacity"):
+        svc.try_submit(_gen(N, seed=2))
+    # legacy shim: None + DeprecationWarning on the capacity path only
+    with pytest.warns(DeprecationWarning, match="try_submit"):
+        assert svc.submit(_gen(N, seed=2)) is None
+
+
+def test_service_release_decrements_lane_occupancy():
+    svc = RPCAService(M, N, CFG, _scfg(slots=3))
+    s_cf = svc.try_submit(_gen(N, seed=0))
+    s_ia = svc.try_submit(_gen(N, seed=1), method="ialm")
+    assert svc.metrics()["lanes"] == {"cf": 1, "ialm": 1}
+    svc.release(s_ia)
+    assert svc.metrics()["lanes"] == {"cf": 1, "ialm": 0}
+    svc.release(s_cf)
+    assert svc.metrics()["lanes"] == {"cf": 0, "ialm": 0}
+    with pytest.raises(ValueError, match="not occupied"):
+        svc.release(s_cf)  # double release
+    with pytest.raises(ValueError, match="not occupied"):
+        svc.release(99)
