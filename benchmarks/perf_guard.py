@@ -51,6 +51,10 @@ TRACKED = {
     "consensus/wire_e4/compressed_bytes_client_round": "max",
     "consensus/quality_e4/err_ratio": "max",
     "consensus/weak_scaling/per_client_eff": "min",
+    "fault/robust_overhead/trimmed_overhead_frac": "max",
+    "fault/robust_overhead/median_overhead_frac": "max",
+    "fault/byzantine_recovery/err_ratio": "max",
+    "fault/resume/resume_speedup": "min",
 }
 
 #: Hand-seeded bounds that ``--write-baseline`` must PRESERVE rather than
@@ -92,6 +96,18 @@ FLOOR_OVERRIDES = {
     "consensus/wire_e4/measured_ratio": 4.0,
     "consensus/quality_e4/err_ratio": 2.0,
     "consensus/weak_scaling/per_client_eff": 0.5,
+    # The fault-tolerance gates (ISSUE-10 acceptance).  The overhead
+    # fracs are wall ratios on the 512-plane (noisy): the committed
+    # bounds are the acceptance ceiling itself (<= 15%/round; effective
+    # gate 17.25%), not a lucky run (measured ~13%).  The Byzantine
+    # recovery ratio is seed-keyed deterministic; the bound is the
+    # acceptance ceiling (<= 3x the fault-free error; measured ~1x).
+    # resume_speedup compares the segmented driver against itself
+    # (resume-from-snapshot vs cold), floored at parity.
+    "fault/robust_overhead/trimmed_overhead_frac": 0.15,
+    "fault/robust_overhead/median_overhead_frac": 0.15,
+    "fault/byzantine_recovery/err_ratio": 3.0,
+    "fault/resume/resume_speedup": 1.0,
 }
 
 

@@ -19,6 +19,7 @@ from benchmarks import (  # noqa: E402
     api_dispatch_bench,
     consensus_bench,
     elastic_bench,
+    fault_tolerance_bench,
     fig1_convergence,
     fig2_phase,
     fig4_local_iters,
@@ -41,6 +42,7 @@ BENCHES = {
     "fused": fused_round_bench,
     "masked": masked_rpca_bench,
     "elastic": elastic_bench,
+    "fault": fault_tolerance_bench,
     "api": api_dispatch_bench,
     "aot": aot_dispatch_bench,
     "gateway": gateway_bench,

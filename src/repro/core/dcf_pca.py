@@ -45,6 +45,7 @@ from repro.core import factorized as fz
 from repro.core import problems as prob
 from repro.core import runtime as rt
 from repro.core import validate
+from repro.distributed import faults as flt
 from repro.kernels import bitmask
 
 Array = jax.Array
@@ -88,12 +89,36 @@ class DCFProblem(NamedTuple):
     mask: Array | None = None  # (E, m, n_i) blocked observation mask
     n_cols: Array | None = None  # (E,) true per-client column counts
     participation: Array | None = None  # (T_sched, E) 0/1 round schedule
+    faults: Array | None = None  # (T_f, E) int32 fault-code table
 
 
 class _Carry(NamedTuple):
     u: Array
     v: Array
     diag: rt.Diag
+
+
+def _inject_round_faults(
+    p: DCFProblem, t: Array, u_i: Array, u_prev: Array
+) -> tuple[Array, Array | None, Array | None]:
+    """Apply round ``t``'s fault codes at the consensus boundary
+    (simulated engine).  Returns ``(u_i, pt, v_mask)``: the possibly
+    corrupted payload stack, the effective participation vector (crash /
+    flaky votes dropped; ``None`` when unconditional) and the V-advance
+    mask (only a crash freezes local state; ``None`` when all advance).
+    """
+    pt = None
+    if p.participation is not None:
+        pt = p.participation[jnp.mod(t, p.participation.shape[0])]
+    if p.faults is None:
+        return u_i, pt, pt
+    code = flt.round_codes(p.faults, t)
+    u_i = flt.corrupt_payload(code, u_i, u_prev)
+    live = flt.live_mask(code)
+    adv = flt.v_advance_mask(code)
+    if pt is None:
+        return u_i, live, adv
+    return u_i, pt * live, pt * adv
 
 
 # ---------------------------------------------------------------------------
@@ -191,33 +216,26 @@ def make_solver(cfg: fz.DCFConfig, *, with_objective: bool = False) -> rt.Solver
         eta = cfg.lr(t)
         lam_t = cfg.lam_at(p.lam0, t)
         # Fused epilogue diagnostics replace the separate objective pass
-        # whenever the fused round measures them; participation rounds keep
-        # the legacy pass (a dropped client's epilogue measures a local run
-        # whose factors are then discarded -- the frozen state's objective
-        # is the meaningful one).
-        fused_obj = track and cfg.fused != "off" and p.participation is None
+        # whenever the fused round measures them; participation/fault
+        # rounds keep the legacy pass (a dropped client's epilogue
+        # measures a local run whose factors are then discarded -- the
+        # frozen state's objective is the meaningful one).
+        fused_obj = (track and cfg.fused != "off"
+                     and p.participation is None and p.faults is None)
         u_i, v_new, diag_i, n_frac = _sim_local_rounds(
             cfg, p, c.u, c.v, eta, lam_t
         )
-        wsum = None
-        if p.participation is None:
-            v = v_new
-            if p.n_cols is None:
-                u = jnp.mean(u_i, axis=0)  # Eq. (9): FedAvg consensus
-            else:
-                w, _ = fz.consensus_weights(p.n_cols, None, e)
-                u = jnp.sum(w[:, None, None] * u_i, axis=0)
-        else:
-            pt = p.participation[jnp.mod(t, p.participation.shape[0])]
-            # Dropped-out clients freeze their V_i (no decay toward zero)
-            # and are excluded from the round's consensus; their weight in
-            # later rounds is still the full p_i n_i.
-            v = jnp.where(pt[:, None, None] > 0, v_new, c.v)
-            w, wsum = fz.consensus_weights(p.n_cols, pt, e)
-            u_i = jnp.where(pt[:, None, None] > 0, u_i, c.u)
-            u = jnp.where(
-                wsum > 0, jnp.sum(w[:, None, None] * u_i, axis=0), c.u
-            )
+        # Consensus boundary: inject the round's faults, then route the
+        # aggregation through the dispatch (RPCA-R006) -- dropped-out /
+        # crashed clients freeze their V_i (no decay toward zero) and are
+        # excluded from the round's consensus; their weight in later
+        # rounds is still the full p_i n_i.
+        u_i, pt, v_mask = _inject_round_faults(p, t, u_i, c.u)
+        v = (v_new if v_mask is None
+             else jnp.where(v_mask[:, None, None] > 0, v_new, c.v))
+        u, wsum = fz.aggregate_stacked(
+            cfg, u_i, c.u, n_cols=p.n_cols, part=pt, num_clients=e
+        )
         if fused_obj:
             # Free data terms from the kernel epilogues; only the factor-
             # norm regularizer is added (sum_i n_frac_i == 1, so the
@@ -290,36 +308,68 @@ def _make_wire_solver(cfg: fz.DCFConfig, track: bool) -> rt.Solver:
             c["guard"] = inf
         return c
 
+    robust = cfg.aggregator != "weighted_mean"
+    screen = cfg.divergence_screen
+
     def step(p: DCFProblem, c: dict, t: Array) -> dict:
         e = p.blocks.shape[0]
         tg = t + p.t0
         eta = cfg.lr(tg)
         lam_t = cfg.lam_at(p.lam0, tg)
-        fused_obj = track and cfg.fused != "off" and p.participation is None
+        fused_obj = (track and cfg.fused != "off"
+                     and p.participation is None and p.faults is None)
         u_used = c["u"]
         u_i, v_new, diag_i, n_frac = _sim_local_rounds(
             cfg, p, u_used, c["v"], eta, lam_t
         )
+        u_i, pt, v_mask = _inject_round_faults(p, tg, u_i, u_used)
+        v = (v_new if v_mask is None
+             else jnp.where(v_mask[:, None, None] > 0, v_new, c["v"]))
         wsum = None
-        pt = None
-        if p.participation is None:
-            v = v_new
+        if robust:
+            # One vote per client: unweighted deltas cross the wire; the
+            # robust combine happens on the receive side.
+            w = jnp.ones((e,), jnp.float32)
+        elif pt is None:
             if p.n_cols is None:
                 w = jnp.full((e,), 1.0 / e, jnp.float32)
             else:
                 w, _ = fz.consensus_weights(p.n_cols, None, e)
         else:
-            pt = p.participation[jnp.mod(tg, p.participation.shape[0])]
-            v = jnp.where(pt[:, None, None] > 0, v_new, c["v"])
             w, wsum = fz.consensus_weights(p.n_cols, pt, e)
             u_i = jnp.where(pt[:, None, None] > 0, u_i, u_used)
         # What crosses the wire: each client's weighted delta (their sum
         # is the consensus step; a dropped client's w is 0, an all-dropout
-        # round sums to an exact no-op).
+        # round sums to an exact no-op).  Robust aggregators ship the
+        # *unweighted* delta and combine one-vote on receive.
         contrib = (w[:, None, None] * (u_i - u_used)).astype(jnp.float32)
         out = dict(c)
         if compress is None:
-            delta = contrib.sum(axis=0)
+            if robust or screen is not None:
+                act = jnp.ones((e,), jnp.float32) if pt is None else pt
+                if screen is not None:
+                    act = act * gcomp.divergence_screen_mask(
+                        contrib, act, screen
+                    )
+                if robust:
+                    delta, cnt = gcomp.robust_combine_stacked(
+                        contrib, act, cfg.aggregator, cfg.trim_frac
+                    )
+                    wsum = cnt.astype(jnp.float32)
+                else:
+                    # Screened weighted mean: recompute the weights over
+                    # the survivors (contrib already carries the original
+                    # w, so rescale by the survivor renormalization).
+                    w2, wsum = fz.consensus_weights(p.n_cols, act, e)
+                    deltas = (u_i - u_used).astype(jnp.float32)
+                    delta = jnp.sum(
+                        w2[:, None, None]
+                        * jnp.where(act[:, None, None] > 0, deltas, 0.0),
+                        axis=0,
+                    )
+                    delta = jnp.where(wsum > 0, delta, 0.0)
+            else:
+                delta = contrib.sum(axis=0)
         else:
             k = mh.topk_k(u_used.size, compress.topk_frac)
             flat = (contrib + c["err"]).reshape(e, -1)
@@ -333,9 +383,23 @@ def _make_wire_solver(cfg: fz.DCFConfig, track: bool) -> rt.Solver:
                 vals = jnp.where(pt[:, None] > 0, vals, 0.0)
                 err_new = jnp.where(pt[:, None, None] > 0, err_new,
                                     c["err"])
-            delta = gcomp.topk_reconstruct(vals, idx,
-                                           flat.shape[1]).reshape(
-                                               u_used.shape)
+            if robust:
+                # A poisoned payload must not poison its own error-
+                # feedback carry forever: non-finite residuals reset.
+                err_new = jnp.where(jnp.isfinite(err_new), err_new, 0.0)
+                act = jnp.ones((e,), jnp.float32) if pt is None else pt
+                if screen is not None:
+                    # Judged on the *shipped* payload norms.
+                    nrm = jnp.sqrt(jnp.sum(vals * vals, axis=1))
+                    act = act * gcomp.screen_from_norms(nrm, act, screen)
+                delta, cnt = gcomp.robust_combine_stacked(
+                    recon.reshape((e,) + u_used.shape), act,
+                    cfg.aggregator, cfg.trim_frac,
+                )
+                wsum = cnt.astype(jnp.float32)
+            else:
+                delta = gcomp.topk_reconstruct(
+                    vals, idx, flat.shape[1]).reshape(u_used.shape)
             out["err"] = err_new
         if delay == 0:
             u = u_used + delta
@@ -432,6 +496,7 @@ def make_problem(
     t0: int | Array | None = None,
     mask: Array | None = None,
     participation: Array | float | None = None,
+    faults: "flt.FaultPlan | Array | None" = None,
 ) -> DCFProblem:
     """Assemble the simulated-engine problem pytree.  See
     ``cf_pca.make_problem`` for the warm-start ``t0`` schedule-resume
@@ -443,8 +508,12 @@ def make_problem(
     equal slots and excluded via a mask-zero plane, and the per-client true
     counts ride along in ``n_cols`` (consensus weights).  ``participation``
     is a (T, E) 0/1 schedule or a Bernoulli rate (see
-    :func:`_resolve_participation`)."""
+    :func:`_resolve_participation`).  ``faults`` is a deterministic
+    :class:`repro.distributed.faults.FaultPlan` (or its (T_f, E) code
+    table) injected at the consensus boundary."""
     validate.check_consensus_cfg(cfg, participation)
+    validate.check_fault_plan(cfg, faults, num_clients)
+    fault_tab = flt.resolve_faults(faults)
     if mask is not None:
         validate.check_mask(mask, m_obs.shape)
         m_obs = (mask * m_obs.astype(jnp.float32)).astype(m_obs.dtype)
@@ -502,7 +571,7 @@ def make_problem(
     return DCFProblem(
         blocks=blocks, u_init=u0, v_init=v0, lam0=lam0,
         t0=jnp.asarray(t0, jnp.int32), mask=mask_blocks,
-        n_cols=n_cols, participation=sched,
+        n_cols=n_cols, participation=sched, faults=fault_tab,
     )
 
 
@@ -517,12 +586,44 @@ def _solve(
     warm: tuple[Array, Array] | None = None,
     mask: Array | None = None,
     participation: Array | float | None = None,
+    faults: Array | None = None,
 ) -> DCFResult:
     solver = make_solver(cfg, with_objective=run.needs_objective)
     problem = make_problem(m_obs, cfg, num_clients, key, warm, mask=mask,
-                           participation=participation)
+                           participation=participation, faults=faults)
     carry, stats = rt.run(solver, problem, cfg.outer_iters, run)
     l, s, u, v = solver.finalize(problem, carry)
+    n = m_obs.shape[1]
+    if l.shape[1] != n:  # ragged: trim the zero-padded tail columns
+        l, s = l[:, :n], s[:, :n]
+    return DCFResult(l=l, s=s, u=u, v=v, stats=stats)
+
+
+def _solve_checkpointed(
+    m_obs: Array,
+    cfg: fz.DCFConfig,
+    num_clients: int,
+    key: Array,
+    *,
+    run: rt.RunConfig,
+    warm: tuple[Array, Array] | None = None,
+    mask: Array | None = None,
+    participation: Array | float | None = None,
+    faults: Array | None = None,
+    checkpoint_dir: str | None = None,
+    resume_from: str | None = None,
+) -> DCFResult:
+    """Host-driven sibling of :func:`_solve` with mid-solve snapshots:
+    the fixed scan runs through :func:`repro.core.runtime.run_segmented`
+    (bit-exact vs the single-scan driver, interruptions included)."""
+    solver = make_solver(cfg, with_objective=run.needs_objective)
+    problem = make_problem(m_obs, cfg, num_clients, key, warm, mask=mask,
+                           participation=participation, faults=faults)
+    carry, stats = rt.run_segmented(
+        solver, problem, cfg.outer_iters, run,
+        checkpoint_dir=checkpoint_dir, resume_from=resume_from,
+    )
+    l, s, u, v = jax.jit(solver.finalize)(problem, carry)
     n = m_obs.shape[1]
     if l.shape[1] != n:  # ragged: trim the zero-padded tail columns
         l, s = l[:, :n], s[:, :n]
@@ -612,10 +713,39 @@ def _registry_make(spec, cfg, run_cfg):
     _rpca.require_cfg_type("dcf", cfg, fz.DCFConfig)
     num_clients = _resolve_num_clients(spec)
     key = _rpca.default_key(spec)
-    fn = _solve_batch if spec.batched else _solve
-    res = fn(spec.m_obs, cfg, num_clients, key, run=run_cfg,
-             warm=spec.warm, mask=spec.mask,
-             participation=spec.participation)
+    # Host-side: inside the jitted solve the code table is a tracer, so
+    # the value-dependent checks (delay x crash/flaky) must run here.
+    validate.check_fault_plan(cfg, spec.faults, num_clients)
+    checkpointed = (spec.checkpoint_dir is not None
+                    or spec.resume_from is not None)
+    if spec.batched:
+        if spec.faults is not None:
+            raise ValueError(
+                "fault injection does not compose with batched solves: "
+                "pass one problem per FaultPlan"
+            )
+        if checkpointed:
+            raise ValueError(
+                "mid-solve checkpointing does not compose with batched "
+                "solves: checkpoint each problem separately"
+            )
+        res = _solve_batch(spec.m_obs, cfg, num_clients, key, run=run_cfg,
+                           warm=spec.warm, mask=spec.mask,
+                           participation=spec.participation)
+    elif checkpointed:
+        res = _solve_checkpointed(
+            spec.m_obs, cfg, num_clients, key, run=run_cfg,
+            warm=spec.warm, mask=spec.mask,
+            participation=spec.participation,
+            faults=flt.resolve_faults(spec.faults),
+            checkpoint_dir=spec.checkpoint_dir,
+            resume_from=spec.resume_from,
+        )
+    else:
+        res = _solve(spec.m_obs, cfg, num_clients, key, run=run_cfg,
+                     warm=spec.warm, mask=spec.mask,
+                     participation=spec.participation,
+                     faults=flt.resolve_faults(spec.faults))
     _record_traffic(cfg, spec.m_obs.shape[-2], num_clients, res.stats)
     return res.l, res.s, res.u, res.v, res.stats
 
@@ -623,12 +753,22 @@ def _registry_make(spec, cfg, run_cfg):
 def _registry_make_sharded(spec, cfg, run_cfg):
     cfg = cfg if cfg is not None else _default_cfg(spec, "dcf_sharded")
     _rpca.require_cfg_type("dcf_sharded", cfg, fz.DCFConfig)
-    res = _solve_sharded(
-        spec.m_obs, cfg, spec.mesh,
-        data_axes=spec.data_axes, model_axis=spec.model_axis,
-        key=spec.key, run=run_cfg, warm=spec.warm, mask=spec.mask,
-        participation=spec.participation,
-    )
+    if spec.checkpoint_dir is not None or spec.resume_from is not None:
+        res = _solve_sharded_checkpointed(
+            spec.m_obs, cfg, spec.mesh,
+            data_axes=spec.data_axes, model_axis=spec.model_axis,
+            key=spec.key, run=run_cfg, warm=spec.warm, mask=spec.mask,
+            participation=spec.participation, faults=spec.faults,
+            checkpoint_dir=spec.checkpoint_dir,
+            resume_from=spec.resume_from,
+        )
+    else:
+        res = _solve_sharded(
+            spec.m_obs, cfg, spec.mesh,
+            data_axes=spec.data_axes, model_axis=spec.model_axis,
+            key=spec.key, run=run_cfg, warm=spec.warm, mask=spec.mask,
+            participation=spec.participation, faults=spec.faults,
+        )
     num_clients = 1
     for a in spec.data_axes:
         num_clients *= spec.mesh.shape[a]
@@ -640,7 +780,8 @@ _rpca.register_solver(
     "dcf",
     _rpca.SolverCaps(supports_mask=True, supports_factors=True,
                      supports_clients=True, supports_participation=True,
-                     batchable=True, needs_rank=True, supports_lowp=True),
+                     batchable=True, needs_rank=True, supports_lowp=True,
+                     supports_robust_agg=True, supports_checkpoint=True),
     _registry_make,
 )
 
@@ -649,7 +790,8 @@ _rpca.register_solver(
     _rpca.SolverCaps(supports_mask=True, supports_factors=True,
                      supports_participation=True, supports_sharding=True,
                      batchable=False, needs_rank=True, supports_lowp=True,
-                     supports_multiprocess=True),
+                     supports_multiprocess=True, supports_robust_agg=True,
+                     supports_checkpoint=True),
     _registry_make_sharded,
 )
 
@@ -664,6 +806,9 @@ def dcf_pca(
     warm: tuple[Array, Array] | None = None,
     mask: Array | None = None,
     participation: Array | float | None = None,
+    faults: "flt.FaultPlan | Array | None" = None,
+    checkpoint_dir: str | None = None,
+    resume_from: str | None = None,
 ) -> DCFResult:
     """Run DCF-PCA with ``num_clients`` simulated clients on one device.
 
@@ -680,7 +825,9 @@ def dcf_pca(
     res = _rpca.solve(
         _rpca.RPCASpec(m_obs, mask=mask, warm=warm, key=key,
                        num_clients=num_clients,
-                       participation=participation),
+                       participation=participation, faults=faults,
+                       checkpoint_dir=checkpoint_dir,
+                       resume_from=resume_from),
         method="dcf", run=run, cfg=cfg,
     )
     return DCFResult(l=res.l, s=res.s, u=res.u, v=res.v, stats=res.stats)
@@ -725,6 +872,10 @@ def _build_sharded(
     warm: tuple[Array, Array] | None = None,
     mask: Array | None = None,
     participation: Array | float | None = None,
+    faults: "flt.FaultPlan | Array | None" = None,
+    segment: tuple[int, int] | None = None,
+    carry: dict | None = None,
+    seg_final: bool = False,
 ):
     """DCF-PCA where each shard along ``data_axes`` is one paper "client".
 
@@ -761,6 +912,7 @@ def _build_sharded(
     delay = cfg.consensus_delay
     wire = compress is not None or bool(delay)
     if wire:
+        from repro.distributed import grad_compress as gcomp
         from repro.distributed.grad_compress import (
             compressed_consensus_sum as gcomp_sum,
         )
@@ -804,6 +956,17 @@ def _build_sharded(
     sched = _resolve_participation(
         participation, cfg.outer_iters, num_clients, key
     )
+    validate.check_fault_plan(cfg, faults, num_clients)
+    fault_tab = flt.resolve_faults(faults)
+    if segment is not None and model_axis is not None:
+        # The segmented carry rides replicated host arrays between calls;
+        # a model-sharded U/err/pending would need per-process shard
+        # reassembly.  Fail eagerly with the workaround spelled out.
+        raise ValueError(
+            "checkpointed (segmented) sharded solves do not compose with "
+            "model_axis row sharding; shard only over data_axes, or solve "
+            "without checkpointing"
+        )
 
     row_spec = model_axis  # None => replicated rows
     m_sharding = NamedSharding(mesh, P(row_spec, data_axes))
@@ -835,11 +998,40 @@ def _build_sharded(
             v_warm = jnp.pad(v_warm, ((0, n_pad - n), (0, 0)))
         t0 = cfg.outer_iters  # resume, don't restart, the schedules
 
-    def solve_body(m_local_full, u, v, w_local, sched_rep):
+    def solve_body(m_local_full, u, v, w_local, sched_rep, fault_rep=None,
+                   seg_extra=None):
         """shard_map body: this shard's (m_loc, n_i) block + its factors.
         ``w_local`` is this shard's mask slice (None when fully observed);
-        ``sched_rep`` the replicated participation schedule (None = all)."""
+        ``sched_rep`` the replicated participation schedule (None = all);
+        ``fault_rep`` the replicated (T_f, E) fault-code table (None =
+        no injection) -- each shard reads its own column; ``seg_extra``
+        the restored non-factor carry leaves in segmented execution."""
         idx = jax.lax.axis_index(data_axes)  # linear client index
+        robust = cfg.aggregator != "weighted_mean"
+        screen = cfg.divergence_screen
+
+        def round_gates(t, u_i, u_prev):
+            """This shard's (payload, consensus-weight, V-advance) for the
+            round: the participation schedule composed with the fault plan
+            at the consensus boundary (DESIGN.md Sec. 17).  Returns
+            ``(u_i, pt, v_keep)`` with ``pt``/``v_keep`` None on the
+            no-schedule, no-fault path."""
+            pt_s = (
+                sched_rep[jnp.mod(t, sched_rep.shape[0]), idx]
+                if sched_rep is not None
+                else jnp.float32(1.0)
+            )
+            if fault_rep is None:
+                if sched_rep is None:
+                    return u_i, None, None
+                return u_i, pt_s, pt_s
+            code = fault_rep[jnp.mod(t, fault_rep.shape[0]), idx]
+            u_i = flt.corrupt_payload(code, u_i, u_prev)
+            # Crash/flaky drop the vote; every fault but a crash ran the
+            # local computation, so V_i advances (a dropped *message* must
+            # not freeze local state).
+            return u_i, pt_s * flt.live_mask(code), \
+                pt_s * flt.v_advance_mask(code)
         if ragged:
             # True column count of this shard: the zero-padding sits at the
             # global tail, so shard i really owns clip(n - i*ni, 0, ni).
@@ -864,30 +1056,23 @@ def _build_sharded(
                 c.u, c.v, m_local_full, cfg=cfg, lam=lam_t, n_frac=n_frac_i,
                 eta=eta, reduce_m=reduce_m, w=w_local,
             )
-            wsum = None
-            if sched_rep is None and not ragged:
-                u_new = jax.lax.pmean(u_i, data_axes)  # Eq. (9) consensus
-            else:
-                # Participation-weighted consensus (Eq. 9 generalized):
-                # U = sum_i p_i n_i U_i / sum_i p_i n_i, one psum of the
-                # pre-scaled factor -- same 2 E m r communication bound.
-                pt = (
-                    sched_rep[jnp.mod(t, sched_rep.shape[0]), idx]
-                    if sched_rep is not None
-                    else jnp.float32(1.0)
-                )
-                u_i = jnp.where(pt > 0, u_i, c.u)  # dropped: no local step
-                raw_w = pt * n_i
-                wsum = jax.lax.psum(raw_w, data_axes)
-                wgt = raw_w / jnp.maximum(wsum, 1e-30)
-                u_cand = jax.lax.psum(wgt * u_i, data_axes)
-                # All-dropout round: keep the previous consensus U; frozen
-                # clients keep their V_i (no decay toward zero weight).
-                u_new = jnp.where(wsum > 0, u_cand, c.u)
-                v_new = jnp.where(pt > 0, v_new, c.v)
+            u_i, pt, v_keep = round_gates(t, u_i, c.u)
+            uniform = pt is None and not ragged
+            # Consensus via the aggregator dispatch (machine-enforced:
+            # RPCA-R006 flags any raw mean/pmean reintroduced here).
+            u_new, wsum = fz.aggregate_sharded(
+                cfg, u_i, c.u, axes=data_axes,
+                pt=jnp.float32(1.0) if pt is None else pt, n_i=n_i,
+                uniform=uniform, reduce_m=reduce_m,
+            )
+            if v_keep is not None:
+                # Dropped / crashed this round: the client's V_i freezes
+                # (no decay toward zero weight).
+                v_new = jnp.where(v_keep > 0, v_new, c.v)
             if not track:
                 obj = jnp.zeros((), jnp.float32)
-            elif diag_i is not None and sched_rep is None:
+            elif (diag_i is not None and sched_rep is None
+                  and fault_rep is None):
                 # Fused epilogue data term (already summed over this
                 # shard's rows; the model axis holds distinct rows, so the
                 # all-axes psum composes it exactly like local_objective).
@@ -948,25 +1133,40 @@ def _build_sharded(
                 u_used, c["v"], m_local_full, cfg=cfg, lam=lam_t,
                 n_frac=n_frac_i, eta=eta, reduce_m=reduce_m, w=w_local,
             )
+            u_i, pt, v_keep = round_gates(tg, u_i, u_used)
             wsum = None
-            pt = None
-            if sched_rep is None and not ragged:
+            if robust:
+                # One unweighted vote per client: the robust combine is
+                # over raw deltas, weights would let one client scale its
+                # own influence.
+                wgt = jnp.float32(1.0)
+                if v_keep is not None:
+                    v_new = jnp.where(v_keep > 0, v_new, c["v"])
+            elif pt is None and not ragged:
                 wgt = jnp.float32(1.0 / num_clients)
             else:
-                pt = (
-                    sched_rep[jnp.mod(tg, sched_rep.shape[0]), idx]
-                    if sched_rep is not None
-                    else jnp.float32(1.0)
-                )
-                u_i = jnp.where(pt > 0, u_i, u_used)
-                v_new = jnp.where(pt > 0, v_new, c["v"])
-                raw_w = pt * n_i
+                ptw = jnp.float32(1.0) if pt is None else pt
+                u_i = jnp.where(ptw > 0, u_i, u_used)
+                if v_keep is not None:
+                    v_new = jnp.where(v_keep > 0, v_new, c["v"])
+                raw_w = ptw * n_i
                 wsum = jax.lax.psum(raw_w, data_axes)
                 wgt = raw_w / jnp.maximum(wsum, 1e-30)
             contrib = (wgt * (u_i - u_used)).astype(jnp.float32)
+            act = jnp.float32(1.0) if pt is None else pt
             out = dict(c)
             if compress is None:
-                delta = jax.lax.psum(contrib, data_axes)
+                if robust or screen is not None:
+                    # Dense robust/screened consensus via the aggregator
+                    # dispatch (RPCA-R006); applied delta-form so the
+                    # delay/pending machinery composes unchanged.
+                    u_cand, wsum = fz.aggregate_sharded(
+                        cfg, u_i, u_used, axes=data_axes, pt=act, n_i=n_i,
+                        uniform=False, reduce_m=reduce_m,
+                    )
+                    delta = (u_cand - u_used).astype(jnp.float32)
+                else:
+                    delta = jax.lax.psum(contrib, data_axes)
             else:
                 # Wire-compact collective: one all-gather of the compact
                 # (k values, k int32 indices) payloads over the data axes
@@ -975,8 +1175,22 @@ def _build_sharded(
                 # identical on every shard (lock-step preserved).  Each
                 # model-axis shard compresses its own row block.
                 k = mh_topk_k(u_used.size, compress.topk_frac)
-                delta, err_new = gcomp_sum(
-                    contrib, data_axes, k, c["err"], active=pt)
+                if robust:
+                    # Same wire format, robust receive: per-client
+                    # reconstructions are combined one-vote instead of
+                    # scatter-summed; a poisoned payload must not poison
+                    # the error-feedback carry forever, so non-finite
+                    # residuals reset to zero.
+                    delta, err_new, cnt = gcomp.compressed_consensus_robust(
+                        contrib, data_axes, k, c["err"], active=act,
+                        aggregator=cfg.aggregator, trim_frac=cfg.trim_frac,
+                        screen=screen, reduce_m=reduce_m,
+                    )
+                    wsum = cnt.astype(jnp.float32)
+                    err_new = jnp.where(jnp.isfinite(err_new), err_new, 0.0)
+                else:
+                    delta, err_new = gcomp_sum(
+                        contrib, data_axes, k, c["err"], active=pt)
                 out["err"] = err_new
             if delay == 0:
                 u_new = u_used + delta
@@ -989,9 +1203,12 @@ def _build_sharded(
                 # application on divergence.  Both scalars are psum/
                 # reduce_m-composed, so every shard agrees and the
                 # collectives stay lock-step.
-                if diag_i is not None:
+                if diag_i is not None and fault_rep is None:
                     scalar = jax.lax.psum(diag_i[1], all_axes)
                 else:
+                    # Fault rounds guard on the *applied* delta energy: the
+                    # fused epilogue measured the uncorrupted local run and
+                    # would never see an injected payload blow-up.
                     scalar = reduce_m(jnp.sum(delta * delta))
                 # Trip on guard-factor growth OR a non-finite scalar (NaN
                 # compares False, so the growth test alone never fires on
@@ -1010,7 +1227,8 @@ def _build_sharded(
                 out["guard"] = scalar
             if not track:
                 obj = jnp.zeros((), jnp.float32)
-            elif diag_i is not None and sched_rep is None:
+            elif (diag_i is not None and sched_rep is None
+                  and fault_rep is None):
                 obj = jax.lax.psum(
                     diag_i[0]
                     + fz.reg_terms(u_new, v_new, cfg.rho, n_frac_i),
@@ -1040,6 +1258,71 @@ def _build_sharded(
             out["diag"] = rt.Diag(obj, resid)
             return out
 
+        if segment is not None:
+            # Checkpoint-segmented execution: scan the [t_start, t_start +
+            # seg_len) slice of the *global* round sequence from a restored
+            # carry -- the per-round math is identical to rt.run's fixed
+            # scan, so segment boundaries never perturb the trajectory.
+            t_start, seg_len = segment
+            if wire:
+                c0 = wire_init((u, v))
+            else:
+                c0 = plain_init((u, v))
+            if seg_extra is not None:
+                dg = rt.Diag(seg_extra["dobj"], seg_extra["dres"])
+                if wire:
+                    for kk in ("err", "pending", "sync", "guard"):
+                        if kk in seg_extra:
+                            c0[kk] = seg_extra[kk]
+                    c0["diag"] = dg
+                else:
+                    c0 = _Carry(u=c0.u, v=c0.v, diag=dg)
+
+            def seg_body(c, t):
+                c = (wire_step if wire else plain_step)((u, v), c, t)
+                return c, (c["diag"] if wire else c.diag)
+
+            carry, diags = jax.lax.scan(
+                seg_body, c0, t_start + jnp.arange(seg_len)
+            )
+            if not seg_final:
+                if wire:
+                    out = dict(carry)
+                    dg = out.pop("diag")
+                else:
+                    out = {"u": carry.u, "v": carry.v}
+                    dg = carry.diag
+                # The carry crosses segments as replicated host arrays:
+                # gather the column-sharded V into its global layout (the
+                # E blocks concatenate in client-index order).
+                from repro.distributed import grad_compress as _gc
+
+                out["v"] = _gc.gather_clients(
+                    out["v"], data_axes
+                ).reshape(n_pad, cfg.rank)
+                if "err" in out:
+                    # The error-feedback residual is *per-client* state
+                    # (each shard drops different top-k coordinates):
+                    # stack it client-major like V so every client's
+                    # residual survives the replicated hand-off.
+                    out["err"] = _gc.gather_clients(
+                        out["err"], data_axes
+                    ).reshape(-1, cfg.rank)
+                out["dobj"] = dg.objective
+                out["dres"] = dg.residual
+                return out, diags.objective, diags.residual
+            if wire:
+                u_fin = (carry["u"] + carry["pending"] if delay
+                         else carry["u"])
+                v_fin = carry["v"]
+            else:
+                u_fin, v_fin = carry.u, carry.v
+            l_blk, s_blk = fz.finalize(
+                u_fin, v_fin, m_local_full, cfg.final_lam(lam), cfg.impl,
+                w=w_local,
+            )
+            return (l_blk, s_blk, u_fin, v_fin, diags.objective,
+                    diags.residual)
         if wire:
             solver = rt.Solver(wire_init, wire_step,
                                lambda p, c: c["diag"], lambda p, c: None)
@@ -1060,15 +1343,39 @@ def _build_sharded(
         )
         return l_blk, s_blk, u_fin, v_fin, stats
 
-    specs_out = (
-        P(row_spec, data_axes),  # L
-        P(row_spec, data_axes),  # S
-        P(row_spec, None),  # U
-        P(data_axes, None),  # V
-        rt.SolveStats(  # replicated telemetry
-            objective=P(None), residual=P(None), rounds=P(), converged=P()
-        ),
-    )
+    if segment is None:
+        specs_out = (
+            P(row_spec, data_axes),  # L
+            P(row_spec, data_axes),  # S
+            P(row_spec, None),  # U
+            P(data_axes, None),  # V
+            rt.SolveStats(  # replicated telemetry
+                objective=P(None), residual=P(None), rounds=P(),
+                converged=P()
+            ),
+        )
+    elif seg_final:
+        specs_out = (
+            P(row_spec, data_axes),  # L
+            P(row_spec, data_axes),  # S
+            P(row_spec, None),  # U
+            P(data_axes, None),  # V
+            P(None),  # segment objective trace
+            P(None),  # segment residual trace
+        )
+    else:
+        # Mid-solve carry: every leaf leaves the mesh replicated (V is
+        # gathered in-body), so each process can lift a full host copy
+        # for the checkpoint writer.
+        carry_specs = {"u": P(None, None), "v": P(None, None),
+                       "dobj": P(), "dres": P()}
+        if compress is not None:
+            carry_specs["err"] = P(None, None)  # gathered client-major
+        if delay:
+            carry_specs["pending"] = P(None, None)
+            carry_specs["sync"] = P()
+            carry_specs["guard"] = P()
+        specs_out = (carry_specs, P(None), P(None))
     # Pack the (static-keyed) operand dict so the mask x warm combinations
     # share one shard_map body; absent keys are simply not in the pytree.
     multiproc = len({d.process_index for d in mesh.devices.flat}) > 1
@@ -1099,6 +1406,42 @@ def _build_sharded(
             sched, NamedSharding(mesh, P(None, None))
         )
         specs["sched"] = P(None, None)
+    if fault_tab is not None:
+        # The fault table is replicated like the schedule: every shard
+        # reads its own column of the same (T_f, E) table, so the round's
+        # fault set agrees mesh-wide and the collectives stay lock-step.
+        args["faults"] = _put(
+            fault_tab, NamedSharding(mesh, P(None, None))
+        )
+        specs["faults"] = P(None, None)
+    seg_keys = ()
+    if carry is not None:
+        # Resume a segmented solve: the factor leaves re-enter through the
+        # ordinary sharded operand slots (U replicated, V column-sliced);
+        # the wire leaves and the last round's diagnostics ride replicated.
+        args["u"] = _put(carry["u"], u_sharding)
+        args["v"] = _put(
+            carry["v"], NamedSharding(mesh, P(data_axes, None))
+        )
+        specs["v"] = P(data_axes, None)
+        rep = NamedSharding(mesh, P(None, None))
+        rep0 = NamedSharding(mesh, P())
+        seg_keys = tuple(
+            k for k in ("err", "pending", "sync", "guard", "dobj", "dres")
+            if k in carry
+        )
+        for k in seg_keys:
+            if k == "err":
+                # Client-major stacked residual: slice each client's
+                # (rows, r) block back onto its own shard.
+                args[k] = _put(
+                    carry[k], NamedSharding(mesh, P(data_axes, None))
+                )
+                specs[k] = P(data_axes, None)
+                continue
+            scalar = jnp.ndim(carry[k]) == 0
+            args[k] = _put(carry[k], rep0 if scalar else rep)
+            specs[k] = P() if scalar else P(None, None)
 
     def solve(packed):
         m_local_full = packed["m"]
@@ -1115,8 +1458,12 @@ def _build_sharded(
                     jnp.result_type(m_local_full.dtype, jnp.float32),
                 ) * scale
             )
+        seg_extra = (
+            {k: packed[k] for k in seg_keys} if seg_keys else None
+        )
         return solve_body(m_local_full, packed["u"], v, packed.get("w"),
-                          packed.get("sched"))
+                          packed.get("sched"), packed.get("faults"),
+                          seg_extra)
 
     fn = shard_map_compat(solve, mesh, (specs,), specs_out)
     return fn, args, n, ragged
@@ -1134,6 +1481,125 @@ def _solve_sharded(
     if ragged:  # trim the zero-padded tail columns / V rows
         l, s, v = l[:, :n], s[:, :n], v[:n]
     return DCFResult(l=l, s=s, u=u, v=v, stats=stats)
+
+
+def _host(x) -> np.ndarray:
+    """Full host copy of a replicated global array -- multi-process safe
+    (``device_get`` would reject non-addressable shards; a replicated
+    array's first addressable shard *is* the full value)."""
+    if isinstance(x, jax.Array) and not x.is_fully_addressable:
+        return np.asarray(x.addressable_data(0))
+    return np.asarray(jax.device_get(x))
+
+
+def _solve_sharded_checkpointed(
+    m_obs: Array,
+    cfg: fz.DCFConfig,
+    mesh: Mesh,
+    *,
+    run: rt.RunConfig | None = None,
+    checkpoint_dir: str | None = None,
+    resume_from: str | None = None,
+    **kwargs,
+) -> DCFResult:
+    """Sharded solve with mid-solve carry snapshots (DESIGN.md Sec. 17).
+
+    The fixed scan is split into host-driven shard_map segments over the
+    global round indices -- bit-exact with :func:`_solve_sharded` -- and
+    after each segment every process holds a full replicated host copy of
+    the solver carry (wire error-feedback residuals, pending stale deltas
+    and guard scalars included); process 0 writes it through
+    ``training.checkpoint``'s atomic-manifest machinery.  ``resume_from``
+    restores the latest snapshot (rejecting a changed mesh shape with a
+    clear error) and finishes the remaining rounds, so a killed worker
+    respawned on the same topology reproduces the uninterrupted solve
+    bit-for-bit.
+    """
+    from repro.training import checkpoint as ckpt
+
+    run_cfg = run or rt.FIXED
+    if run_cfg.mode != "scan":
+        raise ValueError(
+            f"checkpointed solves require run mode 'scan' (the fixed "
+            f"paper schedule); got mode {run_cfg.mode!r}"
+        )
+    mesh_shape = [int(s) for s in np.shape(mesh.devices)]
+    total = cfg.outer_iters
+    t_done = 0
+    carry_host: dict | None = None
+    obuf = np.zeros((0,), np.float32)
+    rbuf = np.zeros((0,), np.float32)
+    if resume_from is not None:
+        step = ckpt.latest_step(resume_from)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {resume_from}")
+        restored, t_done = ckpt.restore(
+            resume_from, _sharded_ckpt_template(cfg), step=step,
+            expect_mesh=mesh_shape,
+        )
+        carry_host = {k: np.asarray(v) for k, v in
+                      restored["carry"].items()}
+        obuf = np.asarray(restored["objective"], np.float32)
+        rbuf = np.asarray(restored["residual"], np.float32)
+        if t_done > total:
+            raise ValueError(
+                f"checkpoint at round {t_done} exceeds this solve's "
+                f"budget of {total} rounds"
+            )
+    plan = rt.segment_plan(total - t_done, run_cfg.checkpoint_every)
+    if not plan:  # resumed at the budget's end: nothing left to run
+        raise ValueError(
+            f"checkpoint already covers all {total} rounds; nothing to "
+            f"resume (finalize needs at least one remaining segment)"
+        )
+    for i, seg in enumerate(plan):
+        final = i == len(plan) - 1
+        fn, args, n, ragged = _build_sharded(
+            m_obs, cfg, mesh, run=run_cfg, segment=(t_done, seg),
+            carry=carry_host, seg_final=final, **kwargs,
+        )
+        out = jax.jit(fn)(args)
+        t_done += seg
+        if final:
+            l, s, u, v = out[:4]
+            obuf = np.concatenate([obuf, _host(out[4])])
+            rbuf = np.concatenate([rbuf, _host(out[5])])
+            break
+        carry_dev, obj_seg, res_seg = out
+        carry_host = {k: _host(x) for k, x in carry_dev.items()}
+        obuf = np.concatenate([obuf, _host(obj_seg)])
+        rbuf = np.concatenate([rbuf, _host(res_seg)])
+        if checkpoint_dir is not None and jax.process_index() == 0:
+            ckpt.save(
+                checkpoint_dir, t_done,
+                {"carry": carry_host, "objective": obuf,
+                 "residual": rbuf},
+                mesh_shape=mesh_shape,
+            )
+    stats = rt.SolveStats(
+        objective=jnp.asarray(obuf),
+        residual=jnp.asarray(rbuf),
+        rounds=jnp.asarray(total, jnp.int32),
+        converged=rt.scan_converged(run_cfg, jnp.asarray(obuf),
+                                    jnp.asarray(rbuf)),
+    )
+    if ragged:  # trim the zero-padded tail columns / V rows
+        l, s, v = l[:, :n], s[:, :n], v[:n]
+    return DCFResult(l=l, s=s, u=u, v=v, stats=stats)
+
+
+def _sharded_ckpt_template(cfg: fz.DCFConfig) -> dict:
+    """Structure template for restoring a sharded segment checkpoint
+    (leaf shapes come from the manifest; only the tree shape matters)."""
+    z = jnp.zeros((), jnp.float32)
+    carry = {"u": z, "v": z, "dobj": z, "dres": z}
+    if cfg.consensus_compress is not None:
+        carry["err"] = z
+    if cfg.consensus_delay:
+        carry["pending"] = z
+        carry["sync"] = z
+        carry["guard"] = z
+    return {"carry": carry, "objective": z, "residual": z}
 
 
 def sharded_solve_hlo(
@@ -1166,6 +1632,9 @@ def dcf_pca_sharded(
     warm: tuple[Array, Array] | None = None,
     mask: Array | None = None,
     participation: Array | float | None = None,
+    faults: "flt.FaultPlan | Array | None" = None,
+    checkpoint_dir: str | None = None,
+    resume_from: str | None = None,
 ) -> DCFResult:
     """SPMD DCF-PCA over ``mesh`` (see :func:`_solve_sharded` for the
     sharding layout and elastic-topology semantics).
@@ -1176,7 +1645,9 @@ def dcf_pca_sharded(
     res = _rpca.solve(
         _rpca.RPCASpec(m_obs, mask=mask, warm=warm, key=key, mesh=mesh,
                        data_axes=data_axes, model_axis=model_axis,
-                       participation=participation),
+                       participation=participation, faults=faults,
+                       checkpoint_dir=checkpoint_dir,
+                       resume_from=resume_from),
         method="dcf_sharded", run=run, cfg=cfg,
     )
     return DCFResult(l=res.l, s=res.s, u=res.u, v=res.v, stats=res.stats)

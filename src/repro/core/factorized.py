@@ -136,6 +136,26 @@ class DCFConfig:
     # to synchronous application.  0 = synchronous (default, bit-exact).
     consensus_delay: int = 0
     stale_guard: float = 4.0
+    # Byzantine-robust consensus (DESIGN.md Sec. 17).  "weighted_mean" is
+    # the PR-3 participation-weighted mean (default; bit-exact with the
+    # pre-robustness engines).  "trimmed_mean" sorts every coordinate
+    # across clients and drops ``floor(trim_frac * E)`` extremes per side
+    # before averaging -- cheap, and optimal when corrupt payloads are
+    # large-but-bounded outliers.  "coordinate_median" takes the
+    # per-coordinate median -- tolerant to any corruption magnitude
+    # (including NaN/inf payloads, which are masked out with one-vote-per-
+    # client semantics) as long as honest clients hold a strict majority.
+    # Robust aggregators are unweighted one-vote-per-client: a median of
+    # column-count-weighted factors has no consistent meaning.
+    aggregator: Literal[
+        "weighted_mean", "trimmed_mean", "coordinate_median"
+    ] = "weighted_mean"
+    trim_frac: float = 0.25
+    # Contribution-divergence screen: quarantine (drop from this round's
+    # consensus) any client whose payload delta norm ``||U_i - U||_F``
+    # exceeds ``divergence_screen`` times the cross-client median norm, or
+    # is non-finite.  ``None`` disables the screen (bit-exact default).
+    divergence_screen: float | None = None
 
     def resolved_lam(self, m: int, n: int) -> float:
         if self.lam is not None:
@@ -313,6 +333,162 @@ def consensus_weights(n_cols: Array | None, part: Array | None,
         raw = raw * part
     wsum = jnp.sum(raw)
     return raw / jnp.maximum(wsum, 1e-30), wsum
+
+
+# ---------------------------------------------------------------------------
+# Consensus aggregator dispatch (DESIGN.md Sec. 17)
+# ---------------------------------------------------------------------------
+# Every consensus-boundary code path in the DCF engines routes through one
+# of the two functions below (machine-enforced by RPCA-R006): they own the
+# weighted-mean / trimmed-mean / coordinate-median dispatch plus the
+# contribution-divergence screen, so a raw ``jnp.mean`` / ``lax.pmean``
+# reintroduced in an engine step would silently bypass Byzantine
+# robustness.  The ``weighted_mean``-no-screen fast paths reproduce the
+# PR-3 consensus op-for-op (bit-exactness is test-pinned).
+
+
+def aggregate_stacked(
+    cfg: DCFConfig,
+    u_i: Array,
+    u_prev: Array,
+    *,
+    n_cols: Array | None = None,
+    part: Array | None = None,
+    num_clients: int,
+) -> tuple[Array, Array | None]:
+    """Consensus over a stacked ``(E, m, r)`` client axis (simulated engine).
+
+    Returns ``(u_new, wsum)``.  ``wsum`` is ``None`` on the unconditional
+    fast path (full participation, no screen, weighted mean) -- callers
+    gate no-op-round handling on ``wsum is not None`` exactly as before;
+    otherwise it is the round's total consensus weight (weighted mean) or
+    the number of surviving one-vote clients (robust aggregators), with
+    ``wsum > 0`` meaning a consensus step actually happened.
+    """
+    e = num_clients
+    robust = cfg.aggregator != "weighted_mean"
+    if not robust and cfg.divergence_screen is None:
+        if part is None:
+            if n_cols is None:
+                # Eq. (9): FedAvg consensus (bit-exact legacy path).
+                return jnp.mean(u_i, axis=0), None
+            w, _ = consensus_weights(n_cols, None, e)
+            return jnp.sum(w[:, None, None] * u_i, axis=0), None
+        # Dropped-out clients are excluded from the round's consensus;
+        # their weight in later rounds is still the full p_i n_i.
+        w, wsum = consensus_weights(n_cols, part, e)
+        u_g = jnp.where(part[:, None, None] > 0, u_i, u_prev)
+        u = jnp.where(
+            wsum > 0, jnp.sum(w[:, None, None] * u_g, axis=0), u_prev
+        )
+        return u, wsum
+    from repro.distributed import grad_compress as gcomp
+
+    active = jnp.ones((e,), jnp.float32) if part is None else part
+    delta = (u_i - u_prev).astype(jnp.float32)
+    if cfg.divergence_screen is not None:
+        active = active * gcomp.divergence_screen_mask(
+            delta, active, cfg.divergence_screen
+        )
+    if robust:
+        # One vote per client: a median/trim of column-count-weighted
+        # factors has no consistent meaning, so ragged ``n_cols`` weights
+        # are deliberately ignored here.
+        agg, cnt = gcomp.robust_combine_stacked(
+            delta, active, cfg.aggregator, cfg.trim_frac
+        )
+        u = jnp.where(cnt > 0, u_prev + agg.astype(u_prev.dtype), u_prev)
+        return u, cnt.astype(jnp.float32)
+    # Screened weighted mean: recompute the PR-3 weights over the clients
+    # that survived the screen.
+    w, wsum = consensus_weights(n_cols, active, e)
+    u_g = jnp.where(active[:, None, None] > 0, u_i, u_prev)
+    u = jnp.where(
+        wsum > 0, jnp.sum(w[:, None, None] * u_g, axis=0), u_prev
+    )
+    return u, wsum
+
+
+def aggregate_sharded(
+    cfg: DCFConfig,
+    u_i: Array,
+    u_prev: Array,
+    *,
+    axes: tuple[str, ...],
+    pt: Array,
+    n_i: Array,
+    uniform: bool,
+    reduce_m=None,
+) -> tuple[Array, Array | None]:
+    """Consensus across mesh shards (SPMD engine); called per shard.
+
+    ``pt`` is this shard's participation weight for the round (1.0 when no
+    schedule), ``n_i`` its true column count (1.0 uniform base when not
+    ragged), ``uniform`` selects the bit-exact ``pmean`` fast path (no
+    schedule, no ragged tail).  ``reduce_m`` psums row-partial scalars over
+    the model axis so screen norms see full rows.  All collectives run
+    unconditionally on every shard (lock-step invariant); the robust paths
+    all-gather the stacked client payloads so every shard computes the
+    identical aggregate.  Returns ``(u_new, wsum)`` with the same ``wsum``
+    contract as :func:`aggregate_stacked`.
+    """
+    robust = cfg.aggregator != "weighted_mean"
+    if reduce_m is None:
+        reduce_m = _identity
+    if not robust and cfg.divergence_screen is None:
+        if uniform:
+            return jax.lax.pmean(u_i, axes), None  # Eq. (9) consensus
+        # Participation-weighted consensus (Eq. 9 generalized):
+        # U = sum_i p_i n_i U_i / sum_i p_i n_i, one psum of the
+        # pre-scaled factor -- same 2 E m r communication bound.
+        u_g = jnp.where(pt > 0, u_i, u_prev)
+        raw_w = pt * n_i
+        wsum = jax.lax.psum(raw_w, axes)
+        wgt = raw_w / jnp.maximum(wsum, 1e-30)
+        u_cand = jax.lax.psum(wgt * u_g, axes)
+        return jnp.where(wsum > 0, u_cand, u_prev), wsum
+    from repro.distributed import grad_compress as gcomp
+
+    one = jnp.ones((), jnp.float32)
+    delta = (u_i - u_prev).astype(jnp.float32)
+    stacked = gcomp.gather_clients(delta, axes)  # (E, m_loc, r)
+    active = gcomp.gather_clients(pt * one, axes)  # (E,)
+    e = stacked.shape[0]
+    # One-vote finiteness is a *global* per-client property: psum the
+    # non-finite counts over the model axis so every row shard agrees on
+    # who is quarantined.
+    bad = reduce_m(
+        jnp.sum((~jnp.isfinite(stacked.reshape(e, -1))).astype(
+            jnp.float32), axis=1)
+    )
+    active = active * (bad == 0).astype(jnp.float32)
+    if cfg.divergence_screen is not None:
+        sq = jnp.sum(stacked.reshape(e, -1) ** 2, axis=1)
+        nrm = jnp.sqrt(reduce_m(sq))
+        active = active * gcomp.screen_from_norms(
+            nrm, active, cfg.divergence_screen
+        )
+    if robust:
+        agg, cnt = gcomp.robust_combine_stacked(
+            stacked, active, cfg.aggregator, cfg.trim_frac
+        )
+        u_new = jnp.where(
+            cnt > 0, u_prev + agg.astype(u_prev.dtype), u_prev
+        )
+        return u_new, cnt.astype(jnp.float32)
+    # Screened weighted mean over the gathered stack (every shard holds
+    # the same stack, so no further collective is needed).
+    n_all = gcomp.gather_clients(n_i * one, axes)
+    raw = active * n_all
+    wsum = jnp.sum(raw)
+    w = raw / jnp.maximum(wsum, 1e-30)
+    step = jnp.sum(
+        w[:, None, None] * jnp.where(active[:, None, None] > 0, stacked,
+                                     0.0),
+        axis=0,
+    )
+    u_new = jnp.where(wsum > 0, u_prev + step.astype(u_prev.dtype), u_prev)
+    return u_new, wsum
 
 
 @dataclass(frozen=True)

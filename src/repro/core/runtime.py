@@ -147,6 +147,11 @@ class RunConfig:
     criterion: Literal["rel_residual", "obj_plateau"] = "rel_residual"
     chunk_size: int = 8
     min_iters: int = 2
+    #: Mid-solve snapshot cadence for :func:`run_segmented` (0 = only the
+    #: implicit final segment; snapshots still require a checkpoint dir).
+    #: Only meaningful in ``scan`` mode -- the segmented driver is
+    #: bit-exact with the single fixed scan.
+    checkpoint_every: int = 0
 
     @property
     def needs_objective(self) -> bool:
@@ -270,6 +275,118 @@ def driver(
         return run(solver, problem, max_iters, run_cfg)
 
     return drive
+
+
+def scan_converged(run_cfg: RunConfig, obuf: Array, rbuf: Array) -> Array:
+    """The fixed-scan convergence verdict from completed diag traces --
+    shared by :func:`_run_scan` and the segmented (checkpointing) drivers
+    so an interrupted+resumed solve reports the identical flag."""
+    last = Diag(obuf[-1], rbuf[-1])
+    prev_obj = obuf[-2] if obuf.shape[0] > 1 else _f32(jnp.inf)
+    return _converged(run_cfg, last, prev_obj)
+
+
+def segment_plan(max_iters: int, checkpoint_every: int) -> list[int]:
+    """Split ``max_iters`` rounds into checkpoint segments.
+
+    ``checkpoint_every <= 0`` means one segment (no mid-solve snapshots);
+    otherwise equal segments of that length with a ragged tail.  At most
+    two distinct lengths, so the jitted segment body compiles at most
+    twice.
+    """
+    if checkpoint_every <= 0 or checkpoint_every >= max_iters:
+        return [max_iters] if max_iters > 0 else []
+    full, tail = divmod(max_iters, checkpoint_every)
+    return [checkpoint_every] * full + ([tail] if tail else [])
+
+
+def run_segmented(
+    solver: Solver,
+    problem: Any,
+    max_iters: int,
+    run_cfg: RunConfig = FIXED,
+    *,
+    checkpoint_dir: str | None = None,
+    resume_from: str | None = None,
+    save_extra: Callable[[int, Any], None] | None = None,
+) -> tuple[Any, SolveStats]:
+    """Checkpointing sibling of :func:`run` (scan mode only): the fixed
+    scan is split into host-driven segments of
+    ``run_cfg.checkpoint_every`` rounds, each a jitted ``lax.scan`` over
+    the *global* round indices -- bit-exact with the single-scan driver,
+    segment boundaries included.
+
+    After every segment the full solver carry plus the diagnostics traces
+    so far are written through ``training.checkpoint``'s atomic-manifest
+    machinery (when ``checkpoint_dir`` is set); ``resume_from`` restores
+    the latest snapshot in that directory and finishes the remaining
+    rounds, reproducing the uninterrupted solve bit-for-bit (the carry is
+    the *entire* solver state: wire error-feedback residuals, pending
+    stale deltas and guard scalars ride along).  ``save_extra(t, carry)``
+    is an optional post-save hook (e.g. process-0 gating upstream).
+    """
+    if run_cfg.mode != "scan":
+        raise ValueError(
+            f"checkpointed solves require run mode 'scan' (the fixed "
+            f"paper schedule); got mode {run_cfg.mode!r}"
+        )
+    from repro.training import checkpoint as ckpt
+
+    @jax.jit
+    def _init(problem):
+        return solver.init(problem)
+
+    def _segment(problem, carry, ts):
+        def body(c, t):
+            c = solver.step(problem, c, t)
+            return c, solver.diagnostics(problem, c)
+
+        return jax.lax.scan(body, carry, ts)
+
+    seg_fn = jax.jit(_segment)
+    t_done = 0
+    obuf = jnp.zeros((0,), jnp.float32)
+    rbuf = jnp.zeros((0,), jnp.float32)
+    carry = _init(problem)
+    if resume_from is not None:
+        # Restore into the cold-start structure: a leaf-count mismatch (a
+        # different solver config) fails with checkpoint.py's clear error
+        # rather than deep inside the scan.  Trace-buffer lengths come
+        # from the manifest, so the zero-length templates are fine.
+        template = {
+            "carry": carry,
+            "objective": jnp.zeros((0,), jnp.float32),
+            "residual": jnp.zeros((0,), jnp.float32),
+        }
+        restored, t_done = ckpt.restore(resume_from, template)
+        carry = restored["carry"]
+        obuf = restored["objective"]
+        rbuf = restored["residual"]
+        if t_done > max_iters:
+            raise ValueError(
+                f"checkpoint at round {t_done} exceeds this solve's "
+                f"budget of {max_iters} rounds"
+            )
+    for seg in segment_plan(max_iters - t_done, run_cfg.checkpoint_every):
+        ts = t_done + jnp.arange(seg)
+        carry, diags = seg_fn(problem, carry, ts)
+        t_done += seg
+        obuf = jnp.concatenate([obuf, _f32(diags.objective)])
+        rbuf = jnp.concatenate([rbuf, _f32(diags.residual)])
+        if checkpoint_dir is not None and t_done < max_iters:
+            ckpt.save(
+                checkpoint_dir, t_done,
+                {"carry": carry, "objective": obuf, "residual": rbuf},
+            )
+            if save_extra is not None:
+                save_extra(t_done, carry)
+    stats = SolveStats(
+        objective=obuf,
+        residual=rbuf,
+        rounds=jnp.asarray(max_iters, jnp.int32),
+        converged=scan_converged(run_cfg, obuf, rbuf),
+    )
+    return carry, stats
 
 
 def _run_scan(solver, problem, carry0, max_iters, run_cfg):

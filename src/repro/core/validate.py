@@ -34,6 +34,28 @@ class QueueFull(CapacityError):
     load-shedding callers catch this and back off / divert."""
 
 
+class SolverDiverged(RuntimeError):
+    """A solve produced non-finite iterates (NaN/inf factors or residual).
+
+    The serving stack's typed quarantine outcome (DESIGN.md Sec. 17):
+    a poisoned tenant's ticket resolves to this exception instead of a
+    NaN-filled response, the slot is freed, and co-resident tenants keep
+    ticking untouched.  Deliberately NOT a ``ValueError`` (the request was
+    well-formed -- its *data* defeated the solver) and NOT a
+    ``CapacityError`` (retrying the same payload diverges again).
+    """
+
+
+def solver_diverged(what: str, rounds: int | None = None) -> SolverDiverged:
+    """Uniform divergence signal for the serving stack."""
+    at = f" after {rounds} rounds" if rounds is not None else ""
+    return SolverDiverged(
+        f"solver diverged on {what}{at}: iterates went non-finite; the "
+        f"slot was quarantined and freed (the input data defeats this "
+        f"solver configuration -- retrying unchanged will diverge again)"
+    )
+
+
 def service_at_capacity(slots: int) -> CapacityError:
     """Uniform at-capacity signal for the slot-table service."""
     return CapacityError(
@@ -211,6 +233,69 @@ def check_consensus_cfg(cfg: Any, participation: Any = None) -> None:
             f"stale_guard must be > 1 (a divergence trip threshold on the "
             f"round's guard scalar), got {cfg.stale_guard}"
         )
+    agg = getattr(cfg, "aggregator", "weighted_mean")
+    if agg not in ("weighted_mean", "trimmed_mean", "coordinate_median"):
+        raise ValueError(
+            f"cfg.aggregator must be 'weighted_mean', 'trimmed_mean' or "
+            f"'coordinate_median', got {agg!r}"
+        )
+    if agg == "trimmed_mean":
+        tf = getattr(cfg, "trim_frac", 0.25)
+        if not 0.0 <= float(tf) < 0.5:
+            raise ValueError(
+                f"trim_frac must be in [0, 0.5) (trimming half or more "
+                f"per side leaves no client to average), got {tf}"
+            )
+    screen = getattr(cfg, "divergence_screen", None)
+    if screen is not None and not float(screen) > 1.0:
+        raise ValueError(
+            f"divergence_screen must be > 1 (a multiple of the median "
+            f"client delta norm), got {screen}"
+        )
+    if screen is not None and cc is not None and agg == "weighted_mean":
+        raise ValueError(
+            "divergence_screen with consensus_compress requires a robust "
+            "(one-vote) aggregator: quarantining a client after the fact "
+            "leaves its weighted error-feedback carry inconsistent -- set "
+            "aggregator='trimmed_mean'/'coordinate_median' or drop the "
+            "compression"
+        )
+
+
+def check_fault_plan(cfg: Any, faults: Any, num_clients: int) -> None:
+    """Fault-injection schedule vs the consensus wire (DESIGN.md Sec. 17).
+
+    The code table must be ``(T_f, E)`` for this topology.  Crash/flaky
+    codes drop a client from the round exactly like a participation
+    dropout, so they inherit the same impossibility: a stale delta from a
+    client that has since crashed has no well-defined consensus weight --
+    ``consensus_delay=1`` is rejected with any drop-style fault in the
+    plan (payload faults compose fine: the guard scalar catches them).
+    """
+    if faults is None:
+        return
+    codes = getattr(faults, "codes", faults)
+    shape = tuple(getattr(codes, "shape", ()))
+    if len(shape) != 2 or shape[1] != num_clients:
+        raise ValueError(
+            f"fault plan codes have shape {shape}, expected "
+            f"(rounds, num_clients={num_clients})"
+        )
+    if getattr(cfg, "consensus_delay", 0):
+        import numpy as _np
+
+        from repro.distributed import faults as _flt
+
+        try:
+            arr = _np.asarray(codes)
+        except Exception:
+            return  # traced table: the host-side entrypoint already ran
+        if bool(((arr == _flt.CRASH) | (arr == _flt.FLAKY)).any()):
+            raise ValueError(
+                "consensus_delay=1 does not compose with crash/flaky "
+                "fault injection: a stale delta from a since-crashed "
+                "client has no well-defined consensus weight"
+            )
 
 
 def check_service_problem(m_obs: Any, m: int, n: int) -> int:

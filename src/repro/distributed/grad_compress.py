@@ -184,14 +184,155 @@ def consensus_compress(
     return (u @ v_mean.T).astype(g_local.dtype)
 
 
+def gather_clients(x: Array, axes) -> Array:
+    """All-gather ``x`` over the (possibly tuple) mesh axes into one
+    stacked ``(E, ...)`` client axis -- identical on every shard, so
+    stacked post-processing (median, trim, screens) stays lock-step."""
+    gathered = jax.lax.all_gather(x, axes)  # (E, ...) -- or nested per axis
+    while gathered.ndim > x.ndim + 1:
+        gathered = gathered.reshape(-1, *x.shape)
+    return gathered
+
+
 def median_aggregate(g: Array, axes) -> Array:
     """Coordinate-wise median over the DP workers: the Byzantine-robust
     fallback for leaves too small to factorize (norm scales, biases).
     Costs one all-gather of a small tensor."""
-    gathered = jax.lax.all_gather(g, axes)  # (E, ...) -- or nested per axis
-    while gathered.ndim > g.ndim + 1:
-        gathered = gathered.reshape(-1, *g.shape)
+    gathered = gather_clients(g, axes)
     return jnp.median(gathered.astype(jnp.float32), axis=0).astype(g.dtype)
+
+
+def robust_combine_stacked(
+    x: Array,  # (E, ...) stacked per-client payloads
+    active: Array | None,  # (E,) 0/1 participation (None = everyone)
+    aggregator: str,
+    trim_frac: float = 0.25,
+) -> tuple[Array, Array]:
+    """Byzantine-robust one-vote combination over a stacked client axis.
+
+    The robust core behind ``DCFConfig.aggregator`` (DESIGN.md Sec. 17),
+    extending :func:`median_aggregate` with participation masking,
+    NaN/inf quarantine and a trimmed-mean variant.  A client with *any*
+    non-finite entry is dropped entirely (one-vote semantics: a poisoned
+    payload must not vote anywhere), inactive clients are masked to
+    ``+inf`` so they sort past every live value, and the order statistics
+    index a traced live count:
+
+    ``coordinate_median``  ``0.5 * (xs[(c-1)//2] + xs[c//2])`` per
+                           coordinate -- bit-exact with ``jnp.median``
+                           when every client is live; tolerant to any
+                           corruption magnitude while honest clients hold
+                           a strict majority.
+    ``trimmed_mean``       drops ``floor(trim_frac * E)`` extremes per
+                           side (a static count) and averages the middle;
+                           falls back to the median when fewer than one
+                           live value would remain.
+
+    Returns ``(agg, count)`` where ``count`` is the number of surviving
+    clients; ``agg`` is zeros when no client survives (callers gate on
+    ``count > 0`` and keep the previous consensus state).
+    """
+    e = x.shape[0]
+    flat = x.reshape(e, -1).astype(jnp.float32)
+    finite = jnp.all(jnp.isfinite(flat), axis=1)
+    keep = finite if active is None else finite & (active > 0)
+    cnt = jnp.sum(keep.astype(jnp.int32))
+    xs = jnp.sort(jnp.where(keep[:, None], flat, jnp.inf), axis=0)
+    c = jnp.maximum(cnt, 1)
+    med = 0.5 * (xs[(c - 1) // 2] + xs[c // 2])
+    if aggregator == "coordinate_median":
+        agg = med
+    elif aggregator == "trimmed_mean":
+        k = int(trim_frac * e)
+        pos = jnp.arange(e)[:, None]
+        take = (pos >= k) & (pos < c - k)
+        tsum = jnp.sum(jnp.where(take, xs, 0.0), axis=0)
+        denom = c - 2 * k
+        agg = jnp.where(denom >= 1, tsum / jnp.maximum(denom, 1), med)
+    else:
+        raise ValueError(f"unknown robust aggregator {aggregator!r}")
+    agg = jnp.where(cnt > 0, agg, 0.0)
+    return agg.reshape(x.shape[1:]), cnt
+
+
+def screen_from_norms(nrm: Array, active: Array,
+                      threshold: float) -> Array:
+    """Contribution-divergence screen from precomputed per-client payload
+    norms: quarantine (return 0) any client whose norm is non-finite or
+    exceeds ``threshold`` times the median norm of the live cohort.
+
+    The median baseline is computed over *active, finite* clients only --
+    a quarantined client must not drag the baseline it is judged against.
+    With every live norm at zero (a converged solve) nothing trips: the
+    comparison floor keeps ``0 <= threshold * eps`` true.
+    """
+    ok = jnp.isfinite(nrm) & (active > 0)
+    cnt = jnp.maximum(jnp.sum(ok.astype(jnp.int32)), 1)
+    med = fz._masked_median(nrm, ok, cnt)
+    keep = jnp.isfinite(nrm) & (nrm <= threshold * jnp.maximum(med, 1e-30))
+    return keep.astype(jnp.float32)
+
+
+def divergence_screen_mask(delta: Array, active: Array,
+                           threshold: float) -> Array:
+    """Screen mask for a stacked ``(E, ...)`` delta payload (the simulated
+    engine's consensus boundary): per-client Frobenius norms fed to
+    :func:`screen_from_norms`."""
+    e = delta.shape[0]
+    nrm = jnp.sqrt(
+        jnp.sum(delta.reshape(e, -1).astype(jnp.float32) ** 2, axis=1)
+    )
+    return screen_from_norms(nrm, active, threshold)
+
+
+def compressed_consensus_robust(
+    contrib: Array,  # this shard's dense (unweighted) delta
+    axes,
+    k: int,
+    err: Array,
+    active: Array | None,
+    aggregator: str,
+    trim_frac: float = 0.25,
+    screen: float | None = None,
+    reduce_m=None,
+) -> tuple[Array, Array, Array]:
+    """Robust-aggregating sibling of :func:`compressed_consensus_sum`.
+
+    Same wire format and error-feedback invariant -- each shard ships the
+    top-k of ``contrib + err`` and one all-gather moves the E payloads --
+    but instead of scatter-adding the concatenated payloads, every shard
+    reconstructs the E *per-client* dense deltas and combines them with
+    :func:`robust_combine_stacked` (optionally after the divergence
+    screen on the shipped norms).  Deterministic and identical across
+    shards, so lock-step is preserved.  Returns
+    ``(delta, err_new, count)``.
+    """
+    g = contrib.astype(jnp.float32) + err
+    vals, idx = topk_sparsify(g, k)
+    err_new = g - topk_reconstruct(vals, idx, g.size).reshape(g.shape)
+    if active is not None:
+        vals = jnp.where(active > 0, vals, jnp.zeros_like(vals))
+        err_new = jnp.where(active > 0, err_new, err)
+    vals_g = gather_clients(vals, axes)  # (E, k)
+    idx_g = gather_clients(idx, axes)
+    e = vals_g.shape[0]
+    recon = jax.vmap(
+        lambda vv, ii: topk_reconstruct(vv, ii, g.size)
+    )(vals_g, idx_g)  # (E, size)
+    act = (gather_clients(jnp.asarray(1.0 if active is None else active,
+                                      jnp.float32) * jnp.ones((),
+                                                              jnp.float32),
+                          axes))
+    if screen is not None:
+        # "Shipped delta norm": judged on what actually crossed the wire.
+        sq = jnp.sum(vals_g * vals_g, axis=1)
+        if reduce_m is not None:
+            sq = reduce_m(sq)
+        act = act * screen_from_norms(jnp.sqrt(sq), act, screen)
+    delta, cnt = robust_combine_stacked(
+        recon.reshape((e,) + g.shape), act, aggregator, trim_frac
+    )
+    return delta.astype(contrib.dtype), err_new, cnt
 
 
 def aggregate_leaf(g: Array, axes, ccfg: CompressConfig, key: Array) -> Array:

@@ -33,6 +33,7 @@ import socket
 import subprocess
 import sys
 import threading
+import time
 
 ENV_COORDINATOR = "RPCA_COORDINATOR"
 ENV_NUM_PROCESSES = "RPCA_NUM_PROCESSES"
@@ -55,7 +56,10 @@ def _force_host_devices(n: int) -> None:
 
 
 def bootstrap(coordinator: str, num_processes: int, process_id: int,
-              local_devices: int = 1) -> None:
+              local_devices: int = 1, *,
+              connect_timeout_s: float = 120.0,
+              connect_attempts: int = 4,
+              backoff_s: float = 0.5) -> None:
     """Join the ``num_processes``-wide JAX distributed runtime.
 
     Must run before the first JAX computation in this process.  On CPU
@@ -63,6 +67,13 @@ def bootstrap(coordinator: str, num_processes: int, process_id: int,
     programs ("Multiprocess computations aren't implemented on the CPU
     backend"), so the gloo implementation is selected first -- that
     config knob is read at backend initialization time.
+
+    Connection setup is fault-tolerant: the coordinator dial gets a
+    bounded ``connect_timeout_s`` (instead of the runtime default) and a
+    failed attempt is retried up to ``connect_attempts`` times with
+    exponential backoff (``backoff_s * 2**attempt`` sleeps) -- a worker
+    that races a still-binding (or restarting) coordinator joins once it
+    comes up rather than dying on the first refused connection.
     """
     if local_devices > 1:
         _force_host_devices(local_devices)
@@ -72,11 +83,32 @@ def bootstrap(coordinator: str, num_processes: int, process_id: int,
         jax.config.update("jax_cpu_collectives_implementation", "gloo")
     except (AttributeError, ValueError):  # pragma: no cover - GPU-only jaxlib
         pass
-    jax.distributed.initialize(
+    kwargs = dict(
         coordinator_address=coordinator,
         num_processes=num_processes,
         process_id=process_id,
     )
+    for attempt in range(max(1, connect_attempts)):
+        try:
+            try:
+                # int(): the underlying pybind client rejects a float
+                # timeout *after* the coordinator service exists.
+                jax.distributed.initialize(
+                    **kwargs,
+                    initialization_timeout=int(connect_timeout_s))
+            except TypeError:  # pragma: no cover - older jaxlib signature
+                jax.distributed.initialize(**kwargs)
+            return
+        except RuntimeError as e:
+            if "only be called once" in str(e):
+                raise  # a live runtime already exists: not retryable
+            if attempt + 1 >= max(1, connect_attempts):
+                raise
+            try:
+                jax.distributed.shutdown()  # clear the failed half-init
+            except Exception:  # pragma: no cover - nothing to clear
+                pass
+            time.sleep(backoff_s * (2 ** attempt))
 
 
 def initialize_from_env() -> bool:
@@ -145,19 +177,17 @@ _mh.initialize_from_env()
 """
 
 
-def launch_workers(code: str, num_processes: int = 2,
-                   devices_per_process: int = 1, timeout: int = 900,
-                   extra_env: dict[str, str] | None = None) -> list[str]:
-    """Run ``code`` in ``num_processes`` fresh Python worker processes.
+#: stderr/stdout markers of a coordinator port-bind loss: ``free_port``
+#: probes a port and closes it before worker 0 re-binds it, so another
+#: process can win the race -- retried with a fresh port, not a flake.
+_BIND_RACE_MARKERS = ("Address already in use", "Failed to bind",
+                     "bind_address")
 
-    Each worker gets the ``RPCA_*`` coordination env, the CPU platform,
-    ``devices_per_process`` forced host devices, and ``src`` on its
-    ``PYTHONPATH``; ``initialize_from_env()`` has already run when
-    ``code`` starts.  Returns each worker's stdout (index = process_id);
-    raises ``RuntimeError`` with the offender's output on any nonzero
-    exit.  This is the CI stand-in for a real multi-host launch -- the
-    collective path exercised is identical, only the transport is local.
-    """
+
+def _launch_once(code: str, num_processes: int, devices_per_process: int,
+                 timeout: int, extra_env: dict[str, str] | None,
+                 kill_after: dict[int, float] | None) -> list[str]:
+    """One worker-cohort launch (see :func:`launch_workers`)."""
     src_dir = os.path.abspath(
         os.path.join(os.path.dirname(__file__), "..", ".."))
     coord = f"127.0.0.1:{free_port()}"
@@ -173,6 +203,7 @@ def launch_workers(code: str, num_processes: int = 2,
         "PYTHONPATH", "")
 
     procs = []
+    timers: list[threading.Timer] = []
     for pid in range(num_processes):
         env = dict(base_env)
         env[ENV_PROCESS_ID] = str(pid)
@@ -181,21 +212,85 @@ def launch_workers(code: str, num_processes: int = 2,
             env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
             text=True,
         ))
+    for pid, delay in (kill_after or {}).items():
+        t = threading.Timer(float(delay), procs[int(pid)].kill)
+        t.daemon = True
+        t.start()
+        timers.append(t)
     outs: list[str] = []
     fail: str | None = None
-    for pid, p in enumerate(procs):
-        try:
-            out, _ = p.communicate(timeout=timeout)
-        except subprocess.TimeoutExpired:
-            for q in procs:
-                q.kill()
-            raise
-        outs.append(out)
-        if p.returncode != 0 and fail is None:
-            fail = f"worker {pid} exited {p.returncode}:\n{out}"
+    try:
+        for pid, p in enumerate(procs):
+            try:
+                out, _ = p.communicate(timeout=timeout)
+            except subprocess.TimeoutExpired:
+                for q in procs:
+                    q.kill()
+                raise
+            outs.append(out)
+            if p.returncode != 0 and fail is None:
+                fail = f"worker {pid} exited {p.returncode}:\n{out}"
+    finally:
+        for t in timers:
+            t.cancel()
     if fail is not None:
         raise RuntimeError(fail)
     return outs
+
+
+def launch_workers(code: str, num_processes: int = 2,
+                   devices_per_process: int = 1, timeout: int = 900,
+                   extra_env: dict[str, str] | None = None, *,
+                   kill_after: dict[int, float] | None = None,
+                   max_restarts: int = 0,
+                   bind_retries: int = 3) -> list[str]:
+    """Run ``code`` in ``num_processes`` fresh Python worker processes.
+
+    Each worker gets the ``RPCA_*`` coordination env, the CPU platform,
+    ``devices_per_process`` forced host devices, and ``src`` on its
+    ``PYTHONPATH``; ``initialize_from_env()`` has already run when
+    ``code`` starts.  Returns each worker's stdout (index = process_id);
+    raises ``RuntimeError`` with the offender's output on any nonzero
+    exit.  This is the CI stand-in for a real multi-host launch -- the
+    collective path exercised is identical, only the transport is local.
+
+    Fault tolerance:
+
+    * **Coordinator bind race.**  ``free_port()`` probes a port and
+      closes it before worker 0 binds it, so another process can grab it
+      in between.  A cohort that fails with a bind-error marker is
+      relaunched on a fresh port (up to ``bind_retries`` times, with
+      backoff) instead of surfacing the race as a flake.
+    * **Deterministic crashes.**  ``kill_after={pid: seconds}`` SIGKILLs
+      the given workers after a fixed delay on the *first* launch -- the
+      chaos hook for crash/recovery tests.  With ``max_restarts > 0`` a
+      failed cohort (killed or crashed) is respawned whole, fresh
+      coordinator port, same ``code``, up to that many times; worker
+      code that resumes from its latest checkpoint turns this into the
+      kill -> respawn -> finish-bit-exact drill.  Kills fire only on the
+      first launch so a restarted cohort runs to completion.
+    """
+    last: Exception | None = None
+    for attempt in range(max_restarts + 1):
+        binds = 0
+        while True:
+            try:
+                return _launch_once(
+                    code, num_processes, devices_per_process, timeout,
+                    extra_env, kill_after if attempt == 0 else None,
+                )
+            except RuntimeError as e:
+                if (any(m in str(e) for m in _BIND_RACE_MARKERS)
+                        and binds < bind_retries):
+                    binds += 1
+                    time.sleep(0.2 * (2 ** (binds - 1)))
+                    continue
+                last = e
+                break
+        if attempt >= max_restarts:
+            break
+    assert last is not None
+    raise last
 
 
 # ---------------------------------------------------------------------------

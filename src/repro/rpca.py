@@ -110,6 +110,16 @@ class RPCASpec:
     data_axes: tuple[str, ...] = ("data",)
     model_axis: str | None = None
     dtype: Any | None = None
+    #: Deterministic fault-injection schedule for the DCF engines: a
+    #: ``distributed.faults.FaultPlan`` or a raw (T_f, E) int32 code table
+    #: (DESIGN.md Sec. 17).  Methods without a consensus boundary reject it.
+    faults: Any | None = None
+    #: Mid-solve checkpointing (DCF engines): ``checkpoint_dir`` enables
+    #: periodic solver-carry snapshots every ``RunConfig.checkpoint_every``
+    #: rounds; ``resume_from`` restores the latest snapshot in that
+    #: directory and finishes the solve bit-exact vs an uninterrupted run.
+    checkpoint_dir: str | None = None
+    resume_from: str | None = None
 
     @property
     def batched(self) -> bool:
@@ -211,6 +221,13 @@ class SolverCaps:
     # and host-side control flow identical on every process.  Only
     # meaningful with supports_sharding.
     supports_multiprocess: bool = False
+    # Has a consensus boundary that supports Byzantine-robust aggregation
+    # (DCFConfig.aggregator / divergence_screen) and deterministic fault
+    # injection (RPCASpec.faults) -- DESIGN.md Sec. 17.
+    supports_robust_agg: bool = False
+    # Supports mid-solve carry snapshots (RPCASpec.checkpoint_dir /
+    # resume_from with RunConfig.checkpoint_every).
+    supports_checkpoint: bool = False
 
 
 @dataclass(frozen=True)
@@ -341,9 +358,32 @@ def _is_lowp(dtype: Any) -> bool:
     return dtype in (jnp.bfloat16, jnp.float16)
 
 
-def _check_caps(entry: SolverEntry, spec: RPCASpec) -> None:
+def _check_caps(entry: SolverEntry, spec: RPCASpec,
+                cfg: Any = None) -> None:
     """Eager feature x method validation with uniform messages."""
     caps = entry.caps
+    # getattr: tests drive this with partial SimpleNamespace specs that
+    # predate the fault/checkpoint fields.
+    if (getattr(spec, "faults", None) is not None
+            and not caps.supports_robust_agg):
+        raise _unsupported(
+            entry.name, "fault injection (no consensus boundary)",
+            "supports_robust_agg",
+        )
+    if cfg is not None and not caps.supports_robust_agg:
+        if (getattr(cfg, "aggregator", "weighted_mean") != "weighted_mean"
+                or getattr(cfg, "divergence_screen", None) is not None):
+            raise _unsupported(
+                entry.name, "robust consensus aggregation",
+                "supports_robust_agg",
+            )
+    if ((getattr(spec, "checkpoint_dir", None) is not None
+         or getattr(spec, "resume_from", None) is not None)
+            and not caps.supports_checkpoint):
+        raise _unsupported(
+            entry.name, "mid-solve checkpoint/resume",
+            "supports_checkpoint",
+        )
     if _is_lowp(spec.m_obs.dtype) and not caps.supports_lowp:
         raise _unsupported(
             entry.name, "low-precision (bf16/f16) data planes",
@@ -479,7 +519,7 @@ def solve(
     if method == "auto":
         method = auto_method(spec, cfg)
     entry = get_solver(method)
-    _check_caps(entry, spec)
+    _check_caps(entry, spec, cfg)
     if compile_policy is not None:
         from repro.core import compile_cache as cc
 

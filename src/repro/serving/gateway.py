@@ -63,7 +63,7 @@ from typing import Any, Callable
 import numpy as np
 
 from repro.core import validate
-from repro.serving.metrics import LatencyWindow, RateMeter
+from repro.serving.metrics import LatencyWindow, OutcomeCounter, RateMeter
 from repro.serving.pages import PagePool
 from repro.serving.rpca_service import (
     RPCAResponse,
@@ -226,8 +226,7 @@ class RPCAGateway:
         self._latency = LatencyWindow(gcfg.latency_window)
         self._round_rate = RateMeter(gcfg.rate_window_s, clock=clock)
         self._submitted = 0
-        self._completed = 0
-        self._shed = 0
+        self._outcomes = OutcomeCounter()
         self._ticks = 0
         self._running = False
         self._task: asyncio.Task | None = None
@@ -306,14 +305,14 @@ class RPCAGateway:
         # not a failed future later.
         method, n_req = svc.validate_submission(m_obs, warm, mask, method)
         if self._queued >= self.gcfg.max_queue:
-            self._shed += 1
+            self._outcomes.add("shed")
             raise validate.gateway_queue_full(
                 self._queued, self.gcfg.max_queue
             )
         try:
             data, data_paged = self._stage(n_req_arr)
         except validate.CapacityError:
-            self._shed += 1
+            self._outcomes.add("shed")
             raise
         mask_h, mask_paged = (None, False)
         if mask is not None:
@@ -322,7 +321,7 @@ class RPCAGateway:
             except validate.CapacityError:
                 if data_paged:
                     self._pool.free(data)
-                self._shed += 1
+                self._outcomes.add("shed")
                 raise
         req = _Request(
             ticket=self._next_ticket,
@@ -433,9 +432,21 @@ class RPCAGateway:
             svc.release(slot)
             del self._in_flight[(width, slot)]
             self._latency.record(self._clock() - req.t_submit)
-            self._completed += 1
-            if not req.future.cancelled():
-                req.future.set_result(resp)
+            if not req.future.cancelled() and resp.diverged:
+                # Quarantined slot: the tenant gets a *typed* failure
+                # (awaiting the ticket raises SolverDiverged) while
+                # the freed slot goes back into rotation -- one
+                # poisoned plane never fails the lane.
+                self._outcomes.add("diverged")
+                req.future.set_exception(validate.solver_diverged(
+                    f"gateway ticket {req.ticket} "
+                    f"({req.method}@{width})",
+                    rounds=resp.rounds,
+                ))
+            else:
+                self._outcomes.add("ok")
+                if not req.future.cancelled():
+                    req.future.set_result(resp)
             done += 1
         return done
 
@@ -596,8 +607,7 @@ class RPCAGateway:
             "latency": self._latency.summary(),
             "submitted": self._submitted,
             "admitted": len(self.admissions),
-            "completed": self._completed,
-            "shed": self._shed,
+            **self._outcomes.summary(),
             "ticks": self._ticks,
         }
 

@@ -10,8 +10,13 @@ Small, dependency-free collectors the gateway composes into its
                    timestamped increments, rate over a sliding horizon
                    so idle gaps decay instead of averaging over the
                    process lifetime.
+``OutcomeCounter`` typed terminal-outcome tally (ok / diverged / shed,
+                   DESIGN.md Sec. 17) -- a closed vocabulary so a typo'd
+                   outcome is a crash at the increment site, not a
+                   silently separate time series on the dashboard.
 
-Both take an injectable ``clock`` so tests pin time deterministically.
+The time-based collectors take an injectable ``clock`` so tests pin
+time deterministically.
 """
 from __future__ import annotations
 
@@ -21,7 +26,7 @@ from typing import Callable
 
 import numpy as np
 
-__all__ = ["LatencyWindow", "RateMeter"]
+__all__ = ["LatencyWindow", "OutcomeCounter", "RateMeter"]
 
 
 class LatencyWindow:
@@ -50,6 +55,42 @@ class LatencyWindow:
             "p50_ms": float(np.percentile(arr, 50)),
             "p99_ms": float(np.percentile(arr, 99)),
             "max_ms": float(arr.max()),
+        }
+
+
+class OutcomeCounter:
+    """Tally of terminal ticket outcomes over a fixed vocabulary.
+
+    ``completed`` counts every ticket that reached a terminal state
+    through the solver (``ok`` + ``diverged``); ``shed`` tickets never
+    ran, so they are tallied but excluded from ``completed``.
+    """
+
+    KINDS = ("ok", "diverged", "shed")
+
+    def __init__(self):
+        self._counts = {k: 0 for k in self.KINDS}
+
+    def add(self, kind: str) -> None:
+        if kind not in self._counts:
+            raise ValueError(
+                f"unknown outcome {kind!r}; expected one of {self.KINDS}")
+        self._counts[kind] += 1
+
+    def __getitem__(self, kind: str) -> int:
+        return self._counts[kind]
+
+    @property
+    def completed(self) -> int:
+        return self._counts["ok"] + self._counts["diverged"]
+
+    def summary(self) -> dict:
+        """``{"completed", "diverged", "shed"}`` -- the gateway splices
+        this straight into its ``metrics()`` surface."""
+        return {
+            "completed": self.completed,
+            "diverged": self._counts["diverged"],
+            "shed": self._counts["shed"],
         }
 
 

@@ -97,6 +97,13 @@ class RPCAResponse(NamedTuple):
     rounds: int  # solver rounds actually spent
     converged: bool  # met the tolerance (False => ran out of max_rounds)
     method: str = "cf"  # which registered solver ran this slot
+    #: The slot's residual went non-finite mid-solve (poisoned input or a
+    #: numerically divergent iterate): the slot was quarantined -- frozen
+    #: and marked done -- at that round so its NaNs never touch the other
+    #: tenants' lock-step planes.  ``l``/``s`` are whatever the iterate
+    #: held (typically non-finite); the gateway maps this to a typed
+    #: :class:`~repro.core.validate.SolverDiverged` failure.
+    diverged: bool = False
 
 
 class _Lane:
@@ -115,33 +122,43 @@ class _Lane:
         step_b = jax.vmap(self.solver.step, in_axes=(0, 0, 0))
         diag_b = jax.vmap(self.solver.diagnostics)
 
-        def tick(problems, carry, t, done, rounds, hit, lane_active):
+        def tick(problems, carry, t, done, rounds, hit, dived, lane_active):
             """rounds_per_tick lock-step rounds with per-slot freeze.
 
             ``lane_active`` masks this lane's occupied slots; slots owned
             by other lanes (or free) never advance, so the global per-slot
             counters can be shared across lanes.
+
+            A slot whose residual goes non-finite is *quarantined*: it is
+            marked done (and ``dived``) at that round, so its frozen NaN
+            carry stops advancing and -- because every per-slot update is
+            already masked by ``adv`` -- never leaks into a neighbor's
+            plane.  The lane keeps ticking for everyone else.
             """
 
             def body(st, _):
-                carry, t, done, rounds, hit = st
+                carry, t, done, rounds, hit, dived = st
                 adv = lane_active & ~done
                 carry = rt.tree_where(adv, step_b(problems, carry, t), carry)
                 d = diag_b(problems, carry)
                 t = t + adv.astype(jnp.int32)
                 rounds = rounds + adv.astype(jnp.int32)
+                bad = adv & ~jnp.isfinite(d.residual)
                 hit_now = (d.residual <= scfg.tol) & (
                     rounds >= scfg.min_rounds
                 )
                 hit = hit | (adv & hit_now)
-                done = done | (adv & (hit_now | (rounds >= scfg.max_rounds)))
-                return (carry, t, done, rounds, hit), None
+                dived = dived | bad
+                done = done | bad | (
+                    adv & (hit_now | (rounds >= scfg.max_rounds))
+                )
+                return (carry, t, done, rounds, hit, dived), None
 
-            (carry, t, done, rounds, hit), _ = jax.lax.scan(
-                body, (carry, t, done, rounds, hit), None,
+            (carry, t, done, rounds, hit, dived), _ = jax.lax.scan(
+                body, (carry, t, done, rounds, hit, dived), None,
                 length=scfg.rounds_per_tick,
             )
-            return carry, t, done, rounds, hit
+            return carry, t, done, rounds, hit, dived
 
         # Donate the per-tick state (carry + slot counters): every tick
         # consumes the previous tick's buffers, so XLA reuses them in place
@@ -161,9 +178,9 @@ class _Lane:
 
         self._tick = cache.get(
             ("service_tick", method, cfg, scfg, m, n),
-            lambda: jax.jit(tick, donate_argnums=(1, 2, 3, 4, 5)).lower(
+            lambda: jax.jit(tick, donate_argnums=(1, 2, 3, 4, 5, 6)).lower(
                 self.problems, self.carry, _z(jnp.int32), _z(bool),
-                _z(jnp.int32), _z(bool), _z(bool),
+                _z(jnp.int32), _z(bool), _z(bool), _z(bool),
             ).compile(),
             cc.AOT,
         )
@@ -236,6 +253,7 @@ class RPCAService:
         self._rounds = jnp.zeros((b,), jnp.int32)
         self._done = jnp.zeros((b,), bool)
         self._hit = jnp.zeros((b,), bool)  # met the tolerance (vs budget-out)
+        self._dived = jnp.zeros((b,), bool)  # quarantined: non-finite residual
         self._active = np.zeros((b,), bool)  # host-side slot occupancy
         self._slot_n = np.full((b,), n, np.int64)  # true width per slot
         self._slot_method = [method] * b  # lane owning each slot
@@ -410,6 +428,7 @@ class RPCAService:
         self._rounds = self._rounds.at[slot].set(0)
         self._done = self._done.at[slot].set(False)
         self._hit = self._hit.at[slot].set(False)
+        self._dived = self._dived.at[slot].set(False)
         self._active[slot] = True
         return slot
 
@@ -453,9 +472,10 @@ class RPCAService:
             if not lane_active.any():  # host-side skip: no device sync
                 continue
             (lane.carry, self._t, self._done, self._rounds,
-             self._hit) = lane._tick(
+             self._hit, self._dived) = lane._tick(
                 lane.problems, lane.carry, self._t, self._done,
-                self._rounds, self._hit, jnp.asarray(lane_active),
+                self._rounds, self._hit, self._dived,
+                jnp.asarray(lane_active),
             )
 
     def poll(self, slot: int) -> RPCAResponse | None:
@@ -476,11 +496,21 @@ class RPCAService:
             l, s = l[:, :n_req], s[:, :n_req]
             if v is not None:
                 v = v[:n_req]
+        dived = bool(np.asarray(self._dived)[slot])
+        if dived:
+            # A quarantined tenant's calibration entry is suspect (the
+            # same plane would diverge again): evict it now instead of
+            # letting a warm refresh of poisoned data hit the cache.
+            fp = self._slot_lam_fp[slot]
+            self._slot_lam_fp[slot] = None
+            if fp is not None:
+                self._lam_cache.pop(fp, None)
         return RPCAResponse(
             l=l, s=s, u=u, v=v,
             rounds=int(rounds[slot]),
             converged=bool(np.asarray(self._hit)[slot]),
             method=lane.method,
+            diverged=dived,
         )
 
     def release(self, slot: int) -> None:
@@ -524,6 +554,9 @@ class RPCAService:
             "slots": int(self.scfg.slots),
             "active": int(self._active.sum()),
             "pending": self.pending(),
+            # occupied slots currently quarantined with a non-finite
+            # residual (freed on release like any other finished slot).
+            "diverged": int((self._active & np.asarray(self._dived)).sum()),
             # per-lane occupancy over the shared slot table; release()
             # decrements the owning lane's count.
             "lanes": {

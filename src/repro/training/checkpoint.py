@@ -98,11 +98,18 @@ def latest_step(ckpt_dir: str) -> int | None:
 
 
 def restore(ckpt_dir: str, tree_like, *, step: int | None = None,
-            shardings=None):
+            shardings=None, expect_mesh=None):
     """Restore into the structure of ``tree_like``.
 
     ``shardings``: optional matching tree of NamedShardings -- pass the
     *new* mesh's shardings to restore elastically onto a different mesh.
+
+    ``expect_mesh``: optional mesh-shape pin for *mid-solve* carries: a
+    solver carry is only meaningful on the topology that produced it (the
+    per-shard column blocks, participation columns and wire residuals are
+    mesh-indexed), so pass the resuming mesh's shape to reject a
+    checkpoint written on a different one with a clear error.  Model
+    weights restore elastically -- leave it ``None`` there.
     """
     if step is None:
         step = latest_step(ckpt_dir)
@@ -111,6 +118,16 @@ def restore(ckpt_dir: str, tree_like, *, step: int | None = None,
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
+    if expect_mesh is not None:
+        want = list(expect_mesh)
+        got = manifest.get("mesh")
+        if got != want:
+            raise ValueError(
+                f"checkpoint at {d} was written on mesh {got}, but this "
+                f"solve runs on mesh {want}: a mid-solve carry cannot "
+                f"restore across topologies (re-run from scratch, or "
+                f"resume on the original mesh)"
+            )
     with np.load(os.path.join(d, "arrays.npz")) as z:
         host = []
         for i in range(len(z.files)):

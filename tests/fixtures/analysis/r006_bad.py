@@ -1,0 +1,17 @@
+"""R006 bad fixture: solver steps hand-rolling the consensus combine."""
+import jax
+import jax.numpy as jnp
+
+
+def plain_step(problem, c, t):
+    u_i = c.u + 1.0
+    u_new = jnp.mean(u_i, axis=0)  # EXPECT: RPCA-R006
+    return c._replace(u=u_new)
+
+
+def wire_step(problem, c, t):
+    u_i = c["u"] * 2.0
+    v_i = c["v"]
+    u_new = jax.lax.pmean(u_i, "data")  # EXPECT: RPCA-R006
+    v_new = jax.lax.psum(v_i, ("data",))  # EXPECT: RPCA-R006
+    return dict(c, u=u_new, v=v_new)

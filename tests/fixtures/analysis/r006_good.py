@@ -1,0 +1,30 @@
+"""R006 good fixture: consensus boundaries routed through the dispatch,
+plus every shape the rule must NOT flag."""
+import jax
+import jax.numpy as jnp
+
+from repro.core import factorized as fz
+
+
+def plain_step(cfg, problem, c, t):
+    u_i = c.u + 1.0
+    # the blessed boundary: dispatch honors cfg.aggregator / screen
+    u_new, wsum = fz.aggregate_stacked(cfg, u_i, c.u, num_clients=8)
+    # scalar participation vote: first arg is not a factor payload
+    live = jax.lax.psum(1.0, "clients")
+    # weight reduction: "raw_w" is not a u/v-named payload
+    wsum2 = jax.lax.psum(c.raw_w, "data")
+    return c._replace(u=u_new, w=wsum * live * wsum2)
+
+
+def wire_step(cfg, c, t):
+    u_i = c["u"] * 2.0
+    contrib = (u_i - c["u"]).astype(jnp.float32)
+    # delta-form wire ships contributions, not factor stacks
+    delta = jax.lax.psum(contrib, ("data",))
+    return dict(c, u=c["u"] + delta)
+
+
+def finalize(u_i):
+    # not a step function: setup/epilogue means are out of scope
+    return jnp.mean(u_i, axis=0)

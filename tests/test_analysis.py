@@ -16,7 +16,8 @@ from tools.analysis.rules import RULES_BY_ID
 
 REPO = Path(__file__).resolve().parents[1]
 FIXTURES = REPO / "tests" / "fixtures" / "analysis"
-RULE_IDS = ("RPCA-R001", "RPCA-R002", "RPCA-R003", "RPCA-R004", "RPCA-R005")
+RULE_IDS = ("RPCA-R001", "RPCA-R002", "RPCA-R003", "RPCA-R004", "RPCA-R005",
+            "RPCA-R006")
 
 
 def expected_findings(path: Path) -> set[tuple[str, int]]:
@@ -133,6 +134,28 @@ def test_seeded_donation_violation_in_dcf(tmp_path):
     new, _ = analyze([scratch], ALL_RULES, Baseline([]))
     hits = [(f.rule, f.line) for f in new]
     assert ("RPCA-R002", read_line) in hits, hits
+
+
+def test_seeded_consensus_violation_in_dcf(tmp_path):
+    """Reintroducing a raw consensus mean over a factor stack inside a
+    solver step of dcf_pca.py must produce RPCA-R006 at that line."""
+    lines = _clean_scratch(tmp_path)
+    inject = [
+        "",
+        "",
+        "def _seeded_step(problem, c, t):",
+        "    u_i = c.u + 1.0",
+        "    u_new = jnp.mean(u_i, axis=0)",
+        "    return c._replace(u=u_new)",
+    ]
+    seeded = lines + inject
+    scratch = tmp_path / "dcf_pca_seeded.py"
+    scratch.write_text("\n".join(seeded))
+    mean_line = len(lines) + 5  # the raw jnp.mean line, 1-based
+
+    new, _ = analyze([scratch], ALL_RULES, Baseline([]))
+    hits = [(f.rule, f.line) for f in new]
+    assert ("RPCA-R006", mean_line) in hits, hits
 
 
 def test_unseeded_scratch_copy_is_clean(tmp_path):

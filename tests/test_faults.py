@@ -1,0 +1,414 @@
+"""Fault-tolerant DCF (DESIGN.md Sec. 17): deterministic fault plans,
+Byzantine-robust consensus, mid-solve checkpoint/resume, and serving
+quarantine.  Every chaos scenario here is seed-keyed -- same seed, same
+faults, same bits -- so a failure is a regression, never a flake.
+"""
+import asyncio
+import dataclasses
+import importlib
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import rpca
+from repro.core import generate_problem, relative_error
+from repro.core import runtime as rt
+from repro.core.factorized import DCFConfig
+from repro.core.validate import SolverDiverged
+from repro.distributed import faults as flt
+from repro.distributed.grad_compress import CompressConfig
+from repro.serving.gateway import GatewayConfig, RPCAGateway
+from repro.serving.rpca_service import RPCAService, RPCAServiceConfig
+from repro.training import checkpoint as ckpt
+
+# repro.core re-exports the dcf_pca *function*, shadowing the module name
+dp = importlib.import_module("repro.core.dcf_pca")
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: deterministic, validated
+# ---------------------------------------------------------------------------
+def test_fault_plan_random_is_seed_deterministic():
+    rates = {"crash": 0.1, "nan": 0.05, "stale": 0.1}
+    a = flt.FaultPlan.random(7, rounds=40, num_clients=8, rates=rates)
+    b = flt.FaultPlan.random(7, rounds=40, num_clients=8, rates=rates)
+    np.testing.assert_array_equal(a.codes, b.codes)
+    c = flt.FaultPlan.random(8, rounds=40, num_clients=8, rates=rates)
+    assert not np.array_equal(a.codes, c.codes)
+    # every round keeps at least one live (non-crash/flaky) vote
+    live = (a.codes != flt.CRASH) & (a.codes != flt.FLAKY)
+    assert live.any(axis=1).all()
+    assert "seed=7" in a.describe()
+
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError, match="rounds, num_clients"):
+        flt.FaultPlan(np.zeros((4,), np.int32))
+    with pytest.raises(ValueError, match="unknown fault codes"):
+        flt.FaultPlan(np.full((2, 2), 9, np.int32))
+    with pytest.raises(ValueError, match="kind"):
+        flt.FaultPlan.byzantine(10, 4, (0,), kind="ok")
+    with pytest.raises(ValueError, match="out of range"):
+        flt.FaultPlan.byzantine(10, 4, (4,), kind="nan")
+    with pytest.raises(ValueError, match="probabilities"):
+        flt.FaultPlan.random(0, 4, 4, rates={"crash": 0.9, "nan": 0.6})
+
+
+def test_fault_plan_none_recovers_like_no_faults():
+    """An all-OK plan disables the uniform fast path but must stay a
+    faithful consensus: recovery matches the plain solve to fp tolerance."""
+    p = generate_problem(jax.random.PRNGKey(0), 64, 64, rank=3,
+                         sparsity=0.05)
+    cfg = DCFConfig.tuned(3, outer_iters=40)
+    r0 = dp.dcf_pca(p.m_obs, cfg, num_clients=4)
+    r1 = dp.dcf_pca(p.m_obs, cfg, num_clients=4,
+                    faults=flt.FaultPlan.none(40, 4))
+    np.testing.assert_allclose(np.asarray(r1.l), np.asarray(r0.l),
+                               rtol=0, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Byzantine-robust consensus (the PR's acceptance scenario)
+# ---------------------------------------------------------------------------
+@pytest.mark.sanitizer_incompatible("injects NaN payloads by design")
+def test_byzantine_nan_coordinate_median_recovers():
+    """E=8 with 2 permanently-Byzantine NaN clients: weighted_mean is
+    destroyed (proof the injection reaches the wire) while
+    coordinate_median recovers to <= 3x the fault-free error."""
+    p = generate_problem(jax.random.PRNGKey(42), 128, 128, rank=5,
+                         sparsity=0.05)
+    cfg = DCFConfig.tuned(5, outer_iters=60)
+    base = dp.dcf_pca(p.m_obs, cfg, num_clients=8)
+    e0 = float(relative_error(base.l, base.s, p.l0, p.s0))
+
+    plan = flt.FaultPlan.byzantine(60, 8, (1, 5), kind="nan")
+    wrecked = dp.dcf_pca(p.m_obs, cfg, num_clients=8, faults=plan)
+    assert not np.isfinite(np.asarray(wrecked.l)).all()
+
+    robust = dataclasses.replace(cfg, aggregator="coordinate_median")
+    r = dp.dcf_pca(p.m_obs, robust, num_clients=8, faults=plan)
+    e1 = float(relative_error(r.l, r.s, p.l0, p.s0))
+    assert np.isfinite(e1) and e1 <= 3.0 * max(e0, 1e-6), (e0, e1)
+
+
+def test_byzantine_corrupt_trimmed_mean_recovers():
+    """Gross-but-finite 64x corruption: trimmed_mean drops the extremes
+    and recovers; the plain mean visibly does not."""
+    p = generate_problem(jax.random.PRNGKey(2), 96, 96, rank=4,
+                         sparsity=0.05)
+    cfg = DCFConfig.tuned(4, outer_iters=60)
+    base = dp.dcf_pca(p.m_obs, cfg, num_clients=8)
+    e0 = float(relative_error(base.l, base.s, p.l0, p.s0))
+
+    plan = flt.FaultPlan.byzantine(60, 8, (2,), kind="corrupt")
+    wrecked = dp.dcf_pca(p.m_obs, cfg, num_clients=8, faults=plan)
+    ew = float(relative_error(wrecked.l, wrecked.s, p.l0, p.s0))
+
+    robust = dataclasses.replace(cfg, trim_frac=0.25,
+                                 aggregator="trimmed_mean")
+    r = dp.dcf_pca(p.m_obs, robust, num_clients=8, faults=plan)
+    e1 = float(relative_error(r.l, r.s, p.l0, p.s0))
+    assert e1 <= 3.0 * max(e0, 1e-6), (e0, e1)
+    assert not np.isfinite(ew) or ew > 10 * e1, (ew, e1)
+
+
+def test_divergence_screen_quarantines_exploding_client():
+    """weighted_mean + divergence_screen: the corrupt client's delta is
+    quarantined by the median-norm screen instead of poisoning the mean."""
+    p = generate_problem(jax.random.PRNGKey(3), 96, 96, rank=4,
+                         sparsity=0.05)
+    cfg = DCFConfig.tuned(4, outer_iters=60)
+    base = dp.dcf_pca(p.m_obs, cfg, num_clients=8)
+    e0 = float(relative_error(base.l, base.s, p.l0, p.s0))
+
+    plan = flt.FaultPlan.byzantine(60, 8, (6,), kind="corrupt")
+    screened = dataclasses.replace(cfg, divergence_screen=4.0)
+    r = dp.dcf_pca(p.m_obs, screened, num_clients=8, faults=plan)
+    e1 = float(relative_error(r.l, r.s, p.l0, p.s0))
+    assert np.isfinite(e1) and e1 <= 3.0 * max(e0, 1e-6), (e0, e1)
+
+
+def test_weighted_mean_aggregator_is_bitexact_default():
+    """aggregator='weighted_mean' (the default) must keep the literal
+    PR-3 mean fast path: spelling it explicitly changes no bits."""
+    p = generate_problem(jax.random.PRNGKey(4), 64, 64, rank=3,
+                         sparsity=0.05)
+    cfg = DCFConfig.tuned(3, outer_iters=30)
+    explicit = dataclasses.replace(cfg, aggregator="weighted_mean")
+    r0 = dp.dcf_pca(p.m_obs, cfg, num_clients=4)
+    r1 = dp.dcf_pca(p.m_obs, explicit, num_clients=4)
+    assert np.asarray(r0.l).tobytes() == np.asarray(r1.l).tobytes()
+    assert np.asarray(r0.v).tobytes() == np.asarray(r1.v).tobytes()
+
+
+def test_robust_agg_composes_with_wire_and_participation():
+    """trimmed_mean x top-k compression x participation schedule x
+    crash/stale faults: the composed solve stays finite and useful."""
+    p = generate_problem(jax.random.PRNGKey(5), 96, 96, rank=4,
+                         sparsity=0.05)
+    cfg = dataclasses.replace(
+        DCFConfig.tuned(4, outer_iters=80),
+        aggregator="trimmed_mean", trim_frac=0.25,
+        consensus_compress=CompressConfig(topk_frac=0.5),
+    )
+    rng = np.random.default_rng(0)
+    part = (rng.random((80, 8)) < 0.9).astype(np.float32)
+    part[:, 0] = 1.0  # keep one always-on client
+    plan = flt.FaultPlan.random(
+        11, 80, 8, rates={"crash": 0.05, "stale": 0.1, "corrupt": 0.05})
+    r = dp.dcf_pca(p.m_obs, cfg, num_clients=8, participation=part,
+                   faults=plan, key=jax.random.PRNGKey(6))
+    e = float(relative_error(r.l, r.s, p.l0, p.s0))
+    assert np.isfinite(e) and e < 0.5, e
+
+
+# ---------------------------------------------------------------------------
+# Eager validation: impossible combinations fail at the front door
+# ---------------------------------------------------------------------------
+def _m():
+    return generate_problem(jax.random.PRNGKey(9), 32, 32, rank=2,
+                            sparsity=0.05).m_obs
+
+
+def test_validate_rejects_bad_aggregator_knobs():
+    m = _m()
+    with pytest.raises(ValueError, match="aggregator"):
+        dp.dcf_pca(m, dataclasses.replace(DCFConfig.tuned(2),
+                                          aggregator="mode"),
+                   num_clients=4)
+    with pytest.raises(ValueError, match="trim_frac"):
+        dp.dcf_pca(m, dataclasses.replace(DCFConfig.tuned(2),
+                                          aggregator="trimmed_mean",
+                                          trim_frac=0.5),
+                   num_clients=4)
+    with pytest.raises(ValueError, match="divergence_screen"):
+        dp.dcf_pca(m, dataclasses.replace(DCFConfig.tuned(2),
+                                          divergence_screen=1.0),
+                   num_clients=4)
+    # screen + compressed wire + weighted mean: the quarantined client's
+    # weighted error-feedback carry would go inconsistent
+    with pytest.raises(ValueError, match="one-vote"):
+        dp.dcf_pca(m, dataclasses.replace(
+            DCFConfig.tuned(2), divergence_screen=3.0,
+            consensus_compress=CompressConfig(topk_frac=0.5)),
+            num_clients=4)
+
+
+def test_validate_rejects_bad_fault_plans():
+    m = _m()
+    cfg = DCFConfig.tuned(2, outer_iters=10)
+    with pytest.raises(ValueError, match="fault plan"):
+        dp.dcf_pca(m, cfg, num_clients=4,
+                   faults=flt.FaultPlan.none(10, 5))  # E mismatch
+    delay = dataclasses.replace(cfg, consensus_delay=1)
+    with pytest.raises(ValueError, match="crash/flaky"):
+        dp.dcf_pca(m, delay, num_clients=4,
+                   faults=flt.FaultPlan.byzantine(10, 4, (1,),
+                                                  kind="crash"))
+
+
+def test_capability_gates_for_faults_and_checkpoint(tmp_path):
+    m = _m()
+    with pytest.raises(ValueError, match="fault injection"):
+        rpca.solve(rpca.RPCASpec(m, faults=flt.FaultPlan.none(10, 4)),
+                   method="ialm")
+    with pytest.raises(ValueError, match="checkpoint"):
+        rpca.solve(rpca.RPCASpec(m, checkpoint_dir=str(tmp_path)),
+                   method="ialm")
+    with pytest.raises(ValueError, match="robust consensus"):
+        rpca.solve(rpca.RPCASpec(m),
+                   method="ialm",
+                   cfg=dataclasses.replace(DCFConfig.tuned(2),
+                                           aggregator="trimmed_mean"))
+    batch = jnp.stack([m, m])
+    with pytest.raises(ValueError, match="batched"):
+        dp.dcf_pca(batch, DCFConfig.tuned(2), num_clients=4,
+                   faults=flt.FaultPlan.none(10, 4))
+    with pytest.raises(ValueError, match="batched"):
+        dp.dcf_pca(batch, DCFConfig.tuned(2), num_clients=4,
+                   checkpoint_dir=str(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# Mid-solve checkpoint/resume (simulated engine; the sharded twin lives in
+# test_multidevice.py and the process-kill drill in test_multihost.py)
+# ---------------------------------------------------------------------------
+def _kill_after_first_snapshot(d: str) -> None:
+    """Simulate a crash: keep only the earliest snapshot in ``d``."""
+    steps = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+    assert len(steps) >= 2, steps  # cadence produced mid-solve snapshots
+    for s in steps[1:]:
+        shutil.rmtree(os.path.join(d, s))
+    with open(os.path.join(d, "LATEST"), "w") as f:
+        f.write(str(int(steps[0].split("_")[1])))
+
+
+def _wire_configs():
+    base = DCFConfig.tuned(3, outer_iters=20)
+    return {
+        "dense": base,
+        "compress_ef": dataclasses.replace(
+            base, consensus_compress=CompressConfig(topk_frac=0.5)),
+        "compress_delay": dataclasses.replace(
+            base, consensus_compress=CompressConfig(topk_frac=0.5),
+            consensus_delay=1),
+    }
+
+
+@pytest.mark.parametrize("wire", sorted(_wire_configs()))
+def test_sim_checkpoint_resume_bitexact(tmp_path, wire):
+    """Killed-at-round-k resume reproduces the uninterrupted segmented
+    solve bit-for-bit, wire carries (error-feedback residuals, pending
+    stale deltas, guard scalars) included."""
+    cfg = _wire_configs()[wire]
+    p = generate_problem(jax.random.PRNGKey(7), 64, 64, rank=3,
+                         sparsity=0.05)
+    run = rt.RunConfig(mode="scan", checkpoint_every=7)
+    d = str(tmp_path / wire)
+    full = dp.dcf_pca(p.m_obs, cfg, num_clients=4,
+                      key=jax.random.PRNGKey(8), run=run,
+                      checkpoint_dir=d)
+    _kill_after_first_snapshot(d)
+    res = dp.dcf_pca(p.m_obs, cfg, num_clients=4,
+                     key=jax.random.PRNGKey(8), run=run, resume_from=d)
+    for name in ("l", "s", "u", "v"):
+        a, b = getattr(full, name), getattr(res, name)
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes(), name
+    np.testing.assert_array_equal(np.asarray(full.stats.objective),
+                                  np.asarray(res.stats.objective))
+    np.testing.assert_array_equal(np.asarray(full.stats.residual),
+                                  np.asarray(res.stats.residual))
+
+
+def test_sim_checkpoint_resume_masked_warm(tmp_path):
+    """The masked + warm-started carry round-trips bit-exactly too."""
+    p = generate_problem(jax.random.PRNGKey(10), 64, 64, rank=3,
+                         sparsity=0.05)
+    rng = np.random.default_rng(1)
+    mask = (rng.random((64, 64)) < 0.85).astype(np.float32)
+    cfg = DCFConfig.tuned(3, outer_iters=18)
+    pre = dp.dcf_pca(p.m_obs, dataclasses.replace(cfg, outer_iters=5),
+                     num_clients=4, mask=mask)
+    warm = (pre.u, pre.v)
+    run = rt.RunConfig(mode="scan", checkpoint_every=6)
+    d = str(tmp_path / "mw")
+    full = dp.dcf_pca(p.m_obs, cfg, num_clients=4, warm=warm, mask=mask,
+                      run=run, checkpoint_dir=d)
+    _kill_after_first_snapshot(d)
+    res = dp.dcf_pca(p.m_obs, cfg, num_clients=4, warm=warm, mask=mask,
+                     run=run, resume_from=d)
+    for name in ("l", "s", "u", "v"):
+        a, b = getattr(full, name), getattr(res, name)
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes(), name
+
+
+def test_checkpoint_rejects_changed_mesh(tmp_path):
+    """A mid-solve carry is topology-bound: restoring a snapshot written
+    on mesh (8,) onto (4, 2) must fail with the clear mesh error."""
+    tree = {"u": jnp.ones((8, 3)), "t": jnp.asarray(2, jnp.int32)}
+    ckpt.save(str(tmp_path), 5, tree, mesh_shape=(8,))
+    restored, step = ckpt.restore(str(tmp_path), tree, expect_mesh=(8,))
+    assert step == 5
+    with pytest.raises(ValueError, match="mesh"):
+        ckpt.restore(str(tmp_path), tree, expect_mesh=(4, 2))
+
+
+def test_resume_beyond_budget_rejected(tmp_path):
+    p = generate_problem(jax.random.PRNGKey(12), 48, 48, rank=2,
+                         sparsity=0.05)
+    cfg = DCFConfig.tuned(2, outer_iters=20)
+    run = rt.RunConfig(mode="scan", checkpoint_every=6)
+    d = str(tmp_path / "b")
+    dp.dcf_pca(p.m_obs, cfg, num_clients=4, run=run, checkpoint_dir=d)
+    small = dataclasses.replace(cfg, outer_iters=4)
+    with pytest.raises(ValueError, match="exceeds"):
+        dp.dcf_pca(p.m_obs, small, num_clients=4, run=run, resume_from=d)
+
+
+# ---------------------------------------------------------------------------
+# Serving quarantine: one poisoned tenant never takes down the lane
+# ---------------------------------------------------------------------------
+M_SRV, N_SRV, RANK_SRV = 24, 16, 3
+CFG_SRV = DCFConfig.tuned(rank=RANK_SRV)
+
+
+def _plane(seed, poison=False):
+    rng = np.random.default_rng(seed)
+    low = rng.standard_normal((M_SRV, RANK_SRV)) @ \
+        rng.standard_normal((RANK_SRV, N_SRV))
+    out = (low + (rng.random((M_SRV, N_SRV)) < 0.05) * 3.0)
+    out = out.astype(np.float32)
+    if poison:
+        out[3, 5] = np.nan
+    return out
+
+
+def _drain(svc, slots):
+    pending = set(slots)
+    resps = {}
+    for _ in range(64):
+        if not pending:
+            break
+        svc.tick()
+        for s in list(pending):
+            r = svc.poll(s)
+            if r is not None:
+                resps[s] = r
+                pending.remove(s)
+    assert not pending
+    return resps
+
+
+@pytest.mark.sanitizer_incompatible("poisons a tenant plane with NaN")
+def test_service_quarantines_diverged_slot():
+    """The poisoned slot is flagged diverged and freed; its lam-cache
+    entry is evicted; the co-resident tenant's answer is byte-identical
+    to a solo run."""
+    scfg = RPCAServiceConfig(slots=4, rounds_per_tick=8, max_rounds=96)
+    key = jax.random.PRNGKey(21)
+
+    solo = RPCAService(M_SRV, N_SRV, CFG_SRV, scfg, key=key)
+    s = solo.try_submit(_plane(0))
+    want = _drain(solo, [s])[s]
+
+    svc = RPCAService(M_SRV, N_SRV, CFG_SRV, scfg, key=key)
+    good = svc.try_submit(_plane(0))
+    bad = svc.try_submit(_plane(1, poison=True))
+    fp_bad = svc._slot_lam_fp[bad]
+    resps = _drain(svc, [good, bad])
+
+    assert resps[bad].diverged and not resps[bad].converged
+    assert fp_bad not in svc._lam_cache  # poisoned calibration evicted
+    assert not resps[good].diverged
+    for name in ("l", "s", "u", "v"):
+        a = np.asarray(getattr(resps[good], name))
+        b = np.asarray(getattr(want, name))
+        assert a.tobytes() == b.tobytes(), name
+    # the slot is releasable and reusable after the quarantine
+    svc.release(bad)
+    again = svc.try_submit(_plane(2))
+    r2 = _drain(svc, [again])[again]
+    assert not r2.diverged and np.isfinite(np.asarray(r2.l)).all()
+
+
+@pytest.mark.sanitizer_incompatible("poisons a tenant plane with NaN")
+def test_gateway_maps_divergence_to_typed_error():
+    """A poisoned gateway tenant surfaces as SolverDiverged on its own
+    ticket while co-residents complete normally."""
+    gcfg = GatewayConfig(slots=4, rounds_per_tick=8, max_rounds=96)
+
+    async def go():
+        async with RPCAGateway(M_SRV, N_SRV, CFG_SRV, gcfg) as gw:
+            t_good = await gw.submit(_plane(0))
+            t_bad = await gw.submit(_plane(1, poison=True))
+            resp = await t_good
+            with pytest.raises(SolverDiverged, match="rounds"):
+                await t_bad
+            assert np.isfinite(np.asarray(resp.l)).all()
+            assert gw.metrics()["diverged"] == 1
+
+    asyncio.run(go())

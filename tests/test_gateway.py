@@ -401,3 +401,21 @@ def test_service_release_decrements_lane_occupancy():
         svc.release(s_cf)  # double release
     with pytest.raises(ValueError, match="not occupied"):
         svc.release(99)
+
+
+def test_outcome_counter_vocabulary():
+    """OutcomeCounter is a closed vocabulary: typo'd outcomes crash at
+    the increment site, and completed = ok + diverged (shed never ran)."""
+    from repro.serving.metrics import OutcomeCounter
+
+    c = OutcomeCounter()
+    assert c.summary() == {"completed": 0, "diverged": 0, "shed": 0}
+    c.add("ok")
+    c.add("ok")
+    c.add("diverged")
+    c.add("shed")
+    assert c["ok"] == 2 and c["diverged"] == 1 and c["shed"] == 1
+    assert c.completed == 3
+    assert c.summary() == {"completed": 3, "diverged": 1, "shed": 1}
+    with pytest.raises(ValueError, match="unknown outcome"):
+        c.add("exploded")

@@ -276,3 +276,84 @@ def test_sharded_engine_compressed_and_stale_wire():
         print("OK", e_d, e_c, e_s)
     """)
     assert "OK" in out
+
+
+@pytest.mark.sanitizer_incompatible("injects NaN payloads by design")
+def test_sharded_engine_byzantine_robust_consensus():
+    """Fault injection at the sharded consensus boundary (DESIGN.md
+    Sec. 17): 2-of-8 Byzantine shards (one NaN, one 64x-corrupt) are
+    quarantined by coordinate_median to <= 3x the fault-free error."""
+    out = run_py("""
+        import dataclasses
+        import numpy as np
+        import jax
+        from repro.core import *
+        from repro.core.factorized import DCFConfig
+        from repro.distributed.faults import CORRUPT, FaultPlan
+        key = jax.random.PRNGKey(13)
+        p = generate_problem(key, 128, 128, rank=5, sparsity=0.05)
+        cfg = DCFConfig.tuned(5, outer_iters=60)
+        mesh = compat_mesh((8,), ("data",))
+        base = dcf_pca_sharded(p.m_obs, cfg, mesh)
+        e0 = float(relative_error(base.l, base.s, p.l0, p.s0))
+        codes = FaultPlan.byzantine(60, 8, (1,), kind="nan").codes.copy()
+        codes[:, 5] = CORRUPT
+        plan = FaultPlan(codes)
+        robust = dataclasses.replace(cfg, aggregator="coordinate_median")
+        r = dcf_pca_sharded(p.m_obs, robust, mesh, faults=plan)
+        e1 = float(relative_error(r.l, r.s, p.l0, p.s0))
+        assert np.isfinite(e1) and e1 <= 3.0 * max(e0, 1e-6), (e0, e1)
+        print("OK", e0, e1)
+    """)
+    assert "OK" in out
+
+
+def test_sharded_engine_checkpoint_resume_bitexact():
+    """Segmented checkpointing on the mesh: the snapshotting solve, the
+    plain solve, and a killed-then-resumed solve all produce identical
+    bytes -- including the per-client error-feedback wire carry -- and a
+    carry written on mesh (8,) refuses to restore onto (4, 2)."""
+    out = run_py("""
+        import os, shutil, tempfile
+        import numpy as np
+        import jax
+        from repro.core import *
+        from repro.core import runtime as rt
+        from repro.core.factorized import DCFConfig
+        from repro.distributed.grad_compress import CompressConfig
+        key = jax.random.PRNGKey(17)
+        p = generate_problem(key, 128, 128, rank=5, sparsity=0.05)
+        cfg = DCFConfig.tuned(
+            5, outer_iters=24,
+            consensus_compress=CompressConfig(topk_frac=0.5))
+        mesh = compat_mesh((8,), ("data",))
+        run = rt.RunConfig(mode="scan", checkpoint_every=9)
+        plain = dcf_pca_sharded(p.m_obs, cfg, mesh)
+        d = tempfile.mkdtemp()
+        full = dcf_pca_sharded(p.m_obs, cfg, mesh, run=run,
+                               checkpoint_dir=d)
+        assert np.asarray(full.l).tobytes() == np.asarray(plain.l).tobytes()
+        # kill at the first snapshot: drop the later ones, resume
+        steps = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+        assert len(steps) >= 2, steps
+        for s in steps[1:]:
+            shutil.rmtree(os.path.join(d, s))
+        open(os.path.join(d, "LATEST"), "w").write(
+            str(int(steps[0].split("_")[1])))
+        res = dcf_pca_sharded(p.m_obs, cfg, mesh, run=run, resume_from=d)
+        for name in ("l", "s", "u", "v"):
+            a = np.asarray(getattr(full, name))
+            b = np.asarray(getattr(res, name))
+            assert a.tobytes() == b.tobytes(), name
+        np.testing.assert_array_equal(np.asarray(full.stats.residual),
+                                      np.asarray(res.stats.residual))
+        mesh2 = compat_mesh((4, 2), ("data", "model"))
+        try:
+            dcf_pca_sharded(p.m_obs, cfg, mesh2, data_axes=("data",),
+                            model_axis="model", run=run, resume_from=d)
+            raise SystemExit("changed-mesh resume was not rejected")
+        except ValueError as e:
+            assert "mesh" in str(e), e
+        print("OK")
+    """)
+    assert "OK" in out

@@ -408,3 +408,164 @@ mesh = make_compat_mesh((2,), ("data",))
     # dense-parity bound is pinned at a converged budget by
     # test_compressed_recovery_parity
     assert float(mp_cerr) < 0.05
+
+
+# ---------------------------------------------------------------------------
+# connection fault tolerance (unit, monkeypatched)
+# ---------------------------------------------------------------------------
+def test_bootstrap_retries_transient_connect_failures(monkeypatch):
+    """A worker racing a still-binding coordinator retries with backoff
+    instead of dying on the first refused dial; a live runtime ("only be
+    called once") is never retried."""
+    calls, sleeps = [], []
+
+    def flaky_init(**kw):
+        calls.append(kw)
+        if len(calls) < 3:
+            raise RuntimeError("failed to connect: DEADLINE_EXCEEDED")
+
+    monkeypatch.setattr(jax.distributed, "initialize", flaky_init)
+    monkeypatch.setattr(jax.distributed, "shutdown", lambda: None)
+    monkeypatch.setattr(mh.time, "sleep", sleeps.append)
+    mh.bootstrap("127.0.0.1:1", 2, 0, backoff_s=0.05)
+    assert len(calls) == 3
+    assert sleeps == [0.05, 0.1]  # exponential
+    assert calls[0]["initialization_timeout"] == 120  # int, not float
+
+    calls.clear()
+
+    def live_init(**kw):
+        calls.append(kw)
+        raise RuntimeError("distributed.initialize should only be "
+                           "called once")
+
+    monkeypatch.setattr(jax.distributed, "initialize", live_init)
+    with pytest.raises(RuntimeError, match="only be called once"):
+        mh.bootstrap("127.0.0.1:1", 2, 0, backoff_s=0.05)
+    assert len(calls) == 1  # non-retryable
+
+    calls.clear()
+
+    def always_down(**kw):
+        calls.append(kw)
+        raise RuntimeError("failed to connect: DEADLINE_EXCEEDED")
+
+    monkeypatch.setattr(jax.distributed, "initialize", always_down)
+    with pytest.raises(RuntimeError, match="DEADLINE"):
+        mh.bootstrap("127.0.0.1:1", 2, 0, connect_attempts=2,
+                     backoff_s=0.05)
+    assert len(calls) == 2  # bounded
+
+
+def test_launch_workers_retries_coordinator_bind_race(monkeypatch):
+    """free_port() probes-then-closes, so another process can win the
+    port: a bind-marker failure relaunches on a fresh port; unrelated
+    failures and exhausted retries surface unchanged."""
+    attempts = []
+
+    def racy_launch(code, n, d, timeout, env, kills):
+        attempts.append(kills)
+        if len(attempts) == 1:
+            raise RuntimeError("worker 0 exited: Failed to bind "
+                               "127.0.0.1:12345")
+        return ["OK"] * n
+
+    monkeypatch.setattr(mh, "_launch_once", racy_launch)
+    monkeypatch.setattr(mh.time, "sleep", lambda s: None)
+    assert mh.launch_workers("pass", num_processes=2) == ["OK", "OK"]
+    assert len(attempts) == 2
+
+    attempts.clear()
+
+    def always_racy(code, n, d, timeout, env, kills):
+        attempts.append(kills)
+        raise RuntimeError("Failed to bind 127.0.0.1:12345")
+
+    monkeypatch.setattr(mh, "_launch_once", always_racy)
+    with pytest.raises(RuntimeError, match="bind"):
+        mh.launch_workers("pass", num_processes=2, bind_retries=2)
+    assert len(attempts) == 3  # first try + 2 retries
+
+    attempts.clear()
+
+    def crashy(code, n, d, timeout, env, kills):
+        attempts.append(kills)
+        raise RuntimeError("worker 1 exited with 1: boom")
+
+    monkeypatch.setattr(mh, "_launch_once", crashy)
+    with pytest.raises(RuntimeError, match="boom"):
+        mh.launch_workers("pass", num_processes=2)
+    assert len(attempts) == 1  # not a bind race: no port retry
+
+
+# ---------------------------------------------------------------------------
+# the kill -> respawn -> resume drill (DESIGN.md Sec. 17)
+# ---------------------------------------------------------------------------
+_CHAOS_SNIPPET = """
+import os, hashlib
+from repro.core import runtime as rt
+mesh = mh.multihost_mesh()
+pb = prob.generate_problem(jax.random.PRNGKey(0), 48, 64, rank=3,
+                           sparsity=0.05)
+cfg = fz.DCFConfig.tuned(4, outer_iters=240)
+ckdir = os.environ["RPCA_TEST_CKPT"]
+resume = ckdir if os.path.exists(os.path.join(ckdir, "LATEST")) else None
+res = rpca.solve(
+    rpca.RPCASpec(pb.m_obs, mesh=mesh, key=jax.random.PRNGKey(1),
+                  checkpoint_dir=ckdir, resume_from=resume),
+    method="dcf_sharded", cfg=cfg,
+    run=rt.RunConfig(mode="scan", checkpoint_every=20))
+u_hash = hashlib.sha256(np.ascontiguousarray(np.asarray(res.u))
+                        .tobytes()).hexdigest()
+print("MODE", "resumed" if resume else "cold")
+print("HASH", u_hash)
+"""
+
+
+def test_two_process_kill_respawn_resume_bitexact(tmp_path):
+    """Both workers are SIGKILLed mid-solve; launch_workers respawns the
+    cohort, the workers resume from the latest durable snapshot, and the
+    finished factors are bit-identical to an uninterrupted solve of the
+    same problem (single-process, 2-device mesh reference)."""
+    import os
+    import subprocess
+    import sys
+
+    outs = mh.launch_workers(
+        _WORKER_COMMON + _CHAOS_SNIPPET,
+        num_processes=2, timeout=600,
+        extra_env={"RPCA_TEST_CKPT": str(tmp_path / "ck")},
+        kill_after={0: 10.0, 1: 10.0}, max_restarts=1,
+    )
+    h0 = _parse(outs[0], "HASH")[0]
+    h1 = _parse(outs[1], "HASH")[0]
+    assert h0 == h1  # both processes converged to one consensus U
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env.pop(mh.ENV_COORDINATOR, None)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    env["RPCA_TEST_CKPT"] = str(tmp_path / "ref")
+    ref = subprocess.run(
+        [sys.executable, "-c", _WORKER_COMMON + """
+from repro.launch.mesh import make_compat_mesh
+import os, hashlib
+pb = prob.generate_problem(jax.random.PRNGKey(0), 48, 64, rank=3,
+                           sparsity=0.05)
+cfg = fz.DCFConfig.tuned(4, outer_iters=240)
+mesh = make_compat_mesh((2,), ("data",))
+res = rpca.solve(
+    rpca.RPCASpec(pb.m_obs, mesh=mesh, key=jax.random.PRNGKey(1)),
+    method="dcf_sharded", cfg=cfg)
+u_hash = hashlib.sha256(np.ascontiguousarray(np.asarray(res.u))
+                        .tobytes()).hexdigest()
+print("HASH", u_hash)
+"""],
+        capture_output=True, text=True, timeout=900, env=env,
+    )
+    assert ref.returncode == 0, f"{ref.stderr}\n{ref.stdout}"
+    assert h0 == _parse(ref.stdout, "HASH")[0], (
+        "killed + respawned + resumed solve diverged from the "
+        "uninterrupted reference")

@@ -6,8 +6,10 @@ from tools.analysis.rules.r002_donation import RULE as R002
 from tools.analysis.rules.r003_lockstep import RULE as R003
 from tools.analysis.rules.r004_vmem import RULE as R004
 from tools.analysis.rules.r005_registry import RULE as R005
+from tools.analysis.rules.r006_consensus import RULE as R006
 
-ALL_RULES = (R001, R002, R003, R004, R005)
+ALL_RULES = (R001, R002, R003, R004, R005, R006)
 RULES_BY_ID = {r.id: r for r in ALL_RULES}
 
-__all__ = ["ALL_RULES", "RULES_BY_ID", "R001", "R002", "R003", "R004", "R005"]
+__all__ = ["ALL_RULES", "RULES_BY_ID", "R001", "R002", "R003", "R004",
+           "R005", "R006"]

@@ -127,6 +127,8 @@ _CAP_DEFAULTS = {
     "supports_service": False,
     "supports_lowp": False,
     "supports_multiprocess": False,
+    "supports_robust_agg": False,
+    "supports_checkpoint": False,
 }
 
 
